@@ -1,0 +1,44 @@
+"""Shared benchmark utilities.
+
+Default scales are chosen to finish on a single CPU core in seconds-to-
+minutes; ``--paper-scale`` reproduces the paper's exact setting (20x20
+grid, beta = 1.0 / 4.6, 10^6 iterations) at correspondingly higher runtime.
+Every benchmark prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (make_ising_graph, make_potts_graph, init_chains,
+                        init_state, run_marginal_experiment)
+
+
+def timed_steps(step_fn, state, n_iters: int, n_chains: int, D: int,
+                n_snapshots: int = 8):
+    """Run + time a sampler; returns (us_per_update, error trajectory)."""
+    tr = run_marginal_experiment(step_fn, state, n_iters=64,
+                                 n_snapshots=1, D=D)          # compile
+    jax.block_until_ready(tr.error)
+    t0 = time.perf_counter()
+    tr = run_marginal_experiment(step_fn, state, n_iters=n_iters,
+                                 n_snapshots=n_snapshots, D=D)
+    jax.block_until_ready(tr.error)
+    dt = time.perf_counter() - t0
+    us = dt * 1e6 / (n_iters * n_chains)
+    return us, np.asarray(tr.error), np.asarray(tr.iters)
+
+
+def row(name: str, us: float, derived: str):
+    print(f"{name},{us:.3f},{derived}", flush=True)
+
+
+def bench_graphs(paper_scale: bool):
+    """(ising, potts) graphs at benchmark or paper scale."""
+    if paper_scale:
+        return (make_ising_graph(20, 1.0), make_potts_graph(20, 4.6, 10))
+    # scaled: same construction, smaller lattice/beta so Psi^2-sized
+    # minibatches stay CPU-feasible
+    return (make_ising_graph(8, 0.5), make_potts_graph(6, 2.0, 6))

@@ -1,0 +1,40 @@
+"""Pallas bucket-energy kernel micro-benchmark: jnp oracle vs kernel
+(interpret mode on CPU — wall time is NOT TPU-indicative; the derived
+column reports achieved arithmetic throughput of the jnp path and the
+kernel's block configuration for the roofline discussion)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import bucket_energy
+from .common import row
+
+
+def _time(fn, *args, reps=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(paper_scale: bool = False):
+    rng = np.random.default_rng(0)
+    for (C, K, D) in [(64, 1024, 10), (256, 4096, 10), (64, 8192, 2)]:
+        w = jnp.asarray(rng.normal(size=(C, K)).astype(np.float32))
+        v = jnp.asarray(rng.integers(0, D, (C, K)).astype(np.int32))
+        jnp_fn = jax.jit(lambda w, v: bucket_energy(w, v, D, impl="jnp"))
+        t = _time(jnp_fn, w, v)
+        flops = 2.0 * C * K * D
+        row(f"kernel/jnp_C{C}_K{K}_D{D}", t * 1e6,
+            f"gflops={flops / t / 1e9:.2f}")
+        pl_fn = jax.jit(lambda w, v: bucket_energy(w, v, D, impl="pallas"))
+        t2 = _time(pl_fn, w, v, reps=3)
+        row(f"kernel/pallas_interp_C{C}_K{K}_D{D}", t2 * 1e6,
+            "interpret-mode (correctness path; perf target is TPU MXU)")

@@ -1,0 +1,43 @@
+"""Roofline reporter: reads results/dryrun/*.json and prints the per-cell
+three-term roofline table (also consumed by EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import row
+
+HEADERS = ("arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+           "t_collective_s", "bottleneck", "model_flops_ratio")
+
+
+def load_records(out_dir: str = "results/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*", "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(paper_scale: bool = False, out_dir: str = "results/dryrun"):
+    recs = load_records(out_dir)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in ok:
+        rl = r.get("roofline", {})
+        dom = rl.get("bottleneck", "-")
+        tmax = max(rl.get("t_compute_s", 0), rl.get("t_memory_s", 0),
+                   rl.get("t_collective_s", 0))
+        frac = (rl.get("t_compute_s", 0.0) / tmax) if tmax else 0.0
+        mfr = r.get("model_flops_ratio")
+        row(f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}",
+            tmax * 1e6,
+            f"bneck={dom};compute_frac={frac:.3f};"
+            f"model_flops_ratio={mfr if mfr is None else round(mfr, 3)};"
+            f"tc={rl.get('t_compute_s', 0):.3e};"
+            f"tm={rl.get('t_memory_s', 0):.3e};"
+            f"tx={rl.get('t_collective_s', 0):.3e}")
+    n_err = sum(1 for r in recs if r.get("status") == "error")
+    n_skip = sum(1 for r in recs if r.get("status") == "skipped")
+    row("roofline/summary", 0.0,
+        f"cells_ok={len(ok)};errors={n_err};skipped={n_skip}")

@@ -1,0 +1,25 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  ``--paper-scale`` switches the
+Gibbs benchmarks to the paper's exact 20x20 / 10^6-iteration setting."""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,fig1,fig2,kernel,roofline")
+    args = ap.parse_args()
+    from . import table1_cost, fig1_min_gibbs, fig2_variants, kernel_bench, \
+        roofline
+    mods = {"table1": table1_cost, "fig1": fig1_min_gibbs,
+            "fig2": fig2_variants, "kernel": kernel_bench,
+            "roofline": roofline}
+    only = args.only.split(",") if args.only else list(mods)
+    print("name,us_per_call,derived")
+    for key in only:
+        mods[key].run(paper_scale=args.paper_scale)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,3 @@
+"""repro — Minibatch Gibbs Sampling on Large Graphical Models (ICML 2018):
+production-grade multi-pod JAX framework.  See README.md / DESIGN.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,22 @@
+"""pixtral-12b [vlm] — 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072; pixtral-ViT frontend is a STUB: input_specs() provides
+precomputed patch embeddings prepended to the text tokens.
+[hf:mistralai/Pixtral-12B-2409; unverified]
+Full attention -> long_500k skipped."""
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b", family="vlm",
+    num_layers=40, d_model=5120, num_heads=32, num_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=131072,
+    rope_theta=1e9,
+    num_image_tokens=256,                 # stub patch-embedding count
+    skip_shapes=("long_500k",),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="pixtral-smoke", num_layers=2, d_model=128, num_heads=4,
+    num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+    num_image_tokens=8)

@@ -1,0 +1,55 @@
+"""--arch registry: full + smoke configs for every assigned architecture,
+plus the paper's own Gibbs-engine configurations."""
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import ModelConfig, ShapeSpec, SHAPES
+from . import (mixtral_8x7b, deepseek_v2_lite_16b, falcon_mamba_7b,
+               pixtral_12b, gemma3_12b, tinyllama_1_1b, h2o_danube3_4b,
+               starcoder2_7b, hymba_1_5b, whisper_tiny)
+
+_MODULES = {
+    "mixtral-8x7b": mixtral_8x7b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "falcon-mamba-7b": falcon_mamba_7b,
+    "pixtral-12b": pixtral_12b,
+    "gemma3-12b": gemma3_12b,
+    "tinyllama-1.1b": tinyllama_1_1b,
+    "h2o-danube-3-4b": h2o_danube3_4b,
+    "starcoder2-7b": starcoder2_7b,
+    "hymba-1.5b": hymba_1_5b,
+    "whisper-tiny": whisper_tiny,
+}
+
+ARCHS: Dict[str, ModelConfig] = {k: m.CONFIG for k, m in _MODULES.items()}
+SMOKES: Dict[str, ModelConfig] = {k: m.SMOKE for k, m in _MODULES.items()}
+
+# The paper's own workload configurations (Gibbs engine) — selectable through
+# the same launcher (`--arch ising-20x20` etc.); see repro.runtime.dist_gibbs.
+GIBBS_CONFIGS = {
+    "ising-20x20":  dict(kind="ising", grid=20, beta=1.0, D=2),
+    "potts-20x20":  dict(kind="potts", grid=20, beta=4.6, D=10),
+    "ising-128x128": dict(kind="ising", grid=128, beta=1.0, D=2),
+    "potts-64x64":  dict(kind="potts", grid=64, beta=4.6, D=10),
+}
+
+
+def get_arch(name: str, smoke: bool = False) -> ModelConfig:
+    table = SMOKES if smoke else ARCHS
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(table)}")
+    return table[name]
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells — 40 total; skipped ones carry the
+    skip reason from the config."""
+    out = []
+    for aname, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            skipped = sname in cfg.skip_shapes
+            if skipped and not include_skipped:
+                continue
+            out.append((aname, sname, skipped))
+    return out

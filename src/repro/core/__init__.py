@@ -1,0 +1,24 @@
+"""Core library: the paper's minibatch Gibbs algorithms.
+
+Public API:
+  Factor graphs:  MatchGraph, TabularPairwiseGraph, make_ising_graph,
+                  make_potts_graph
+  Samplers:       make_gibbs_step, make_min_gibbs_step, make_local_gibbs_step,
+                  make_mgpmh_step, make_double_min_step, ChainState, init_state
+  Estimators:     lemma2_lambda, recommended_capacity, min_gibbs_estimate
+  Runner:         init_chains, run_marginal_experiment
+  Exact theory:   spectral (transition matrices, gaps, theorem checks)
+"""
+from .factor_graph import (MatchGraph, TabularPairwiseGraph,
+                           gaussian_kernel_interactions, make_ising_graph,
+                           make_potts_graph, build_alias_table, alias_draw)
+from .estimators import (lemma2_lambda, recommended_capacity,
+                         capacity_overflow_prob, draw_global_minibatch,
+                         draw_local_minibatch, min_gibbs_estimate)
+from .samplers import (ChainState, init_state, make_gibbs_step,
+                       make_min_gibbs_step, make_local_gibbs_step,
+                       make_mgpmh_step, make_double_min_step,
+                       init_min_gibbs_cache, init_double_min_cache)
+from .chains import (MarginalTrace, init_chains, run_marginal_experiment,
+                     marginal_error)
+from . import spectral

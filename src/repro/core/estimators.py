@@ -1,0 +1,119 @@
+"""Minibatch energy estimators (paper Section 2, eq. 2 and Lemma 2).
+
+TPU adaptation: the paper's dynamically-sized Poisson minibatch
+``S = {phi : s_phi > 0}`` is realized with the paper's own footnote-7
+decomposition — ``B ~ Poisson(Lambda)`` total count, then ``B`` categorical
+draws from ``p_phi = M_phi / Psi`` (an O(1) alias-table lookup each).  On a
+fixed-shape accelerator we draw a static ``capacity`` of factor ids and mask
+draws ``k >= B``; the clamp probability ``P(B > capacity)`` is computable in
+closed form (`capacity_overflow_prob`) and is chosen < 1e-8 by
+`recommended_capacity`.
+
+For the paper's weighted-match models every per-draw contribution collapses
+to a *constant* times a match indicator:
+
+  MIN-Gibbs (eq. 2):  s_phi * log(1 + Psi/(lam*M_phi) * phi(x))
+                      = log1p(Psi/lam) * delta(x_a, x_b)        per draw,
+  MGPMH:              s_phi * L/(lam*M_phi) * phi(x_u)
+                      = (L/lam) * delta(u, x_j)                 per draw,
+
+because ``phi(x)/M_phi = delta(...) in {0,1}``.  The estimator is therefore
+exactly a (weighted) bucket count — the compute pattern the Pallas kernel
+``kernels/minibatch_energy.py`` implements.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .factor_graph import MatchGraph, alias_draw
+
+__all__ = [
+    "lemma2_lambda",
+    "recommended_capacity",
+    "capacity_overflow_prob",
+    "draw_global_minibatch",
+    "min_gibbs_estimate",
+    "draw_local_minibatch",
+]
+
+
+def lemma2_lambda(psi: float, delta_tol: float, fail_prob: float) -> float:
+    """Lemma 2 batch-size recipe: the expected batch size lambda such that
+    ``P(|eps_x - zeta(x)| >= delta_tol) <= fail_prob``."""
+    return max(8.0 * psi**2 / delta_tol**2 * math.log(2.0 / fail_prob),
+               2.0 * psi**2 / delta_tol)
+
+
+def recommended_capacity(lam: float, tail: float = 1e-8) -> int:
+    """Static draw-buffer size K with ``P(Poisson(lam) > K) < tail``.
+
+    Uses the Chernoff-ish normal tail K = lam + c*sqrt(lam) + c^2, c = 6,
+    then verifies/chooses with the exact CDF.
+    """
+    k = int(math.ceil(lam + 6.0 * math.sqrt(max(lam, 1.0)) + 36.0))
+    while float(capacity_overflow_prob(lam, k)) >= tail:
+        k = int(math.ceil(k * 1.25)) + 8
+    return k
+
+
+def capacity_overflow_prob(lam: float, capacity: int) -> jax.Array:
+    """Exact P(Poisson(lam) > capacity) = P(Gamma(capacity+1) < lam)."""
+    return jax.scipy.special.gammainc(jnp.float64(capacity + 1)
+                                      if jax.config.jax_enable_x64
+                                      else jnp.float32(capacity + 1),
+                                      jnp.asarray(lam, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Global minibatch (MIN-Gibbs / DoubleMIN second batch)
+# ---------------------------------------------------------------------------
+
+def draw_global_minibatch(key: jax.Array, graph: MatchGraph, lam: float,
+                          capacity: int,
+                          shape: Tuple[int, ...] = ()) -> Tuple[jax.Array, jax.Array]:
+    """Draw ``shape + (capacity,)`` factor ids from p_phi = M_phi/Psi plus the
+    Poisson total ``B`` of shape ``shape`` (draws k >= B are to be masked)."""
+    kb, kd = jax.random.split(key)
+    B = jax.random.poisson(kb, lam, shape, dtype=jnp.int32)
+    idx = alias_draw(kd, graph.pair_prob, graph.pair_alias, shape + (capacity,))
+    return idx, jnp.minimum(B, capacity)
+
+
+def min_gibbs_estimate(graph: MatchGraph, x: jax.Array, idx: jax.Array,
+                       B: jax.Array, lam: float) -> jax.Array:
+    """Bias-adjusted estimator of eq. (2) for match graphs.
+
+    eps_x = sum_{phi in S} s_phi log(1 + Psi/(lam M_phi) phi(x))
+          = log1p(Psi/lam) * #{draws k < B : x[a_k] == x[b_k]}.
+
+    ``x``: (n,), ``idx``: (K,) factor ids, ``B``: scalar count.
+    Satisfies E[exp(eps_x)] = exp(zeta(x)) exactly (Lemma 1).
+    """
+    a = graph.pair_a[idx]
+    b = graph.pair_b[idx]
+    mask = jnp.arange(idx.shape[-1]) < B
+    matches = jnp.sum((x[a] == x[b]) & mask)
+    return jnp.log1p(graph.psi / lam) * matches.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Local minibatch over A[i] (MGPMH / DoubleMIN first batch)
+# ---------------------------------------------------------------------------
+
+def draw_local_minibatch(key: jax.Array, graph: MatchGraph, i: jax.Array,
+                         lam: float, capacity: int
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Draw the MGPMH minibatch over A[i]: ``s_phi ~ Poisson(lam M_phi / L)``
+    for the factors {i,j}, realized as ``B ~ Poisson(lam * L_i / L)`` total
+    draws of neighbor ids j ~ W_ij / L_i (per-row alias table).
+
+    Returns (j_ids (capacity,), B scalar)."""
+    kb, kd = jax.random.split(key)
+    lam_i = lam * graph.row_sum[i] / graph.L
+    B = jax.random.poisson(kb, lam_i, (), dtype=jnp.int32)
+    j = alias_draw(kd, graph.row_prob[i], graph.row_alias[i], (capacity,))
+    return j, jnp.minimum(B, capacity)

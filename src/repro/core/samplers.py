@@ -1,0 +1,220 @@
+"""The paper's five sampling algorithms as pure-JAX single-chain steps.
+
+Each ``make_*_step(graph, ...)`` returns a jit-able ``step(state) -> state``
+operating on one chain; multi-chain execution vmaps the step (see
+``chains.py``).  The batched, shard_map-distributed, Pallas-accelerated
+production path lives in ``repro.runtime.dist_gibbs`` and is tested for
+distributional agreement against these reference implementations.
+
+Algorithms (paper numbering):
+  1  vanilla Gibbs                          O(D*Delta)   exact
+  2  MIN-Gibbs (global bias-adjusted MB)    O(D*Psi^2)   unbiased, Thm 1/2
+  3  Local Minibatch Gibbs                  O(D*B)       empirical only
+  4  MGPMH (MB proposal + exact MH)         O(D*L^2+Delta) pi-stationary, Thm 3/4
+  5  DoubleMIN-Gibbs (doubly minibatched)   O(D*L^2+Psi^2) Thm 5/6
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .factor_graph import MatchGraph, alias_draw
+from .estimators import (draw_global_minibatch, draw_local_minibatch,
+                         min_gibbs_estimate)
+
+__all__ = [
+    "ChainState",
+    "init_state",
+    "make_gibbs_step",
+    "make_min_gibbs_step",
+    "make_local_gibbs_step",
+    "make_mgpmh_step",
+    "make_double_min_step",
+]
+
+
+class ChainState(NamedTuple):
+    """Augmented chain state.
+
+    ``cache`` is the cached energy estimate: MIN-Gibbs's eps (Alg 2's state
+    lives in Omega x R) or DoubleMIN's xi_x; unused (0) for the other
+    samplers.  ``accepts`` counts MH acceptances (MGPMH / DoubleMIN).
+    """
+    x: jax.Array        # (n,) int32
+    cache: jax.Array    # () float32
+    key: jax.Array      # PRNG key
+    accepts: jax.Array  # () int32
+
+
+def init_state(key: jax.Array, graph: MatchGraph, *,
+               start: str = "constant") -> ChainState:
+    """Paper: "unmixed configuration where each site takes on the same
+    state" (x(i)=1 for all i)."""
+    if start == "constant":
+        x = jnp.zeros((graph.n,), jnp.int32)
+    elif start == "random":
+        key, sub = jax.random.split(key)
+        x = jax.random.randint(sub, (graph.n,), 0, graph.D, dtype=jnp.int32)
+    else:
+        raise ValueError(start)
+    return ChainState(x=x, cache=jnp.float32(0.0), key=key,
+                      accepts=jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — vanilla Gibbs
+# ---------------------------------------------------------------------------
+
+def make_gibbs_step(graph: MatchGraph):
+    def step(state: ChainState) -> ChainState:
+        key, ki, kv = jax.random.split(state.key, 3)
+        i = jax.random.randint(ki, (), 0, graph.n)
+        eps = graph.cond_energies(state.x, i)          # (D,) exact
+        v = jax.random.categorical(kv, eps)            # rho(v) ~ exp(eps_v)
+        return state._replace(x=state.x.at[i].set(v.astype(jnp.int32)),
+                              key=key)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — MIN-Gibbs
+# ---------------------------------------------------------------------------
+
+def make_min_gibbs_step(graph: MatchGraph, lam: float, capacity: int):
+    """Minibatch Gibbs with the bias-adjusted global estimator (eq. 2).
+
+    For every candidate value u != x(i) an *independent* minibatch estimate
+    eps_u ~ mu_{x; x_i<-u} is drawn; eps_{x(i)} is the cached energy from the
+    previous iteration (the augmented-state trick of Alg 2).
+    """
+    def step(state: ChainState) -> ChainState:
+        key, ki, kd, kv = jax.random.split(state.key, 4)
+        i = jax.random.randint(ki, (), 0, graph.n)
+        x = state.x
+
+        # D independent global minibatches, one per candidate value u.
+        idx, B = draw_global_minibatch(kd, graph, lam, capacity,
+                                       shape=(graph.D,))   # (D,K), (D,)
+        a = graph.pair_a[idx]                               # (D, K)
+        b = graph.pair_b[idx]
+        u = jnp.arange(graph.D, dtype=jnp.int32)[:, None]   # (D, 1)
+        xa = jnp.where(a == i, u, x[a])
+        xb = jnp.where(b == i, u, x[b])
+        mask = jnp.arange(capacity)[None, :] < B[:, None]
+        matches = jnp.sum((xa == xb) & mask, axis=1).astype(jnp.float32)
+        eps = jnp.log1p(graph.psi / lam) * matches          # (D,)
+
+        # cached energy for the current value (Alg 2: eps_{x(i)} <- eps).
+        eps = eps.at[x[i]].set(state.cache)
+        v = jax.random.categorical(kv, eps).astype(jnp.int32)
+        return state._replace(x=x.at[i].set(v), cache=eps[v], key=key)
+    return step
+
+
+def init_min_gibbs_cache(key: jax.Array, graph: MatchGraph,
+                         state: ChainState, lam: float,
+                         capacity: int) -> ChainState:
+    """Initialize the augmented-energy cache with one estimator draw."""
+    idx, B = draw_global_minibatch(key, graph, lam, capacity)
+    eps = min_gibbs_estimate(graph, state.x, idx, B, lam)
+    return state._replace(cache=eps)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 — Local Minibatch Gibbs
+# ---------------------------------------------------------------------------
+
+def make_local_gibbs_step(graph: MatchGraph, batch_size: int):
+    """One *shared* uniform minibatch S subset A[i], |S| = B, used for every
+    candidate value u (the cancellation trick).  eps_u = |A[i]|/B * sum_S phi.
+    Sampling is without replacement, matching the paper's uniform-subset
+    statement."""
+    n = graph.n
+
+    def step(state: ChainState) -> ChainState:
+        key, ki, ks, kv = jax.random.split(state.key, 4)
+        i = jax.random.randint(ki, (), 0, n)
+        # B distinct neighbors j != i: draw from {0..n-2} w/o replacement,
+        # then skip over i.
+        j0 = jax.random.choice(ks, n - 1, (batch_size,), replace=False)
+        j = j0 + (j0 >= i)
+        w = graph.W[i, j]                                   # (B,)
+        onehot = jax.nn.one_hot(state.x[j], graph.D, dtype=w.dtype)
+        scale = (n - 1) / batch_size                        # |A[i]| / |S|
+        eps = scale * (w @ onehot)                          # (D,)
+        v = jax.random.categorical(kv, eps).astype(jnp.int32)
+        return state._replace(x=state.x.at[i].set(v), key=key)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 4 — MGPMH
+# ---------------------------------------------------------------------------
+
+def _mgpmh_proposal(graph: MatchGraph, x, i, kd, kv, lam: float,
+                    capacity: int):
+    """Shared proposal machinery of Algorithms 4 and 5.
+
+    Returns (v proposed value, eps (D,) minibatch energies).
+    eps_u = sum_phi s_phi L/(lam M_phi) phi(x_u) = (L/lam) * #{draws: x_j = u}
+    for match graphs.
+    """
+    j, B = draw_local_minibatch(kd, graph, i, lam, capacity)
+    mask = (jnp.arange(capacity) < B).astype(jnp.float32)
+    onehot = jax.nn.one_hot(x[j], graph.D, dtype=jnp.float32)  # (K, D)
+    eps = (graph.L / lam) * (mask @ onehot)                    # (D,)
+    v = jax.random.categorical(kv, eps).astype(jnp.int32)
+    return v, eps
+
+
+def make_mgpmh_step(graph: MatchGraph, lam: float, capacity: int):
+    def step(state: ChainState) -> ChainState:
+        key, ki, kd, kv, ka = jax.random.split(state.key, 5)
+        i = jax.random.randint(ki, (), 0, graph.n)
+        x = state.x
+        v, eps = _mgpmh_proposal(graph, x, i, kd, kv, lam, capacity)
+        # Exact O(Delta) pass: sum_{phi in A[i]} phi(y) = exact[v], phi(x) =
+        # exact[x(i)]  (cond_energies is independent of x(i) itself).
+        exact = graph.cond_energies(x, i)                  # (D,)
+        log_a = (exact[v] - exact[x[i]]) + (eps[x[i]] - eps[v])
+        accept = jnp.log(jax.random.uniform(ka)) < log_a
+        new_x = jnp.where(accept, x.at[i].set(v), x)
+        return state._replace(x=new_x, key=key,
+                              accepts=state.accepts + accept.astype(jnp.int32))
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 5 — DoubleMIN-Gibbs
+# ---------------------------------------------------------------------------
+
+def make_double_min_step(graph: MatchGraph, lam1: float, capacity1: int,
+                         lam2: float, capacity2: int):
+    """MGPMH proposal + second (global, bias-adjusted) minibatch in the
+    acceptance test: a = exp(xi_y - xi_x + eps_{x(i)} - eps_v).  The cached
+    xi_x lives in ``state.cache`` (augmented state, Thm 5)."""
+    def step(state: ChainState) -> ChainState:
+        key, ki, kd, kv, kg, ka = jax.random.split(state.key, 6)
+        i = jax.random.randint(ki, (), 0, graph.n)
+        x = state.x
+        v, eps = _mgpmh_proposal(graph, x, i, kd, kv, lam1, capacity1)
+        y = x.at[i].set(v)
+        idx, B = draw_global_minibatch(kg, graph, lam2, capacity2)
+        xi_y = min_gibbs_estimate(graph, y, idx, B, lam2)
+        log_a = (xi_y - state.cache) + (eps[x[i]] - eps[v])
+        accept = jnp.log(jax.random.uniform(ka)) < log_a
+        new_x = jnp.where(accept, y, x)
+        new_cache = jnp.where(accept, xi_y, state.cache)
+        return state._replace(x=new_x, cache=new_cache, key=key,
+                              accepts=state.accepts + accept.astype(jnp.int32))
+    return step
+
+
+def init_double_min_cache(key: jax.Array, graph: MatchGraph,
+                          state: ChainState, lam2: float,
+                          capacity2: int) -> ChainState:
+    idx, B = draw_global_minibatch(key, graph, lam2, capacity2)
+    xi = min_gibbs_estimate(graph, state.x, idx, B, lam2)
+    return state._replace(cache=xi)

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels (interpret-validated on CPU) + pure-jnp oracles."""
+from .ops import bucket_energy, flash_attention
+from .ref import bucket_energy_ref

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: weighted one-hot bucket-energy accumulation.
+
+Computes ``E[c, u] = sum_k w[c, k] * 1[v[c, k] == u]`` — the compute hot
+spot of every minibatch Gibbs variant in the paper (see ref.py).  On TPU the
+inner product over draws k is realized as a one-hot GEMM so the systolic
+MXU does the bucketing; the one-hot block is built in VMEM from an iota
+compare (never touches HBM).
+
+Tiling:
+  grid = (C/BC, K/BK), K innermost so the (BC, Dp) output block stays
+  resident in VMEM across the whole reduction.  VMEM working set per step:
+  w (BC*BK*4) + v (BC*BK*4) + onehot (BC*BK*Dp*4 transient) + out (BC*Dp*4);
+  ``ops.bucket_energy`` picks BK so this stays ~<= 2-3 MiB.
+
+Alignment: Dp (padded D) is a multiple of 128 (lane width); BK a multiple
+of 128 so the MXU contraction dim is aligned; BC a multiple of 8 (sublanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bucket_energy_pallas"]
+
+
+def _kernel(w_ref, v_ref, out_ref, *, D: int):
+    """One (BC, BK) tile: out += w @ onehot(v)."""
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[...]                                    # (BC, BK) f32
+    v = v_ref[...]                                    # (BC, BK) i32
+    dp = out_ref.shape[-1]
+    # one-hot built in-register from an iota compare; out-of-range v
+    # (padding) matches no bucket.
+    iota = jax.lax.broadcasted_iota(jnp.int32, (v.shape[0], v.shape[1], dp), 2)
+    onehot = (v[:, :, None] == iota).astype(jnp.float32)
+    # batched contraction over k -> MXU dot per chain row.
+    acc = jax.lax.dot_general(
+        w[:, None, :], onehot,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)           # (BC, 1, Dp)
+    out_ref[...] += acc[:, 0, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("D", "bc", "bk", "interpret"))
+def bucket_energy_pallas(w: jax.Array, v: jax.Array, D: int, *,
+                         bc: int = 8, bk: int = 256,
+                         interpret: bool = True) -> jax.Array:
+    """Pallas bucket-energy.  Requires pre-padded inputs:
+    C % bc == 0, K % bk == 0 (use ops.bucket_energy for the padded wrapper).
+    Returns (C, Dp) with Dp = D rounded up to 128; caller slices [:, :D].
+    """
+    C, K = w.shape
+    assert v.shape == (C, K)
+    assert C % bc == 0 and K % bk == 0, (C, K, bc, bk)
+    dp = max(128, ((D + 127) // 128) * 128)
+
+    grid = (C // bc, K // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, D=D),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, bk), lambda ci, ki: (ci, ki)),
+            pl.BlockSpec((bc, bk), lambda ci, ki: (ci, ki)),
+        ],
+        out_specs=pl.BlockSpec((bc, dp), lambda ci, ki: (ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, dp), jnp.float32),
+        interpret=interpret,
+    )(w.astype(jnp.float32), v.astype(jnp.int32))

@@ -1,0 +1,77 @@
+"""Jit'd public wrappers around the Pallas kernels with shape padding and
+implementation dispatch (pallas on TPU / interpret elsewhere / jnp oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .minibatch_energy import bucket_energy_pallas
+from .flash_attention import flash_attention_pallas
+from .ref import bucket_energy_ref
+
+__all__ = ["bucket_energy", "flash_attention"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("D", "impl"))
+def bucket_energy(w: jax.Array, v: jax.Array, D: int,
+                  impl: str = "auto") -> jax.Array:
+    """E[c,u] = sum_k w[c,k] * 1[v[c,k]==u]; see kernels/ref.py.
+
+    impl: 'auto'   — pallas (compiled on TPU, interpret elsewhere),
+          'pallas' — force the kernel (interpret off-TPU),
+          'jnp'    — pure-jnp oracle.
+    Handles arbitrary (C, K): pads C to 8 and K to the block size with
+    zero weights / out-of-range values.
+    """
+    if impl == "jnp":
+        return bucket_energy_ref(w, v, D)
+    C, K = w.shape
+    dp = max(128, _round_up(D, 128))
+    # choose BK so the transient one-hot block stays within ~2 MiB of VMEM
+    bc = 8
+    bk = max(128, min(512, _round_up((2 * 1024 * 1024) // (4 * bc * dp), 128)))
+    Cp, Kp = _round_up(C, bc), _round_up(K, bk)
+    wp = jnp.zeros((Cp, Kp), jnp.float32).at[:C, :K].set(w)
+    vp = jnp.full((Cp, Kp), D, jnp.int32).at[:C, :K].set(v)  # D = no bucket
+    interpret = jax.default_backend() != "tpu"
+    out = bucket_energy_pallas(wp, vp, D, bc=bc, bk=bk, interpret=interpret)
+    return out[:C, :D]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int = 0, causal: bool = True) -> jax.Array:
+    """GQA flash attention via the Pallas kernel.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KVH, hd).  Handles GQA head expansion
+    and padding to the 128-tile grid; interpret mode off-TPU.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    # expand kv heads to H (wrapper-level; a production layout keeps kv
+    # shared per group and indexes inside the kernel)
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, hd)
+    pq = (-Sq) % 128
+    pk = (-Sk) % 128
+    if pq:
+        qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
+    out = flash_attention_pallas(
+        qf, kf, vf, window=window, causal=causal, sk_valid=Sk,
+        interpret=jax.default_backend() != "tpu")
+    out = out[:, :Sq].reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+    return out

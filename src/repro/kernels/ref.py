@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bucket_energy_ref"]
+
+
+def bucket_energy_ref(w: jax.Array, v: jax.Array, D: int) -> jax.Array:
+    """E[c, u] = sum_k w[c, k] * 1[v[c, k] == u].
+
+    The shared primitive of every sampler in the paper:
+      * minibatch energy estimates (MGPMH/local):  w = mask * L/lambda,
+        v = x[j_k]  ->  eps_u for all candidate values u at once.
+      * the exact O(Delta) conditional pass (Alg 1 / MGPMH acceptance):
+        w = W[i, :], v = x  ->  exact eps_u.
+
+    w: (C, K) float, v: (C, K) int32 in [0, D). Returns (C, D) float32.
+    """
+    onehot = jax.nn.one_hot(v, D, dtype=jnp.float32)
+    return jnp.einsum("ck,ckd->cd", w.astype(jnp.float32), onehot)

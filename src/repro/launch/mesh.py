@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init and only then calls make_production_mesh().
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "dp_axes", "MP_AXIS"]
+
+MP_AXIS = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    try:
+        auto = jax.sharding.AxisType.Auto
+        return jax.make_mesh(shape, axes, axis_types=(auto,) * len(axes))
+    except TypeError:                      # older jax without axis_types
+        return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh: jax.sharding.Mesh):
+    """The data-parallel axes of a mesh: ("pod","data") or ("data",)."""
+    return tuple(a for a in mesh.axis_names if a != MP_AXIS)

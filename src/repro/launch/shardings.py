@@ -1,0 +1,170 @@
+"""PartitionSpec rules for every parameter / activation / cache leaf.
+
+Conventions (mesh axes: optional "pod" + "data" = DP, "model" = TP/EP):
+* batch dims shard over DP axes;
+* attention projections shard the fused head dim (always divisible by 16
+  even when the head *count* isn't — starcoder2's 36, hymba's 25, whisper's
+  6); attention internals are left to GSPMD propagation;
+* MoE experts shard over "model" either as EP (expert dim, deepseek 64e) or
+  TP (expert d_ff, mixtral 8e < 16 shards);
+* decode KV caches shard their *sequence* dim over "model" (KV head counts
+  are all < 16), and for the batch=1 long-context shape over
+  ("data","model") jointly — 512k positions / 256 devices = 2k per chip;
+* vocab (padded to 128) shards over "model" for embed/lm_head/logits.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from .mesh import MP_AXIS, dp_axes
+
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "named",
+           "tree_named"]
+
+MP = MP_AXIS
+
+
+def _trailing(rule, ndim):
+    """Pad a trailing-dims rule with leading Nones (layer-stack dims)."""
+    return P(*([None] * (ndim - len(rule)) + list(rule)))
+
+
+def _leaf_rule(path_names, leaf, cfg: ModelConfig):
+    name = path_names[-1]
+    in_moe = "moe" in path_names
+    nd = leaf.ndim
+    if name == "embed":
+        return P(MP, None)
+    if name == "lm_head":
+        return P(None, MP)
+    if nd <= 1 and not path_names[0] == "layers":
+        return P()
+    if in_moe:
+        ep = cfg.moe_parallelism == "ep"
+        if name in ("w_gate", "w_up"):
+            return _trailing((MP, None, None) if ep else (None, None, MP), nd)
+        if name == "w_down":
+            return _trailing((MP, None, None) if ep else (None, MP, None), nd)
+        if name == "router":
+            return _trailing((None, None), nd)
+        if name in ("shared_gate", "shared_up"):
+            return _trailing((None, MP), nd)
+        if name == "shared_down":
+            return _trailing((MP, None), nd)
+    rules = {
+        "wq": (None, MP), "wk": (None, MP), "wv": (None, MP),
+        "wo": (MP, None),
+        "w_dkv": (None, None), "w_ukv": (None, MP),
+        "w_gate": (None, MP), "w_up": (None, MP), "w_down": (MP, None),
+        # ssm: shard d_inner everywhere
+        "w_in": (None, MP), "conv": (None, MP), "conv_bias": (MP,),
+        "w_x": (MP, None), "w_dt": (None, MP), "dt_bias": (MP,),
+        "A_log": (MP, None), "D": (MP,), "w_out": (MP, None),
+    }
+    if name in rules:
+        return _trailing(rules[name], nd)
+    return _trailing((), nd)    # norms etc: replicated
+
+
+def _apply_fsdp(spec: P, leaf, dp_size: int) -> P:
+    """ZeRO-style: additionally shard the largest unsharded dim over "data".
+    Leading layer-stack dims (G, P) are skipped; dims must divide dp_size."""
+    parts = list(spec) + [None] * (leaf.ndim - len(spec))
+    best, best_dim = -1, None
+    for d in range(leaf.ndim):
+        if parts[d] is None and leaf.shape[d] % dp_size == 0 \
+                and leaf.shape[d] > best:
+            best, best_dim = leaf.shape[d], d
+    if best_dim is not None and leaf.shape[best_dim] >= dp_size:
+        parts[best_dim] = "data"
+    return P(*parts)
+
+
+def param_pspecs(cfg: ModelConfig, params, dp_size: int = 16) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on abstract trees).
+    With cfg.fsdp, every >=2-D param is additionally sharded over "data"
+    (hierarchical ZeRO: multi-pod keeps pod-level replication)."""
+    def rule(path, leaf):
+        names = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                names.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                names.append(str(p.idx))
+        spec = _leaf_rule(names, leaf, cfg)
+        if cfg.fsdp and leaf.ndim >= 2:
+            spec = _apply_fsdp(spec, leaf, dp_size)
+        return spec
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Dict[str, Any]:
+    dp = dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    bspec = dp if shape.global_batch % dp_total == 0 and \
+        shape.global_batch >= dp_total else None
+    out = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if cfg.num_image_tokens or cfg.encoder_layers:
+        out["frontend_embeds"] = P(bspec, None, None)
+    if shape.kind == "decode":
+        out = {"tokens": P(bspec, None)}
+        if cfg.encoder_layers:
+            out["frontend_embeds"] = P(bspec, None, None)
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh, cache) -> Any:
+    """Sharding for the decode-cache pytree (leaf-shape driven)."""
+    dp = dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    batch_ok = shape.global_batch % dp_total == 0 and \
+        shape.global_batch >= dp_total
+    b_ax = dp if batch_ok else None
+    # sequence axis gets "model"; for unsharded batch also fold in DP axes
+    seq_ax = MP if batch_ok else tuple(list(dp) + [MP])
+    mp_size = mesh.shape[MP]
+
+    def rule(path, leaf):
+        names = [str(p.key) if isinstance(p, jax.tree_util.DictKey)
+                 else str(getattr(p, "idx", p)) for p in path]
+        name = names[-1]
+        nd = leaf.ndim
+        if name == "length":
+            return P()
+        if name in ("k", "v"):            # (..., B, KVH, S, hd)
+            seq = seq_ax if leaf.shape[-2] % (mp_size if batch_ok else
+                                              dp_total * mp_size) == 0 else None
+            return _trailing((b_ax, None, seq, None), nd)
+        if name == "pos":
+            return _trailing((None,), nd)
+        if name == "c_kv":                # (..., B, S, lora)
+            seq = seq_ax if leaf.shape[-2] % mp_size == 0 else None
+            return _trailing((b_ax, seq, None), nd)
+        if name == "k_rope":
+            seq = seq_ax if leaf.shape[-2] % mp_size == 0 else None
+            return _trailing((b_ax, seq, None), nd)
+        if name == "conv":                # (..., B, K-1, di)
+            return _trailing((b_ax, None, MP), nd)
+        if name == "state":               # (..., B, di, N)
+            return _trailing((b_ax, MP, None), nd)
+        return _trailing((), nd)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

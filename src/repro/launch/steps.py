@@ -1,0 +1,115 @@
+"""Jit-able step functions (train / prefill / serve) + abstract input specs.
+
+These are the exact functions the dry-run lowers and the real launchers run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models import transformer as T
+from ..optim.adamw import AdamWState, adamw_init, adamw_update, cosine_schedule
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step",
+           "input_specs", "abstract_train_state"]
+
+
+def make_train_step(cfg: ModelConfig, *, base_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    loss_chunk: int = 2048, kv_chunk: int = 1024,
+                    unroll: bool = False):
+    lr_fn = cosine_schedule(base_lr, warmup, total_steps)
+
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, Any]):
+        m = max(1, cfg.microbatches)
+
+        def loss_of(p, b):
+            return T.loss_fn(cfg, p, b, loss_chunk=loss_chunk,
+                             kv_chunk=kv_chunk, unroll=unroll)
+
+        if m == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            # gradient accumulation: activations live one microbatch at a
+            # time (HBM fit), gradients accumulate in f32
+            def split(x):
+                return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def body(carry, b):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_of)(params, b)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.float32(0)), mb,
+                                           unroll=m if unroll else 1)
+            grads = jax.tree_util.tree_map(lambda g: g / m, gsum)
+            loss = lsum / m
+        new_params, new_opt, metrics = adamw_update(
+            grads, opt_state, params, lr_fn=lr_fn)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, kv_chunk: int = 1024,
+                      unroll: bool = False):
+    def prefill_step(params, batch: Dict[str, Any]):
+        h = T.forward(cfg, params, batch["tokens"],
+                      batch.get("frontend_embeds"), remat=False,
+                      kv_chunk=kv_chunk, unroll=unroll)
+        lm_head = (params["embed"].T if cfg.tie_embeddings
+                   else params["lm_head"]).astype(T.COMPUTE_DTYPE)
+        return (h[:, -1] @ lm_head).astype(jnp.float32)   # next-token logits
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, unroll: bool = False):
+    def serve_step(params, tokens, cache):
+        return T.decode_step(cfg, params, tokens, cache, unroll=unroll)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct — weak-type-correct, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs for one (arch x shape) cell as ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        out = {"tokens": sds((B, 1), i32)}
+    elif cfg.encoder_layers:
+        out = {"tokens": sds((B, S), i32),
+               "labels": sds((B, S), i32),
+               "frontend_embeds": sds((B, cfg.num_frames, cfg.d_model),
+                                      jnp.bfloat16)}
+    elif cfg.num_image_tokens:
+        out = {"tokens": sds((B, S - cfg.num_image_tokens), i32),
+               "labels": sds((B, S), i32),
+               "frontend_embeds": sds((B, cfg.num_image_tokens, cfg.d_model),
+                                      jnp.bfloat16)}
+    else:
+        out = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+    if shape.kind == "prefill":
+        out.pop("labels", None)
+    if shape.kind == "decode" and cfg.encoder_layers:
+        out["frontend_embeds"] = sds((B, cfg.num_frames, cfg.d_model),
+                                     jnp.bfloat16)
+    return out
+
+
+def abstract_train_state(cfg: ModelConfig):
+    params = T.abstract_params(cfg)
+    opt = jax.eval_shape(adamw_init, params)
+    return params, opt

@@ -1,0 +1,121 @@
+"""Training launcher: real loop with checkpoint/restart, auto-resume,
+straggler watchdog, deterministic data addressing.
+
+Example (CPU, reduced config — the e2e driver in examples/train_lm.py uses
+this entry point):
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --smoke \
+      --steps 50 --global-batch 8 --seq 256 --ckpt-dir /tmp/ck
+Auto-resume: rerunning the same command continues from the latest
+checkpoint (bit-exact data order thanks to stateless batch addressing).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ShapeSpec
+from ..configs.registry import get_arch
+from ..data.pipeline import SyntheticTokens
+from ..models import transformer as T
+from ..optim.adamw import adamw_init
+from ..checkpoint import checkpoint as ckpt
+from ..runtime.fault import StepWatchdog, Heartbeat
+from . import steps as steps_lib
+from .shardings import param_pspecs, tree_named
+from jax.sharding import PartitionSpec as P
+
+
+def make_mesh_for_host():
+    """All local devices on one 'data' axis (the production mesh function
+    lives in mesh.py; real runs use whatever topology is present)."""
+    n = len(jax.devices())
+    auto = jax.sharding.AxisType.Auto
+    try:
+        return jax.make_mesh((n, 1), ("data", "model"),
+                             axis_types=(auto, auto))
+    except TypeError:
+        return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def train(cfg, *, steps: int, global_batch: int, seq: int, ckpt_dir: str,
+          ckpt_every: int = 50, lr: float = 3e-4, seed: int = 0,
+          log_every: int = 10, fail_at_step: int = -1):
+    """Returns (final loss, metrics history).  ``fail_at_step`` injects a
+    crash once (fault-tolerance test hook) — resume must be seamless."""
+    mesh = make_mesh_for_host()
+    data = SyntheticTokens(cfg.vocab_size, seq, global_batch, seed=seed)
+    shape = ShapeSpec("custom", seq, global_batch, "train")
+    train_step = steps_lib.make_train_step(cfg, base_lr=lr,
+                                           total_steps=max(steps, 100),
+                                           loss_chunk=min(2048, seq))
+    with mesh:
+        psh = tree_named(mesh, param_pspecs(cfg, T.abstract_params(cfg)))
+        jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+        start = ckpt.latest_step(ckpt_dir) if ckpt_dir else None
+        if start is not None:
+            like = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                                  jax.random.PRNGKey(seed))
+            params = ckpt.restore(ckpt_dir, start, like, shardings=psh)
+            opt = ckpt.restore(ckpt_dir + "/opt", start,
+                               jax.eval_shape(adamw_init, like))
+            step0 = start
+            print(f"[train] resumed from step {start}")
+        else:
+            params = T.init_params(cfg, jax.random.PRNGKey(seed))
+            params = jax.device_put(params, psh)
+            opt = adamw_init(params)
+            step0 = 0
+
+        wd = StepWatchdog()
+        hb = Heartbeat(ckpt_dir + "/heartbeat.json", 5.0) if ckpt_dir else None
+        history = []
+        crashed = False
+        for step in range(step0, steps):
+            if step == fail_at_step and not crashed:
+                raise RuntimeError("injected failure (fault-tolerance test)")
+            batch = jax.tree_util.tree_map(jnp.asarray, data.batch(step))
+            with wd:
+                params, opt, metrics = jit_step(params, opt, batch)
+            if (step + 1) % log_every == 0 or step == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                history.append({"step": step + 1, **m})
+                print(f"[train] step {step+1:5d} loss={m['loss']:.4f} "
+                      f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e}",
+                      flush=True)
+            if ckpt_dir and (step + 1) % ckpt_every == 0:
+                ckpt.save(ckpt_dir, step + 1, params)
+                ckpt.save(ckpt_dir + "/opt", step + 1, opt)
+            if hb:
+                hb.beat(step)
+        if ckpt_dir:
+            ckpt.save(ckpt_dir, steps, params)
+            ckpt.save(ckpt_dir + "/opt", steps, opt)
+        print(f"[train] done; watchdog: {wd.stats()}")
+        return history[-1]["loss"] if history else None, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    train(cfg, steps=args.steps, global_batch=args.global_batch,
+          seq=args.seq, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+          lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

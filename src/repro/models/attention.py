@@ -1,0 +1,260 @@
+"""Attention: GQA with optional sliding window (flash-style chunked softmax
+for train/prefill, direct scores for decode), and DeepSeek-style MLA with a
+compressed KV cache.
+
+Memory discipline: full (S x S) score materialization is never allowed at
+training/prefill lengths — `flash_attention` scans over KV chunks with an
+online (running max / normalizer) softmax so the transient is
+O(S * kv_chunk) per head.  Decode (q_len == 1) computes scores directly —
+(B, H, S) is small and XLA shards it over the mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention", "decode_attention", "KVCache", "gqa_attend",
+           "mla_attend_train", "mla_attend_decode"]
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Per-layer decode cache.  k/v: (B, kv_heads, S_max, hd)."""
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # () int32 — tokens currently valid
+
+
+def _window_mask(q_pos: jax.Array, k_pos: jax.Array,
+                 window: jax.Array, causal: bool) -> jax.Array:
+    """(Sliding-window) attention mask.  window <= 0 means full.
+    q_pos: (Sq,), k_pos: (Sk,) -> bool (Sq, Sk)."""
+    d = q_pos[:, None] - k_pos[None, :]
+    win = jnp.where(window > 0, d < window, True)
+    if causal:
+        win = win & (d >= 0)
+    return win
+
+
+@functools.partial(jax.jit, static_argnames=("kv_chunk", "unroll", "causal"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    window, *, kv_chunk: int = 1024,
+                    unroll: bool = False, causal: bool = True) -> jax.Array:
+    """Online-softmax attention for train/prefill.
+
+    q: (B, Sq, H, hd);  k, v: (B, Sk, KVH, hd) with H % KVH == 0 (GQA).
+    ``window``: python int or traced scalar; <= 0 → full.  ``causal=False``
+    gives bidirectional attention (whisper encoder).
+    Returns (B, Sq, H, hd).  Scans over Sk in ``kv_chunk`` blocks, keeping a
+    running max/normalizer so no (Sq, Sk) tensor is ever materialized.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk0, KVH, _ = k.shape
+    G = H // KVH
+    scale = hd ** -0.5
+    # bf16 operands + f32 MXU accumulation: halves the HBM traffic of the
+    # score/context tensors vs an all-f32 pipeline, keeps the online-softmax
+    # statistics (m, l, acc) in f32 (perf iteration H2, EXPERIMENTS.md §Perf).
+    cdt = q.dtype if q.dtype != jnp.float32 else jnp.bfloat16
+    q = (q.astype(jnp.float32) * scale).astype(cdt).reshape(B, Sq, KVH, G, hd)
+    window = jnp.asarray(window, jnp.int32)
+
+    kv_chunk = min(kv_chunk, Sk0)
+    pad = (-Sk0) % kv_chunk
+    if pad:                       # ragged tail: pad KV, mask via k_pos >= Sk0
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sk = Sk0 + pad
+    n_chunks = Sk // kv_chunk
+    k = k.astype(cdt).reshape(B, n_chunks, kv_chunk, KVH, hd)
+    v = v.astype(cdt).reshape(B, n_chunks, kv_chunk, KVH, hd)
+    q_pos = jnp.arange(Sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry               # (B,Sq,KVH,G), same, (B,Sq,KVH,G,hd)
+        kc, vc, ci = inputs             # (B,C,KVH,hd) x2, () chunk idx
+        k_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        mask = _window_mask(q_pos, k_pos, window, causal)  # (Sq, C)
+        mask = mask & (k_pos < Sk0)[None, :]
+        s = jnp.einsum("bqkgh,bckh->bqkgc", q, kc,
+                       preferred_element_type=jnp.float32)  # (B,Sq,KVH,G,C)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p.astype(cdt), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KVH, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KVH, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KVH, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (k.swapaxes(0, 1), v.swapaxes(0, 1), jnp.arange(n_chunks)),
+        unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd)
+
+
+def decode_attention(q: jax.Array, cache: KVCache, window) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, H, hd); cache.k/v: (B, KVH, S, hd).  Returns (B, 1, H, hd).
+    Out-of-window / beyond-length positions masked.  (B, H, S) scores are
+    computed directly; at 512k context this is MBs, and the S axis may be
+    sharded — XLA emits the softmax reductions as collectives.
+    """
+    B, _, H, hd = q.shape
+    _, KVH, S, _ = cache.k.shape
+    G = H // KVH
+    qg = (q[:, 0] * hd ** -0.5).reshape(B, KVH, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg, cache.k.astype(jnp.float32))
+    pos = jnp.arange(S)
+    q_pos = cache.length - 1                       # position of current token
+    window = jnp.asarray(window, jnp.int32)
+    valid = (pos[None, :] < cache.length) & (
+        jnp.where(window > 0, q_pos - pos[None, :] < window, True))
+    s = jnp.where(valid[:, None, None, :] if valid.ndim == 2
+                  else valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksh->bkgh", p, cache.v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA wrapper
+# ---------------------------------------------------------------------------
+
+def gqa_attend(x, p, *, num_heads, num_kv_heads, head_dim, window,
+               rope_cos, rope_sin, cache: Optional[KVCache] = None,
+               kv_chunk: int = 1024, unroll: bool = False,
+               causal: bool = True):
+    """Standard GQA block.  p: dict with wq (d, H*hd), wk/wv (d, KVH*hd),
+    wo (H*hd, d).  Train/prefill when cache is None; one-token decode
+    otherwise.  Returns (out, new_cache)."""
+    B, S, d = x.shape
+    q = (x @ p["wq"]).reshape(B, S, num_heads, head_dim)
+    k = (x @ p["wk"]).reshape(B, S, num_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(B, S, num_kv_heads, head_dim)
+    q = apply_rope_bshd(q, rope_cos, rope_sin)
+    k = apply_rope_bshd(k, rope_cos, rope_sin)
+    if cache is None:
+        out = flash_attention(q, k, v, window, kv_chunk=kv_chunk,
+                              unroll=unroll, causal=causal)
+        new_cache = None
+    else:
+        idx = cache.length - 1
+        new_k = cache.k.at[:, :, idx, :].set(k[:, 0].astype(cache.k.dtype))
+        new_v = cache.v.at[:, :, idx, :].set(v[:, 0].astype(cache.v.dtype))
+        new_cache = KVCache(new_k, new_v, cache.length)
+        out = decode_attention(q, new_cache, window)
+    out = out.reshape(B, S, num_heads * head_dim).astype(x.dtype)
+    return out @ p["wo"], new_cache
+
+
+def apply_rope_bshd(x: jax.Array, cos: jax.Array, sin: jax.Array):
+    """x: (B, S, H, hd); cos/sin: (S, hd/2) (or (B,S,hd/2))."""
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — compressed KV cache
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    """Compressed cache: c_kv (B, S, kv_lora), k_rope (B, S, rope_dim)."""
+    c_kv: jax.Array
+    k_rope: jax.Array
+    length: jax.Array
+
+
+def mla_attend_train(x, p, *, num_heads, qk_nope, qk_rope, v_head,
+                     kv_lora, rope_cos, rope_sin, kv_chunk: int = 1024,
+                     unroll: bool = False):
+    """Multi-head Latent Attention, training path.
+
+    p: wq (d, H*(nope+rope)), w_dkv (d, kv_lora + rope), w_ukv
+    (kv_lora, H*(nope+v_head)), wo (H*v_head, d).
+    """
+    B, S, d = x.shape
+    H = num_heads
+    q = (x @ p["wq"]).reshape(B, S, H, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope_bshd(q_rope, rope_cos, rope_sin)
+
+    dkv = x @ p["w_dkv"]                       # (B, S, kv_lora + rope)
+    c_kv, k_rope = dkv[..., :kv_lora], dkv[..., kv_lora:]
+    k_rope = apply_rope_bshd(k_rope[:, :, None, :], rope_cos,
+                             rope_sin)[:, :, 0, :]
+    ukv = (c_kv @ p["w_ukv"]).reshape(B, S, H, qk_nope + v_head)
+    k_nope, v = ukv[..., :qk_nope], ukv[..., qk_nope:]
+
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    kf = jnp.concatenate([k_nope,
+                          jnp.broadcast_to(k_rope[:, :, None, :],
+                                           (B, S, H, qk_rope))], -1)
+    # pad v to qk dim for the shared flash kernel, slice after
+    pad = qf.shape[-1] - v.shape[-1]
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    out = flash_attention(qf, kf, v_p, 0, kv_chunk=kv_chunk,
+                          unroll=unroll)[..., :v_head]
+    out = out.reshape(B, S, H * v_head).astype(x.dtype)
+    return out @ p["wo"]
+
+
+def mla_attend_decode(x, p, cache: MLACache, *, num_heads, qk_nope, qk_rope,
+                      v_head, kv_lora, rope_cos, rope_sin):
+    """Decode with the compressed cache (the MLA memory win: cache is
+    (kv_lora + rope) per token instead of 2*H*hd)."""
+    B, S, d = x.shape
+    H = num_heads
+    assert S == 1
+    q = (x @ p["wq"]).reshape(B, 1, H, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope_bshd(q_rope, rope_cos, rope_sin)
+
+    dkv = x @ p["w_dkv"]
+    c_new, kr_new = dkv[..., :kv_lora], dkv[..., kv_lora:]
+    kr_new = apply_rope_bshd(kr_new[:, :, None, :], rope_cos,
+                             rope_sin)[:, :, 0, :]
+    idx = cache.length - 1
+    c_kv = cache.c_kv.at[:, idx, :].set(c_new[:, 0].astype(cache.c_kv.dtype))
+    k_rope = cache.k_rope.at[:, idx, :].set(kr_new[:, 0].astype(cache.k_rope.dtype))
+    new_cache = MLACache(c_kv, k_rope, cache.length)
+
+    # absorb: score = q_nope . k_nope + q_rope . k_rope
+    #   k_nope = c_kv @ w_ukv[:, :H*qk_nope]; fold into q (weight absorption)
+    w_ukv = p["w_ukv"].reshape(kv_lora, H, qk_nope + v_head)
+    w_uk = w_ukv[..., :qk_nope]               # (kv_lora, H, nope)
+    w_uv = w_ukv[..., qk_nope:]               # (kv_lora, H, v_head)
+    q_abs = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))     # (B,1,H,kv_lora)
+    scale = (qk_nope + qk_rope) ** -0.5
+    s = (jnp.einsum("bqhl,bsl->bhqs", q_abs, c_kv.astype(jnp.float32))
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * scale
+    Smax = c_kv.shape[1]
+    valid = jnp.arange(Smax)[None, :] < cache.length
+    s = jnp.where(valid[:, None, None, :] if valid.ndim == 2
+                  else valid[None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)                   # (B,H,1,S)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", pr, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * v_head).astype(x.dtype)
+    return out @ p["wo"], new_cache

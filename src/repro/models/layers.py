@@ -1,0 +1,67 @@
+"""Shared neural-net building blocks (pure JAX, no framework deps)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope", "apply_rope", "swiglu", "dense",
+           "sinusoidal_positions", "init_dense", "truncated_normal_init"]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def rope(positions: jax.Array, head_dim: int,
+         theta: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """Rotary embedding tables.  positions: (..., S) -> cos/sin (..., S, hd/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); cos/sin broadcastable (..., S, 1, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    return x @ w
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal positional embeddings (length, dim)."""
+    half = dim // 2
+    scale = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / (half - 1)))
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None] * scale[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)
+
+
+def truncated_normal_init(key: jax.Array, shape, fan_in: Optional[int] = None,
+                          dtype=jnp.float32) -> jax.Array:
+    fan_in = fan_in or shape[-2] if len(shape) >= 2 else shape[-1]
+    std = (1.0 / max(fan_in, 1)) ** 0.5
+    return std * jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32
+                                             ).astype(dtype)
+
+
+def init_dense(key: jax.Array, d_in: int, d_out: int,
+               dtype=jnp.float32) -> jax.Array:
+    return truncated_normal_init(key, (d_in, d_out), fan_in=d_in, dtype=dtype)

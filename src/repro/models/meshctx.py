@@ -1,0 +1,23 @@
+"""Ambient mesh context for model code that needs explicit shard_map
+regions inside jit (the sharded-dispatch MoE).  Launchers set it; model
+layers read it.  When unset, layers fall back to pure-GSPMD code."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+_CTX = {"mesh": None, "dp": (), "mp": "model"}
+
+
+def set_mesh(mesh, dp_axes: Tuple[str, ...], mp_axis: str = "model"):
+    _CTX["mesh"] = mesh
+    _CTX["dp"] = tuple(dp_axes)
+    _CTX["mp"] = mp_axis
+
+
+def clear():
+    _CTX["mesh"] = None
+
+
+def get_mesh():
+    """Returns (mesh | None, dp_axes, mp_axis)."""
+    return _CTX["mesh"], _CTX["dp"], _CTX["mp"]

@@ -1,0 +1,100 @@
+"""Mamba-1 selective state-space block (falcon-mamba / hymba branch).
+
+Training uses an associative scan over the sequence (parallel prefix — the
+TPU-friendly formulation of the selective scan); decode is the O(1) single
+step recurrence on carried (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mamba_block", "mamba_decode_step", "SSMCache", "init_ssm_cache"]
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, K-1, d_inner) last inputs for the causal conv
+    state: jax.Array  # (B, d_inner, N) ssm hidden state
+
+
+def init_ssm_cache(batch: int, d_inner: int, conv_kernel: int, n_state: int,
+                   dtype=jnp.float32) -> SSMCache:
+    return SSMCache(conv=jnp.zeros((batch, conv_kernel - 1, d_inner), dtype),
+                    state=jnp.zeros((batch, d_inner, n_state), dtype))
+
+
+def _ssm_params(x_conv, p, n_state: int):
+    """Common projections: returns (dt (B,S,di), Bmat (B,S,N), Cmat (B,S,N),
+    A (di,N)) — all float32; the selective-scan recurrence is numerically
+    sensitive so it always runs in f32 regardless of compute dtype."""
+    proj = x_conv @ p["w_x"]                       # (B,S,dt_rank+2N)
+    dt_rank = p["w_dt"].shape[0]
+    dt = jax.nn.softplus(
+        (proj[..., :dt_rank] @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    Bmat = proj[..., dt_rank:dt_rank + n_state].astype(jnp.float32)
+    Cmat = proj[..., dt_rank + n_state:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))   # (di, N)
+    return dt, Bmat, Cmat, A
+
+
+def mamba_block(x: jax.Array, p: dict, *, n_state: int,
+                conv_kernel: int = 4) -> jax.Array:
+    """Full-sequence selective scan.  x: (B, S, d).
+
+    p: w_in (d, 2*di), conv (K, di), conv_bias (di,), w_x (di, dt_rank+2N),
+    w_dt (dt_rank, di), dt_bias (di,), A_log (di, N), D (di,), w_out (di, d).
+    """
+    B, S, d = x.shape
+    xz = x @ p["w_in"]
+    di = xz.shape[-1] // 2
+    xi, z = xz[..., :di], xz[..., di:]
+
+    # causal depthwise conv (kernel K)
+    pad = jnp.pad(xi, ((0, 0), (conv_kernel - 1, 0), (0, 0)))
+    xc = sum(pad[:, k:k + S, :] * p["conv"][k][None, None, :]
+             for k in range(conv_kernel))
+    xc = jax.nn.silu(xc + p["conv_bias"])
+
+    dt, Bm, Cm, A = _ssm_params(xc, p, n_state)
+    # h_t = exp(dt A) h_{t-1} + dt * B_t x_t ;  y_t = C_t . h_t + D x_t
+    xf = xc.astype(jnp.float32)
+    decay = jnp.exp(dt[..., None] * A[None, None, :, :])       # (B,S,di,N)
+    drive = (dt * xf)[..., None] * Bm[:, :, None, :]           # (B,S,di,N)
+
+    def combine(a, b):
+        (da, ua), (db, ub) = a, b
+        return da * db, ua * db + ub
+
+    _, h = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cm) + xf * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return (y @ p["w_out"]).astype(x.dtype)
+
+
+def mamba_decode_step(x: jax.Array, p: dict, cache: SSMCache, *,
+                      n_state: int, conv_kernel: int = 4
+                      ) -> Tuple[jax.Array, SSMCache]:
+    """Single-token recurrence.  x: (B, 1, d).  O(1) state update — this is
+    why SSM archs run the 500k-context decode shape."""
+    B, S, d = x.shape
+    assert S == 1
+    xz = x[:, 0] @ p["w_in"]
+    di = xz.shape[-1] // 2
+    xi, z = xz[..., :di], xz[..., di:]
+
+    hist = jnp.concatenate([cache.conv, xi[:, None, :]], axis=1)  # (B,K,di)
+    xc = jnp.einsum("bkd,kd->bd", hist, p["conv"]) + p["conv_bias"]
+    xc = jax.nn.silu(xc)
+    new_conv = hist[:, 1:, :]
+
+    dt, Bm, Cm, A = _ssm_params(xc[:, None, :], p, n_state)
+    dt, Bm, Cm = dt[:, 0], Bm[:, 0], Cm[:, 0]
+    decay = jnp.exp(dt[..., None] * A[None, :, :])               # (B,di,N)
+    h = cache.state.astype(jnp.float32) * decay + (dt * xc.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + xc.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32)))
+    out = (y @ p["w_out"]).astype(x.dtype)[:, None, :]
+    return out, SSMCache(conv=new_conv.astype(cache.conv.dtype),
+                         state=h.astype(cache.state.dtype))

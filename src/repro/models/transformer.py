@@ -1,0 +1,621 @@
+"""Unified transformer/SSM/hybrid model: init, forward, loss, decode.
+
+Design notes
+------------
+* **Layer groups.** Layers are stacked ``(G, P, ...)`` where ``P =
+  len(cfg.window_pattern)`` and scanned over G groups with the P slots
+  unrolled inside the body.  This keeps gemma3's 5:1 local:global pattern
+  (and any SWA/full mix) inside one ``lax.scan`` — compile time stays flat in
+  depth — while letting each slot keep its own window and its own
+  window-sized decode cache.
+* **Remat.** The group body is wrapped in ``jax.checkpoint`` for training.
+* **Decode caches** are ring buffers of ``min(window, seq)`` slots with an
+  absolute-position array (`pos`) for masking — a 512k-context SWA layer
+  only ever allocates its window.
+* **Vocab padding.** Embedding/lm-head pad the vocab to a multiple of 128 so
+  the vocab axis shards evenly; loss ignores padded ids.
+* The dense prefix (deepseek's first dense layer) runs unrolled before the
+  scanned stack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+from jax.ad_checkpoint import checkpoint_name as _ckpt_name
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeSpec
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .attention import KVCache, MLACache
+from .layers import rms_norm, init_dense, truncated_normal_init
+
+__all__ = ["init_params", "abstract_params", "forward", "loss_fn",
+           "init_cache", "decode_step", "param_count", "active_param_count",
+           "model_flops_per_token"]
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _pad_vocab(v: int) -> int:
+    return ((v + 127) // 128) * 128
+
+
+# ===========================================================================
+# Parameter initialization
+# ===========================================================================
+
+def _init_attn(key, cfg: ModelConfig, shape_prefix=()):
+    d, H, KVH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    if cfg.attention == "mla":
+        qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+        return {
+            "wq": truncated_normal_init(ks[0], shape_prefix + (d, H * qd), d),
+            "w_dkv": truncated_normal_init(
+                ks[1], shape_prefix + (d, cfg.kv_lora_rank + cfg.qk_rope_dim), d),
+            "w_ukv": truncated_normal_init(
+                ks[2], shape_prefix + (cfg.kv_lora_rank,
+                                       H * (cfg.qk_nope_dim + cfg.v_head_dim)),
+                cfg.kv_lora_rank),
+            "wo": truncated_normal_init(
+                ks[3], shape_prefix + (H * cfg.v_head_dim, d), H * cfg.v_head_dim),
+        }
+    return {
+        "wq": truncated_normal_init(ks[0], shape_prefix + (d, H * hd), d),
+        "wk": truncated_normal_init(ks[1], shape_prefix + (d, KVH * hd), d),
+        "wv": truncated_normal_init(ks[2], shape_prefix + (d, KVH * hd), d),
+        "wo": truncated_normal_init(ks[3], shape_prefix + (H * hd, d), H * hd),
+    }
+
+
+def _init_mlp(key, cfg: ModelConfig, d_ff: int, shape_prefix=()):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {"w_up": truncated_normal_init(ks[1], shape_prefix + (d, d_ff), d),
+         "w_down": truncated_normal_init(ks[2], shape_prefix + (d_ff, d), d_ff)}
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = truncated_normal_init(ks[0], shape_prefix + (d, d_ff), d)
+    return p
+
+
+def _moe_dispatch(cfg: ModelConfig, h, p):
+    """Choose the MoE implementation: sharded dispatch (shard_map, needs
+    the ambient mesh) or the pure-GSPMD fallback."""
+    from . import meshctx
+    mesh, dp, mp = meshctx.get_mesh()
+    if cfg.moe_impl == "shard_map" and mesh is not None:
+        return moe_lib.moe_ffn_sharded(
+            h, p, top_k=cfg.top_k,
+            capacity_factor=cfg.moe_capacity_factor, mesh=mesh,
+            dp_axes=dp, mp_axis=mp, parallelism=cfg.moe_parallelism)
+    return moe_lib.moe_ffn(h, p, top_k=cfg.top_k,
+                           capacity_factor=cfg.moe_capacity_factor)
+
+
+def _mlp_apply(cfg: ModelConfig, h, p):
+    if cfg.mlp_type == "swiglu":
+        m = jax.nn.silu(h @ p["w_gate"]) * (h @ p["w_up"])
+    else:
+        m = jax.nn.gelu(h @ p["w_up"])
+    return m @ p["w_down"]
+
+
+def _init_moe(key, cfg: ModelConfig, shape_prefix=()):
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 7)
+    p = {"router": truncated_normal_init(ks[0], shape_prefix + (d, E), d),
+         "w_gate": truncated_normal_init(ks[1], shape_prefix + (E, d, f), d),
+         "w_up": truncated_normal_init(ks[2], shape_prefix + (E, d, f), d),
+         "w_down": truncated_normal_init(ks[3], shape_prefix + (E, f, d), f)}
+    if cfg.shared_experts > 0:
+        fs = cfg.shared_experts * f
+        p["shared_gate"] = truncated_normal_init(ks[4], shape_prefix + (d, fs), d)
+        p["shared_up"] = truncated_normal_init(ks[5], shape_prefix + (d, fs), d)
+        p["shared_down"] = truncated_normal_init(ks[6], shape_prefix + (fs, d), fs)
+    return p
+
+
+def _init_ssm(key, cfg: ModelConfig, shape_prefix=()):
+    d, di, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.conv_kernel
+    dtr = cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)),
+                         shape_prefix + (di, N))
+    return {
+        "w_in": truncated_normal_init(ks[0], shape_prefix + (d, 2 * di), d),
+        "conv": truncated_normal_init(ks[1], shape_prefix + (K, di), K),
+        "conv_bias": jnp.zeros(shape_prefix + (di,), jnp.float32),
+        "w_x": truncated_normal_init(ks[2], shape_prefix + (di, dtr + 2 * N), di),
+        "w_dt": truncated_normal_init(ks[3], shape_prefix + (dtr, di), dtr),
+        "dt_bias": jnp.full(shape_prefix + (di,), -4.6, jnp.float32),
+        "A_log": A,
+        "D": jnp.ones(shape_prefix + (di,), jnp.float32),
+        "w_out": truncated_normal_init(ks[5], shape_prefix + (di, d), di),
+    }
+
+
+def _init_layer_stack(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """Scanned stack params, every leaf shaped (G, P, ...)."""
+    G, P = cfg.num_groups, cfg.period
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((G, P, d), jnp.float32)}
+    if cfg.is_moe or cfg.d_ff > 0:
+        p["ln2"] = jnp.zeros((G, P, d), jnp.float32)
+    if cfg.has_attention:
+        p["attn"] = _init_attn(ks[0], cfg, (G, P))
+    if cfg.has_ssm:
+        p["ssm"] = _init_ssm(ks[1], cfg, (G, P))
+        if cfg.parallel_ssm:
+            p["ln_ssm"] = jnp.zeros((G, P, d), jnp.float32)
+    if cfg.is_moe:
+        p["moe"] = _init_moe(ks[2], cfg, (G, P))
+    elif cfg.d_ff > 0:               # mamba-only layers carry no MLP
+        p["mlp"] = _init_mlp(ks[3], cfg, cfg.d_ff, (G, P))
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    vp = _pad_vocab(cfg.vocab_size)
+    params: Dict[str, Any] = {
+        "embed": truncated_normal_init(ks[0], (vp, cfg.d_model), cfg.d_model),
+        "layers": _init_layer_stack(ks[1], cfg),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = truncated_normal_init(
+            ks[2], (cfg.d_model, vp), cfg.d_model)
+    if cfg.first_dense_layers:
+        dense_cfg_ff = cfg.d_ff
+        params["dense_prefix"] = [
+            {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+             "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+             "attn": _init_attn(jax.random.fold_in(ks[3], i), cfg),
+             "mlp": _init_mlp(jax.random.fold_in(ks[4], i), cfg, dense_cfg_ff)}
+            for i in range(cfg.first_dense_layers)]
+    if cfg.encoder_layers:
+        # encoder stack: full self-attention, P = 1
+        enc_ks = jax.random.split(ks[5], 3)
+        GE = cfg.encoder_layers
+        params["encoder"] = {
+            "ln1": jnp.zeros((GE, 1, cfg.d_model), jnp.float32),
+            "ln2": jnp.zeros((GE, 1, cfg.d_model), jnp.float32),
+            "attn": _init_attn(enc_ks[0], cfg, (GE, 1)),
+            "mlp": _init_mlp(enc_ks[1], cfg, cfg.d_ff, (GE, 1)),
+        }
+        params["encoder_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        # decoder cross-attention per scanned layer
+        G, P = cfg.num_groups, cfg.period
+        params["layers"]["ln_x"] = jnp.zeros((G, P, cfg.d_model), jnp.float32)
+        params["layers"]["xattn"] = _init_attn(ks[6], cfg, (G, P))
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(l.shape)) for l in
+               jax.tree_util.tree_leaves(abstract_params(cfg)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top_k + shared experts only)."""
+    total = param_count(cfg)
+    if not cfg.is_moe:
+        return total
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    inactive = (cfg.num_experts - cfg.top_k) * per_expert * cfg.scan_layers
+    return total - inactive
+
+
+def model_flops_per_token(cfg: ModelConfig, seq_len: int,
+                          kind: str = "train") -> float:
+    """MODEL_FLOPS: 6*N_active per token for train, 2*N_active for forward,
+    plus attention term 12*L*d_eff*S (train) where applicable."""
+    N = active_param_count(cfg)
+    base = (6.0 if kind == "train" else 2.0) * N
+    att = 0.0
+    if cfg.has_attention:
+        per_layer_window = [w if w > 0 else seq_len
+                            for w in cfg.window_pattern]
+        eff = sum(min(w, seq_len) for w in per_layer_window) / cfg.period
+        mult = 6.0 if kind == "train" else 2.0
+        att = mult * cfg.num_layers * cfg.num_heads * cfg.head_dim * eff
+    return base + att
+
+
+# ===========================================================================
+# Forward
+# ===========================================================================
+
+def _rope_tables(cfg: ModelConfig, positions: jax.Array):
+    hd = (cfg.qk_rope_dim if cfg.attention == "mla" else cfg.head_dim)
+    if not cfg.has_attention:
+        return None, None
+    half = hd // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _cast_params(pl):
+    """Mixed precision: >=2-D weights compute in bf16; 1-D params (norm
+    scales, biases, ssm D) stay f32."""
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(COMPUTE_DTYPE)
+        if (a.ndim >= 2 and a.dtype == jnp.float32) else a, pl)
+
+
+def _layer(cfg: ModelConfig, x, pl, window, rope_cs, enc_out=None,
+           kv_chunk: int = 1024, unroll: bool = False, causal: bool = True):
+    """One transformer layer (train/prefill path)."""
+    pl = _cast_params(pl)
+    cos, sin = rope_cs
+    h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    mix = 0.0
+    if cfg.has_attention:
+        if cfg.attention == "mla":
+            a = attn_lib.mla_attend_train(
+                h, pl["attn"], num_heads=cfg.num_heads,
+                qk_nope=cfg.qk_nope_dim, qk_rope=cfg.qk_rope_dim,
+                v_head=cfg.v_head_dim, kv_lora=cfg.kv_lora_rank,
+                rope_cos=cos, rope_sin=sin, kv_chunk=kv_chunk,
+                unroll=unroll)
+        else:
+            a, _ = attn_lib.gqa_attend(
+                h, pl["attn"], num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                window=window, rope_cos=cos, rope_sin=sin, kv_chunk=kv_chunk,
+                unroll=unroll, causal=causal)
+        mix = mix + a
+    if cfg.has_ssm:
+        hs = rms_norm(x, pl["ln_ssm"], cfg.norm_eps) if cfg.parallel_ssm else h
+        s = ssm_lib.mamba_block(hs, pl["ssm"], n_state=cfg.ssm_state,
+                                conv_kernel=cfg.conv_kernel)
+        mix = (mix + s) * (0.5 if cfg.parallel_ssm else 1.0)
+    x = x + _ckpt_name(mix, "tp_out") \
+        if not isinstance(mix, float) else x
+    if enc_out is not None:
+        hx = rms_norm(x, pl["ln_x"], cfg.norm_eps)
+        xa = _cross_attend(cfg, hx, pl["xattn"], enc_out)
+        x = x + xa
+    if "moe" not in pl and "mlp" not in pl:    # ssm-only layer: no ffn
+        return x
+    h2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    if "moe" in pl:            # dense-prefix layers carry "mlp" instead
+        m = _moe_dispatch(cfg, h2, pl["moe"])
+    else:
+        m = _mlp_apply(cfg, h2, pl["mlp"])
+    return x + _ckpt_name(m, "tp_out")
+
+
+def _cross_attend(cfg: ModelConfig, x, p, enc_out):
+    """Full (non-causal) attention over encoder output (whisper)."""
+    B, S, d = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    Se = enc_out.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (enc_out @ p["wk"]).reshape(B, Se, KVH, hd)
+    v = (enc_out @ p["wv"]).reshape(B, Se, KVH, hd)
+    G = H // KVH
+    qf = (q * hd ** -0.5).astype(jnp.float32).reshape(B, S, KVH, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qf, k.astype(jnp.float32))
+    p_ = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskh->bqkgh", p_, v.astype(jnp.float32))
+    o = o.reshape(B, S, H * hd).astype(x.dtype)
+    return o @ p["wo"]
+
+
+def _run_stack(cfg: ModelConfig, stack, x, rope_cs, enc_out=None,
+               remat: bool = True, kv_chunk: int = 1024,
+               unroll: bool = False, causal: bool = True):
+    windows = cfg.window_pattern
+
+    def group_body(carry, group_params):
+        h = carry
+        for slot in range(cfg.period):
+            pl = jax.tree_util.tree_map(lambda a: a[slot], group_params)
+            h = _layer(cfg, h, pl, windows[slot], rope_cs, enc_out, kv_chunk,
+                       unroll, causal)
+        return h, None
+
+    if remat and cfg.remat_policy == "save_tp_out":
+        # keep the (already psum'd) TP-boundary outputs: backward re-uses
+        # them instead of recomputing attention/MoE + their collectives
+        policy = jax.checkpoint_policies.save_only_these_names("tp_out")
+        body = jax.checkpoint(group_body, policy=policy)
+    elif remat:
+        body = jax.checkpoint(group_body)
+    else:
+        body = group_body
+    n_groups = jax.tree_util.tree_leaves(stack)[0].shape[0]
+    x, _ = jax.lax.scan(body, x, stack,
+                        unroll=n_groups if unroll else 1)
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens: jax.Array,
+            frontend_embeds: Optional[jax.Array] = None,
+            remat: bool = True, kv_chunk: int = 1024,
+            unroll: bool = False) -> jax.Array:
+    """Returns final hidden states (B, S_total, d) in COMPUTE_DTYPE.
+
+    ``frontend_embeds``: precomputed modality embeddings (pixtral patches)
+    prepended to the token embeddings — the stub frontend contract.  For
+    whisper they are instead the *encoder* input frames.
+    """
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    enc_out = None
+    if cfg.encoder_layers:
+        e = frontend_embeds.astype(COMPUTE_DTYPE)
+        rope_e = _rope_tables(cfg, jnp.arange(e.shape[1]))
+        enc_out = _run_stack(cfg, params["encoder"], e, rope_e, remat=remat,
+                             kv_chunk=kv_chunk, unroll=unroll,
+                             causal=False)   # encoder is bidirectional
+        enc_out = rms_norm(enc_out, params["encoder_norm"], cfg.norm_eps)
+    elif frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(COMPUTE_DTYPE), x], axis=1)
+
+    S = x.shape[1]
+    rope_cs = _rope_tables(cfg, jnp.arange(S))
+    for pl in params.get("dense_prefix", []):
+        x = _layer(cfg, x, pl, cfg.window_pattern[0], rope_cs, None, kv_chunk,
+                   unroll)
+    x = _run_stack(cfg, params["layers"], x, rope_cs, enc_out, remat,
+                   kv_chunk, unroll)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            loss_chunk: int = 2048, kv_chunk: int = 1024,
+            unroll: bool = False) -> jax.Array:
+    """Next-token cross entropy, computed in seq chunks so the (S, V) logits
+    never materialize whole.  batch: tokens (B,S), labels (B,S) with -1 =
+    ignore; optional frontend_embeds."""
+    h = forward(cfg, params, batch["tokens"],
+                batch.get("frontend_embeds"), kv_chunk=kv_chunk,
+                unroll=unroll)
+    lm_head = (params["embed"].T if cfg.tie_embeddings
+               else params["lm_head"]).astype(COMPUTE_DTYPE)
+    labels = batch["labels"]
+    if h.shape[1] != labels.shape[1]:      # frontend tokens carry no loss
+        h = h[:, h.shape[1] - labels.shape[1]:, :]
+    B, S, d = h.shape
+    n_chunks = max(1, S // loss_chunk)
+    hc = h.reshape(B, n_chunks, S // n_chunks, d).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(carry, xs):
+        hch, lch = xs
+        logits = (hch @ lm_head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lch, 0)[..., None], axis=-1)[..., 0]
+        mask = (lch >= 0).astype(jnp.float32)
+        nll = (lse - gold) * mask
+        return (carry[0] + nll.sum(), carry[1] + mask.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk_loss, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, lc), unroll=n_chunks if unroll else 1)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ===========================================================================
+# Decode
+# ===========================================================================
+
+def _cache_len(cfg: ModelConfig, slot: int, seq_len: int) -> int:
+    w = cfg.window_pattern[slot]
+    return min(w, seq_len) if w > 0 else seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=COMPUTE_DTYPE, abstract: bool = False):
+    """Decode-cache pytree.  Per slot: KVCache stacked (G, B, KVH, S_w, hd)
+    (ring buffer of the slot's window), or MLA / SSM caches.  ``length`` is
+    a shared scalar.  ``abstract=True`` returns ShapeDtypeStructs."""
+    def mk(shape, dt):
+        return (jax.ShapeDtypeStruct(shape, dt) if abstract
+                else jnp.zeros(shape, dt))
+    G = cfg.num_groups
+    cache: Dict[str, Any] = {"length": mk((), jnp.int32)}
+    slots = []
+    for slot in range(cfg.period):
+        entry: Dict[str, Any] = {}
+        if cfg.has_attention:
+            Sw = _cache_len(cfg, slot, seq_len)
+            if cfg.attention == "mla":
+                entry["mla"] = {
+                    "c_kv": mk((G, batch, Sw, cfg.kv_lora_rank), dtype),
+                    "k_rope": mk((G, batch, Sw, cfg.qk_rope_dim), dtype),
+                }
+            else:
+                entry["kv"] = {
+                    "k": mk((G, batch, cfg.num_kv_heads, Sw, cfg.head_dim), dtype),
+                    "v": mk((G, batch, cfg.num_kv_heads, Sw, cfg.head_dim), dtype),
+                    "pos": mk((G, Sw), jnp.int32),
+                }
+        if cfg.has_ssm:
+            entry["ssm"] = {
+                "conv": mk((G, batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+                "state": mk((G, batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+            }
+        slots.append(entry)
+    cache["slots"] = slots
+    if cfg.first_dense_layers:
+        Sw = _cache_len(cfg, 0, seq_len)
+        if cfg.attention == "mla":
+            mk_entry = lambda: {"mla": {
+                "c_kv": mk((batch, Sw, cfg.kv_lora_rank), dtype),
+                "k_rope": mk((batch, Sw, cfg.qk_rope_dim), dtype)}}
+        else:
+            mk_entry = lambda: {"kv": {
+                "k": mk((batch, cfg.num_kv_heads, Sw, cfg.head_dim), dtype),
+                "v": mk((batch, cfg.num_kv_heads, Sw, cfg.head_dim), dtype),
+                "pos": mk((Sw,), jnp.int32)}}
+        cache["dense_prefix"] = [mk_entry()
+                                 for _ in range(cfg.first_dense_layers)]
+    if cfg.encoder_layers:
+        # static cross-attention K/V from the encoder (computed at prefill)
+        cache["cross"] = {
+            "k": mk((G, batch, cfg.num_kv_heads, cfg.num_frames, cfg.head_dim),
+                    dtype),
+            "v": mk((G, batch, cfg.num_kv_heads, cfg.num_frames, cfg.head_dim),
+                    dtype),
+        }
+    return cache
+
+
+def _decode_gqa(cfg, h, pa, kv, window, q_pos):
+    """One-token GQA against a ring-buffer cache slice.
+    kv: {k (B,KVH,Sw,hd), v, pos (Sw,)}; returns (out, new kv)."""
+    B = h.shape[0]
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    Sw = kv["k"].shape[2]
+    q = (h @ pa["wq"]).reshape(B, 1, H, hd)
+    k = (h @ pa["wk"]).reshape(B, 1, KVH, hd)
+    v = (h @ pa["wv"]).reshape(B, 1, KVH, hd)
+    cos, sin = _rope_scalar(cfg, q_pos)
+    q = attn_lib.apply_rope_bshd(q, cos, sin)
+    k = attn_lib.apply_rope_bshd(k, cos, sin)
+    slot_idx = q_pos % Sw
+    nk = kv["k"].at[:, :, slot_idx, :].set(k[:, 0].astype(kv["k"].dtype))
+    nv = kv["v"].at[:, :, slot_idx, :].set(v[:, 0].astype(kv["v"].dtype))
+    npos = kv["pos"].at[slot_idx].set(q_pos)
+    qg = (q[:, 0] * hd ** -0.5).reshape(B, KVH, H // KVH, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg, nk.astype(jnp.float32))
+    # Ring-buffer validity: a slot's most recent write is always within the
+    # last Sw positions, so (npos > q_pos - Sw) enforces the window exactly
+    # when Sw == window; (arange <= q_pos) masks not-yet-filled slots before
+    # the first wrap (their pos defaults to 0).
+    valid = (npos <= q_pos) & (npos > q_pos - Sw) & (jnp.arange(Sw) <= q_pos)
+    s = jnp.where(valid[None, None, None, :], s, attn_lib.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksh->bkgh", p, nv.astype(jnp.float32))
+    o = o.reshape(B, 1, H * hd).astype(h.dtype)
+    return (o @ pa["wo"]), {"k": nk, "v": nv, "pos": npos}
+
+
+def _rope_scalar(cfg: ModelConfig, pos: jax.Array):
+    hd = (cfg.qk_rope_dim if cfg.attention == "mla" else cfg.head_dim)
+    half = hd // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32) * freqs
+    return jnp.cos(ang)[None, :], jnp.sin(ang)[None, :]
+
+
+def _decode_layer(cfg: ModelConfig, x, pl, entry, window, q_pos,
+                  cross_kv=None):
+    pl = _cast_params(pl)
+    h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    mix = 0.0
+    new_entry = {}
+    if cfg.has_attention:
+        if cfg.attention == "mla":
+            mla = entry["mla"]
+            cache = MLACache(mla["c_kv"], mla["k_rope"], q_pos + 1)
+            a, nc = attn_lib.mla_attend_decode(
+                h, pl["attn"], cache, num_heads=cfg.num_heads,
+                qk_nope=cfg.qk_nope_dim, qk_rope=cfg.qk_rope_dim,
+                v_head=cfg.v_head_dim, kv_lora=cfg.kv_lora_rank,
+                rope_cos=_rope_scalar(cfg, q_pos)[0],
+                rope_sin=_rope_scalar(cfg, q_pos)[1])
+            new_entry["mla"] = {"c_kv": nc.c_kv, "k_rope": nc.k_rope}
+        else:
+            a, nkv = _decode_gqa(cfg, h, pl["attn"], entry["kv"], window, q_pos)
+            new_entry["kv"] = nkv
+        mix = mix + a
+    if cfg.has_ssm:
+        hs = rms_norm(x, pl["ln_ssm"], cfg.norm_eps) if cfg.parallel_ssm else h
+        sc = ssm_lib.SSMCache(entry["ssm"]["conv"], entry["ssm"]["state"])
+        s, nc = ssm_lib.mamba_decode_step(hs, pl["ssm"], sc,
+                                          n_state=cfg.ssm_state,
+                                          conv_kernel=cfg.conv_kernel)
+        new_entry["ssm"] = {"conv": nc.conv, "state": nc.state}
+        mix = (mix + s) * (0.5 if cfg.parallel_ssm else 1.0)
+    x = x + mix
+    if cross_kv is not None:
+        hx = rms_norm(x, pl["ln_x"], cfg.norm_eps)
+        xa = _decode_cross(cfg, hx, pl["xattn"], cross_kv)
+        x = x + xa
+    if "moe" not in pl and "mlp" not in pl:    # ssm-only layer: no ffn
+        return x, new_entry
+    h2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    if "moe" in pl:            # dense-prefix layers carry "mlp" instead
+        m = _moe_dispatch(cfg, h2, pl["moe"])
+    else:
+        m = _mlp_apply(cfg, h2, pl["mlp"])
+    return x + m, new_entry
+
+
+def _decode_cross(cfg, x, p, cross_kv):
+    B = x.shape[0]
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    qg = (q[:, 0] * hd ** -0.5).reshape(B, KVH, H // KVH, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg, cross_kv["k"].astype(jnp.float32))
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksh->bkgh", pr, cross_kv["v"].astype(jnp.float32))
+    o = o.reshape(B, 1, H * hd).astype(x.dtype)
+    return o @ p["wo"]
+
+
+def decode_step(cfg: ModelConfig, params, tokens: jax.Array, cache,
+                unroll: bool = False):
+    """One decode step.  tokens: (B, 1) int32.  Returns (logits (B, vocab),
+    new cache).  q_pos = cache['length'] (0-based position of this token)."""
+    q_pos = cache["length"]
+    cache = dict(cache)                      # never mutate the caller's tree
+    x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+    if "dense_prefix" in cache:
+        new_prefix = []
+        for li, pl in enumerate(params.get("dense_prefix", [])):
+            x, new_entry = _decode_layer(cfg, x, pl,
+                                         cache["dense_prefix"][li],
+                                         cfg.window_pattern[0], q_pos)
+            new_prefix.append(new_entry)
+        cache["dense_prefix"] = new_prefix
+
+    def group_body(carry, xs):
+        h = carry
+        group_params, group_cache, cross = xs
+        new_slots = []
+        for slot in range(cfg.period):
+            pl = jax.tree_util.tree_map(lambda a: a[slot], group_params)
+            h, ne = _decode_layer(cfg, h, pl, group_cache["slots"][slot],
+                                  cfg.window_pattern[slot], q_pos,
+                                  cross_kv=cross)
+            new_slots.append(ne)
+        return h, {"slots": new_slots}
+
+    # per-slot caches ride the scan as xs/ys: every leaf is already (G, ...)
+    slot_caches = {"slots": cache["slots"]}
+    cross = cache.get("cross")
+    if cross is None:
+        def body(c, xs2):
+            return group_body(c, (xs2[0], xs2[1], None))
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], slot_caches),
+                                     unroll=cfg.num_groups if unroll else 1)
+    else:
+        x, new_caches = jax.lax.scan(group_body, x,
+                                     (params["layers"], slot_caches, cross),
+                                     unroll=cfg.num_groups if unroll else 1)
+    cache["slots"] = new_caches["slots"]
+    cache["length"] = q_pos + 1
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    lm_head = (params["embed"].T if cfg.tie_embeddings
+               else params["lm_head"]).astype(COMPUTE_DTYPE)
+    logits = (x[:, 0] @ lm_head).astype(jnp.float32)
+    return logits, cache

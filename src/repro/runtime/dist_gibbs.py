@@ -1,0 +1,367 @@
+"""Distributed minibatch Gibbs engine (the paper's workload at scale).
+
+Parallelization (see DESIGN.md §3):
+* chains sharded over the data axes ("pod", "data") — embarrassing;
+* the *graph* sharded over "model": each model shard owns a column slice of
+  the interaction matrix W; state x is sharded the same way (each shard
+  stores the variable values of its columns).
+
+Per MGPMH update (one variable i per chain, all chains in parallel):
+  1. every shard computes its **partial exact pass**
+     ``eps_hat_u += sum_{j in cols} W[i, j] d(u, x_j)`` with the
+     bucket-energy kernel, then one ``psum`` over "model" — this is the
+     paper's O(Delta) term, now O(Delta / n_shards) per shard;
+  2. the **Poisson minibatch factorizes across shards**: independent
+     ``s_phi ~ Poisson(lam M_phi / L)`` split by column ownership are still
+     independent Poissons (thinning), so each shard draws its own local
+     minibatch with rate ``lam * L_i^loc / L`` from per-shard alias tables
+     and partial minibatch energies are psum'd — *statistically identical*
+     to the sequential algorithm, no communication beyond the same psum;
+  3. proposal, acceptance and the x update are computed identically on all
+     shards from shared PRNG keys — the accepted value lands in the one
+     shard that owns column i with no extra collective.
+
+Chromatic (graph-colored) block updates for *sparse* graphs are the
+beyond-paper throughput lever: non-adjacent variables update simultaneously
+(`make_chromatic_gibbs_step`), multiplying per-sweep throughput by the color
+class size while remaining a valid Gibbs sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.factor_graph import MatchGraph, build_alias_table
+from ..kernels.ops import bucket_energy
+
+__all__ = ["ShardedMatchGraph", "DistState", "make_dist_gibbs_step",
+           "make_dist_mgpmh_step", "make_chromatic_gibbs_step",
+           "make_lattice_ising", "dist_init_state"]
+
+
+# ---------------------------------------------------------------------------
+# Graph sharding
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedMatchGraph:
+    """MatchGraph pre-split into ``n_shards`` column slices.
+
+    All arrays carry a leading shard axis that shard_map consumes:
+      W_cols    (S, n, n_loc)   W[:, cols_s]
+      row_prob  (S, n, n_loc)   per-row alias tables over local columns
+      row_alias (S, n, n_loc)
+      row_sum   (S, n)          L_i^loc = sum_{j in cols_s} W[i, j]
+    Scalars (D, psi, L, n) are static.
+    """
+    W_cols: jax.Array
+    row_prob: jax.Array
+    row_alias: jax.Array
+    row_sum: jax.Array
+    # per-shard factor tables for global (eq.-2) estimators: unordered pair
+    # {a,b} (a<b) is owned by the shard owning column b; padded to F_max.
+    pair_a: jax.Array      # (S, F_max) int32 global ids
+    pair_b: jax.Array      # (S, F_max)
+    pair_prob: jax.Array   # (S, F_max) alias tables over local factors
+    pair_alias: jax.Array  # (S, F_max)
+    psi_loc: jax.Array     # (S,) sum of local M_phi
+    D: int
+    psi: float
+    L: float
+    n: int
+    n_shards: int
+
+    @property
+    def n_loc(self) -> int:
+        return self.W_cols.shape[-1]
+
+    @staticmethod
+    def from_graph(g: MatchGraph, n_shards: int) -> "ShardedMatchGraph":
+        W = np.asarray(g.W)
+        n = W.shape[0]
+        assert n % n_shards == 0, (n, n_shards)
+        n_loc = n // n_shards
+        W_cols = np.stack([W[:, s * n_loc:(s + 1) * n_loc]
+                           for s in range(n_shards)])
+        rp = np.zeros((n_shards, n, n_loc), np.float32)
+        ra = np.zeros((n_shards, n, n_loc), np.int32)
+        for s in range(n_shards):
+            for i in range(n):
+                rp[s, i], ra[s, i] = build_alias_table(W_cols[s, i])
+        row_sum = W_cols.sum(-1)
+        # factor shards: pair {a,b} (a<b) owned by b's shard
+        a_all, b_all, M_all, owner = [], [], [], []
+        iu, ju = np.triu_indices(n, k=1)
+        M = W[iu, ju]
+        keep = M > 0
+        iu, ju, M = iu[keep], ju[keep], M[keep]
+        own = ju // n_loc
+        F_max = max(int((own == s).sum()) for s in range(n_shards))
+        pa = np.zeros((n_shards, F_max), np.int32)
+        pb = np.zeros((n_shards, F_max), np.int32)
+        pp = np.zeros((n_shards, F_max), np.float32)
+        pl = np.zeros((n_shards, F_max), np.int32)
+        psi_loc = np.zeros(n_shards, np.float32)
+        for s in range(n_shards):
+            m = own == s
+            f = int(m.sum())
+            pa[s, :f], pb[s, :f] = iu[m], ju[m]
+            Ms = np.zeros(F_max); Ms[:f] = M[m]
+            pp[s], pl[s] = build_alias_table(Ms)
+            psi_loc[s] = Ms.sum()
+        return ShardedMatchGraph(
+            W_cols=jnp.asarray(W_cols, jnp.float32),
+            row_prob=jnp.asarray(rp), row_alias=jnp.asarray(ra),
+            row_sum=jnp.asarray(row_sum, jnp.float32),
+            pair_a=jnp.asarray(pa), pair_b=jnp.asarray(pb),
+            pair_prob=jnp.asarray(pp), pair_alias=jnp.asarray(pl),
+            psi_loc=jnp.asarray(psi_loc),
+            D=g.D, psi=g.psi, L=g.L, n=n, n_shards=n_shards)
+
+
+class DistState(NamedTuple):
+    x: jax.Array         # (C_loc, n) chain states — replicated over "model"
+    cache: jax.Array     # (C_loc,) cached xi (DoubleMIN); zeros otherwise
+    key: jax.Array       # per-dp-shard key (shared across model shards)
+    accepts: jax.Array   # (C_loc,) int32
+    marg: jax.Array      # (C_loc, n_loc, D) running one-hot sums (sharded)
+    count: jax.Array     # () int32 samples accumulated
+
+
+def dist_init_state(n_chains_loc: int, n: int, n_loc: int, D: int,
+                    key: jax.Array) -> DistState:
+    return DistState(
+        x=jnp.zeros((n_chains_loc, n), jnp.int32),
+        cache=jnp.zeros((n_chains_loc,), jnp.float32),
+        key=key,
+        accepts=jnp.zeros((n_chains_loc,), jnp.int32),
+        marg=jnp.zeros((n_chains_loc, n_loc, D), jnp.float32),
+        count=jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# shared pieces (run inside shard_map; 'model' axis bound)
+# ---------------------------------------------------------------------------
+
+def _split_key(state):
+    """Per-dp-shard key arrives as (1, 2) under shard_map."""
+    def norm(k):
+        return k.reshape(state.key.shape)
+    return norm, state.key.reshape(2)
+
+
+def _x_cols(x, shard_idx, n_loc):
+    """This shard's column slice of the replicated state."""
+    return jax.lax.dynamic_slice_in_dim(x, shard_idx * n_loc, n_loc, axis=1)
+
+
+def _exact_partial(gs: ShardedMatchGraph, sh, x, i, shard_idx, impl):
+    """Partial exact conditional energies over local columns (the paper's
+    O(Delta) term, O(Delta / n_shards) per shard)."""
+    w_rows = sh["W_cols"][i]                  # (C, n_loc)
+    return bucket_energy(w_rows, _x_cols(x, shard_idx, gs.n_loc), gs.D,
+                         impl=impl)
+
+
+def _local_minibatch_eps(gs, sh, state_x, i, key, lam, capacity, shard_idx,
+                         impl):
+    """MGPMH minibatch energies via per-shard Poisson thinning.  Returns
+    partial (C, D) to be psum'd."""
+    C = state_x.shape[0]
+    kb, kj, ku = jax.random.split(key, 3)
+    lam_loc = lam * sh["row_sum"][i] / gs.L               # (C,)
+    B = jnp.minimum(jax.random.poisson(kb, lam_loc, (C,)), capacity)
+    idx = jax.random.randint(kj, (C, capacity), 0, gs.n_loc)
+    u = jax.random.uniform(ku, (C, capacity))
+    # joint (row, col) gather — never materializes the (C, n_loc) rows
+    prob = sh["row_prob"][i[:, None], idx]
+    alias = sh["row_alias"][i[:, None], idx]
+    j_loc = jnp.where(u < prob, idx, alias)               # (C, K) local ids
+    mask = (jnp.arange(capacity)[None, :] < B[:, None])
+    j_glob = j_loc + shard_idx * gs.n_loc
+    vals = jnp.take_along_axis(state_x, j_glob, axis=1)   # (C, K)
+    w = (gs.L / lam) * mask.astype(jnp.float32)
+    return bucket_energy(w, vals, gs.D, impl=impl)
+
+
+def _global_estimate(gs, sh, x, i, v, key, lam2, capacity2):
+    """Partial eq.-(2) estimate of zeta(x; x_i<-v) over this shard's
+    factors (Poisson thinning: rate lam2 * psi_loc / Psi).  psum over
+    "model" completes it.  Returns (C,) partial match weights."""
+    C = x.shape[0]
+    kb, kj, ku = jax.random.split(key, 3)
+    lam_loc = lam2 * sh["psi_loc"] / gs.psi
+    B = jnp.minimum(jax.random.poisson(kb, lam_loc, (C,)), capacity2)
+    F = sh["pair_prob"].shape[0]
+    idx = jax.random.randint(kj, (C, capacity2), 0, F)
+    u = jax.random.uniform(ku, (C, capacity2))
+    f = jnp.where(u < sh["pair_prob"][idx], sh["pair_alias"][idx], idx)
+    a = sh["pair_a"][f]                                   # (C, K2) global
+    b = sh["pair_b"][f]
+    xa = jnp.take_along_axis(x, a, axis=1)
+    xb = jnp.take_along_axis(x, b, axis=1)
+    xa = jnp.where(a == i[:, None], v[:, None], xa)
+    xb = jnp.where(b == i[:, None], v[:, None], xb)
+    mask = jnp.arange(capacity2)[None, :] < B[:, None]
+    matches = jnp.sum((xa == xb) & mask, axis=1).astype(jnp.float32)
+    return jnp.log1p(gs.psi / lam2) * matches
+
+
+def _accum_marg(state, x, shard_idx, n_loc, D):
+    return state.marg + jax.nn.one_hot(
+        _x_cols(x, shard_idx, n_loc), D, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Vanilla Gibbs (Algorithm 1), distributed
+# ---------------------------------------------------------------------------
+
+def make_dist_gibbs_step(gs: ShardedMatchGraph, *, mp_axis: str = "model",
+                         impl: str = "jnp"):
+    """step(state, shard_arrays) for use inside shard_map."""
+    n, n_loc, D = gs.n, gs.n_loc, gs.D
+
+    def step(state: DistState, sh) -> DistState:
+        shard_idx = jax.lax.axis_index(mp_axis)
+        sh = {k: v[0] for k, v in sh.items()}   # strip size-1 shard axes
+        norm, k0 = _split_key(state)
+        key, ki, kv = jax.random.split(k0, 3)
+        C = state.x.shape[0]
+        i = jax.random.randint(ki, (C,), 0, n)
+        part = _exact_partial(gs, sh, state.x, i, shard_idx, impl)
+        eps = jax.lax.psum(part, mp_axis)
+        v = jax.random.categorical(kv, eps).astype(jnp.int32)
+        x = state.x.at[jnp.arange(C), i].set(v)
+        return state._replace(x=x, key=norm(key),
+                              marg=_accum_marg(state, x, shard_idx, n_loc, D),
+                              count=state.count + 1)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# MGPMH (Algorithm 4), distributed
+# ---------------------------------------------------------------------------
+
+def make_dist_mgpmh_step(gs: ShardedMatchGraph, lam: float, capacity: int,
+                         *, mp_axis: str = "model", impl: str = "jnp"):
+    n, n_loc, D = gs.n, gs.n_loc, gs.D
+
+    def step(state: DistState, sh) -> DistState:
+        shard_idx = jax.lax.axis_index(mp_axis)
+        sh = {k: v[0] for k, v in sh.items()}
+        norm, k0 = _split_key(state)
+        key, ki, kd, kv, ka = jax.random.split(k0, 5)
+        C = state.x.shape[0]
+        i = jax.random.randint(ki, (C,), 0, n)
+
+        kd_loc = jax.random.fold_in(kd, shard_idx)  # per-shard thinning
+        eps = jax.lax.psum(
+            _local_minibatch_eps(gs, sh, state.x, i, kd_loc, lam, capacity,
+                                 shard_idx, impl), mp_axis)
+        v = jax.random.categorical(kv, eps).astype(jnp.int32)
+
+        exact = jax.lax.psum(
+            _exact_partial(gs, sh, state.x, i, shard_idx, impl), mp_axis)
+        rows = jnp.arange(C)
+        xi = state.x[rows, i]
+        log_a = (exact[rows, v] - exact[rows, xi]
+                 + eps[rows, xi] - eps[rows, v])
+        accept = jnp.log(jax.random.uniform(ka, (C,))) < log_a
+        x = state.x.at[rows, i].set(jnp.where(accept, v, xi))
+        return state._replace(
+            x=x, key=norm(key),
+            accepts=state.accepts + accept.astype(jnp.int32),
+            marg=_accum_marg(state, x, shard_idx, n_loc, D),
+            count=state.count + 1)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# DoubleMIN-Gibbs (Algorithm 5), distributed — the paper's own answer to the
+# O(Delta) exact pass: replace it with a second (bias-adjusted) minibatch.
+# Drops the dominant memory term from O(C * n / n_shards) W-row reads to
+# O(C * K2) factor reads per update (EXPERIMENTS.md §Perf, gibbs cell).
+# ---------------------------------------------------------------------------
+
+def make_dist_double_min_step(gs: ShardedMatchGraph, lam1: float,
+                              capacity1: int, lam2: float, capacity2: int,
+                              *, mp_axis: str = "model", impl: str = "jnp"):
+    n, n_loc, D = gs.n, gs.n_loc, gs.D
+
+    def step(state: DistState, sh) -> DistState:
+        shard_idx = jax.lax.axis_index(mp_axis)
+        sh = {k: v[0] for k, v in sh.items()}
+        norm, k0 = _split_key(state)
+        key, ki, kd, kv, kg, ka = jax.random.split(k0, 6)
+        C = state.x.shape[0]
+        i = jax.random.randint(ki, (C,), 0, n)
+
+        kd_loc = jax.random.fold_in(kd, shard_idx)
+        eps = jax.lax.psum(
+            _local_minibatch_eps(gs, sh, state.x, i, kd_loc, lam1, capacity1,
+                                 shard_idx, impl), mp_axis)
+        v = jax.random.categorical(kv, eps).astype(jnp.int32)
+
+        kg_loc = jax.random.fold_in(kg, shard_idx)
+        xi_y = jax.lax.psum(
+            _global_estimate(gs, sh, state.x, i, v, kg_loc, lam2, capacity2),
+            mp_axis)
+        rows = jnp.arange(C)
+        xi = state.x[rows, i]
+        log_a = (xi_y - state.cache) + (eps[rows, xi] - eps[rows, v])
+        accept = jnp.log(jax.random.uniform(ka, (C,))) < log_a
+        x = state.x.at[rows, i].set(jnp.where(accept, v, xi))
+        cache = jnp.where(accept, xi_y, state.cache)
+        return state._replace(
+            x=x, cache=cache, key=norm(key),
+            accepts=state.accepts + accept.astype(jnp.int32),
+            marg=_accum_marg(state, x, shard_idx, n_loc, D),
+            count=state.count + 1)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Chromatic block Gibbs (beyond-paper, sparse graphs)
+# ---------------------------------------------------------------------------
+
+def make_lattice_ising(grid: int, beta: float = 0.4) -> MatchGraph:
+    """Nearest-neighbor Ising on a grid (sparse, 2-colorable): the workload
+    where chromatic scheduling applies."""
+    n = grid * grid
+    W = np.zeros((n, n))
+    for r in range(grid):
+        for c in range(grid):
+            i = r * grid + c
+            for (dr, dc) in ((0, 1), (1, 0)):
+                rr, cc = r + dr, c + dc
+                if rr < grid and cc < grid:
+                    j = rr * grid + cc
+                    W[i, j] = W[j, i] = 2.0 * beta   # ising match weight
+    return MatchGraph.from_interactions(W, match_weight_scale=1.0, D=2)
+
+
+def lattice_colors(grid: int) -> np.ndarray:
+    r, c = np.divmod(np.arange(grid * grid), grid)
+    return ((r + c) % 2).astype(np.int32)
+
+
+def make_chromatic_gibbs_step(g: MatchGraph, colors: np.ndarray):
+    """Update every variable of one color class simultaneously — exact for
+    graphs where same-color variables share no factor.  Single-shard
+    (replicated graph) variant; one step = one color class."""
+    colors_j = jnp.asarray(colors)
+    D = g.D
+
+    def step(x, key, color):
+        kv, = jax.random.split(key, 1)
+        onehot = jax.nn.one_hot(x, D, dtype=jnp.float32)       # (C, n, D)
+        eps = jnp.einsum("ij,cjd->cid", g.W, onehot)           # all cond energies
+        v = jax.random.categorical(kv, eps, axis=-1).astype(jnp.int32)
+        upd = (colors_j[None, :] == color)
+        return jnp.where(upd, v, x)
+    return step

@@ -1,0 +1,106 @@
+"""Fault tolerance & straggler mitigation for long-running loops.
+
+Pieces:
+* ``StepWatchdog`` — EMA step timer; flags stragglers (> k x EMA) and keeps
+  counters a scheduler can act on (on multi-host deployments the hook is
+  where slow-host re-dispatch / hot-spare promotion plugs in; on one host it
+  records and logs).
+* ``run_with_restarts`` — supervised execution: a step function that raises
+  is retried from the latest checkpoint up to ``max_restarts`` times
+  (simulated-preemption tests exercise this path).
+* ``Heartbeat`` — wall-clock liveness file other processes can monitor.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Optional
+
+__all__ = ["StepWatchdog", "run_with_restarts", "Heartbeat"]
+
+
+class StepWatchdog:
+    def __init__(self, slow_factor: float = 3.0, ema: float = 0.9):
+        self.slow_factor = slow_factor
+        self.ema_coef = ema
+        self.ema_time: Optional[float] = None
+        self.straggler_steps = 0
+        self.total_steps = 0
+        self._t0: Optional[float] = None
+
+    def __enter__(self):
+        self._t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.monotonic() - self._t0
+        self.total_steps += 1
+        if self.ema_time is None:
+            self.ema_time = dt
+        else:
+            if dt > self.slow_factor * self.ema_time:
+                self.straggler_steps += 1
+                self.on_straggler(dt)
+            self.ema_time = (self.ema_coef * self.ema_time
+                             + (1 - self.ema_coef) * dt)
+        return False
+
+    def on_straggler(self, dt: float):
+        """Override/hook: slow-step handler (re-dispatch, alerting, ...)."""
+        print(f"[watchdog] straggler step: {dt*1e3:.1f} ms "
+              f"(ema {self.ema_time*1e3:.1f} ms)")
+
+    def stats(self):
+        return {"ema_step_s": self.ema_time,
+                "stragglers": self.straggler_steps,
+                "steps": self.total_steps}
+
+
+def run_with_restarts(make_state: Callable[[], object],
+                      step_fn: Callable[[object, int], object],
+                      *, num_steps: int, max_restarts: int = 3,
+                      on_restart: Optional[Callable[[int], object]] = None):
+    """Run ``num_steps`` of ``step_fn(state, step) -> state`` restarting on
+    exceptions.  ``make_state()`` builds initial state; ``on_restart(step)``
+    (if given) must return (state, resume_step) — typically a checkpoint
+    restore.  Returns (state, restarts)."""
+    restarts = 0
+    state = make_state()
+    step = 0
+    while step < num_steps:
+        try:
+            state = step_fn(state, step)
+            step += 1
+        except Exception as e:   # noqa: BLE001 — supervision boundary
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            print(f"[fault] step {step} failed ({type(e).__name__}: {e}); "
+                  f"restart {restarts}/{max_restarts}")
+            if on_restart is not None:
+                state, step = on_restart(step)
+            else:
+                state = make_state()
+                step = 0
+    return state, restarts
+
+
+class Heartbeat:
+    def __init__(self, path: str, interval_s: float = 30.0):
+        self.path = path
+        self.interval = interval_s
+        self._last = 0.0
+
+    def beat(self, step: int, **info):
+        now = time.time()
+        if now - self._last < self.interval:
+            return
+        self._last = now
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"time": now, "step": step, **info}, f)
+        os.replace(tmp, self.path)

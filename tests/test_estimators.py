@@ -1,0 +1,86 @@
+"""Minibatch estimator correctness (eq. 2, Lemma 1, Lemma 2)."""
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.factor_graph import make_ising_graph, make_potts_graph
+from repro.core.estimators import (lemma2_lambda, recommended_capacity,
+                                   capacity_overflow_prob,
+                                   draw_global_minibatch, min_gibbs_estimate)
+
+
+def test_lemma1_unbiasedness_closed_form():
+    """E[exp eps_x] = exp(zeta(x)) via the Poisson MGF — exact identity.
+
+    For a match graph each factor contributes
+    E[exp(s log(1 + Psi/(lam M)) * d)] = exp(M * lam/Psi * (Psi/lam) d)
+    = exp(phi).  We verify the aggregated identity numerically by summing
+    the per-factor MGF logs."""
+    g = make_ising_graph(grid=3, beta=0.4)
+    lam = 20.0
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 2, g.n), jnp.int32)
+    W = np.asarray(g.W)
+    a, b = np.asarray(g.pair_a), np.asarray(g.pair_b)
+    xs = np.asarray(x)
+    # per-factor: mu_phi = lam*M/Psi, weight w = log1p(Psi/(lam M) phi) with
+    # phi = M * match -> MGF log = mu (e^w - 1) = lam M/Psi * Psi/(lam M) phi
+    M = W[a, b]
+    phi = M * (xs[a] == xs[b])
+    mu = lam * M / g.psi
+    w = np.log1p(g.psi * phi / (lam * M))
+    log_mgf = np.sum(mu * (np.exp(w) - 1.0))
+    assert log_mgf == pytest.approx(phi.sum(), rel=1e-9)
+
+
+def test_lemma1_unbiasedness_monte_carlo():
+    g = make_ising_graph(grid=3, beta=0.3)
+    lam = 30.0
+    cap = recommended_capacity(lam)
+    x = jnp.zeros((g.n,), jnp.int32)        # all-equal: every factor matches
+    zeta = float(g.energy(x))
+    keys = jax.random.split(jax.random.PRNGKey(1), 60_000)
+
+    def one(k):
+        idx, B = draw_global_minibatch(k, g, lam, cap)
+        return min_gibbs_estimate(g, x, idx, B, lam)
+    eps = jax.vmap(one)(keys)
+    est = jax.scipy.special.logsumexp(eps) - math.log(len(keys))
+    # E[exp eps] = exp(zeta): log-mean-exp of samples ~ zeta
+    assert abs(float(est) - zeta) < 0.05 * max(zeta, 1.0)
+
+
+def test_lemma2_concentration():
+    """P(|eps - zeta| >= delta) <= a with the Lemma-2 lambda."""
+    g = make_ising_graph(grid=3, beta=0.25)
+    delta, a = 1.0, 0.1
+    lam = lemma2_lambda(g.psi, delta, a)
+    cap = recommended_capacity(lam)
+    x = jnp.zeros((g.n,), jnp.int32)
+    zeta = float(g.energy(x))
+    keys = jax.random.split(jax.random.PRNGKey(2), 4000)
+
+    def one(k):
+        idx, B = draw_global_minibatch(k, g, lam, cap)
+        return min_gibbs_estimate(g, x, idx, B, lam)
+    eps = np.asarray(jax.vmap(one)(keys))
+    fail = np.mean(np.abs(eps - zeta) >= delta)
+    assert fail <= a        # Lemma 2 bound (typically far smaller)
+
+
+def test_capacity_overflow():
+    lam = 100.0
+    cap = recommended_capacity(lam, tail=1e-8)
+    assert cap > lam
+    assert float(capacity_overflow_prob(lam, cap)) < 1e-8
+    # sanity: capacity at the mean overflows ~half the time
+    assert float(capacity_overflow_prob(lam, int(lam))) > 0.3
+
+
+def test_lemma2_lambda_formula():
+    psi, delta, a = 10.0, 0.5, 0.05
+    lam = lemma2_lambda(psi, delta, a)
+    assert lam >= 8 * psi**2 / delta**2 * math.log(2 / a) - 1e-6
+    assert lam >= 2 * psi**2 / delta

@@ -1,0 +1,131 @@
+"""Pallas kernel validation: shape/dtype sweep + hypothesis property tests
+against the pure-jnp oracle (interpret mode on CPU)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import bucket_energy
+from repro.kernels.ref import bucket_energy_ref
+
+
+@pytest.mark.parametrize("C,K,D", [
+    (1, 1, 2), (4, 100, 10), (8, 256, 2), (32, 1024, 10),
+    (5, 513, 257), (16, 50, 129), (3, 2000, 4), (7, 131, 128),
+])
+def test_bucket_energy_shapes(C, K, D):
+    rng = np.random.default_rng(C * 1000 + K + D)
+    w = jnp.asarray(rng.normal(size=(C, K)).astype(np.float32))
+    v = jnp.asarray(rng.integers(0, D, (C, K)).astype(np.int32))
+    got = bucket_energy(w, v, D, impl="pallas")
+    want = bucket_energy_ref(w, v, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_bucket_energy_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(4, 64)).astype(dtype))
+    v = jnp.asarray(rng.integers(0, 8, (4, 64)).astype(np.int32))
+    got = bucket_energy(w, v, 8, impl="pallas")
+    want = bucket_energy_ref(w.astype(jnp.float32), v, 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_bucket_energy_masking_semantics():
+    """Out-of-range v (the padding convention) contributes to no bucket."""
+    w = jnp.ones((1, 4), jnp.float32)
+    v = jnp.asarray([[0, 1, 5, 9]], jnp.int32)   # 5, 9 out of range for D=3
+    got = np.asarray(bucket_energy(w, v, 3, impl="pallas"))
+    assert got[0, 0] == 1.0 and got[0, 1] == 1.0 and got[0, 2] == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    C=st.integers(1, 12),
+    K=st.integers(1, 300),
+    D=st.integers(2, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bucket_energy_property(C, K, D, seed):
+    """Property: kernel == oracle == O(CKD) python reference, any shape."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(C, K)).astype(np.float32)
+    v = rng.integers(0, D, (C, K)).astype(np.int32)
+    got = np.asarray(bucket_energy(jnp.asarray(w), jnp.asarray(v), D,
+                                   impl="pallas"))
+    want = np.zeros((C, D), np.float32)
+    for c in range(C):
+        np.add.at(want[c], v[c], w[c])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(K=st.integers(1, 200), seed=st.integers(0, 2**31 - 1))
+def test_bucket_energy_linearity(K, seed):
+    """Property: the op is linear in w."""
+    rng = np.random.default_rng(seed)
+    w1 = jnp.asarray(rng.normal(size=(2, K)).astype(np.float32))
+    w2 = jnp.asarray(rng.normal(size=(2, K)).astype(np.float32))
+    v = jnp.asarray(rng.integers(0, 5, (2, K)).astype(np.int32))
+    a = bucket_energy(w1 + w2, v, 5, impl="pallas")
+    b = bucket_energy(w1, v, 5, impl="pallas") + \
+        bucket_energy(w2, v, 5, impl="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------- flash attention kernel ----------------
+
+def _exact_attention(q, k, v, window, causal):
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    k = jnp.repeat(k, G, 2)
+    v = jnp.repeat(v, G, 2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * hd ** -0.5
+    d = jnp.arange(Sq)[:, None] - jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= d >= 0
+    if window > 0:
+        m &= d < window
+    s = jnp.where(m[None, None], s, -1e30)
+    return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KVH,hd,window,causal", [
+    (2, 128, 128, 4, 2, 64, 0, True),
+    (1, 256, 256, 2, 1, 64, 64, True),     # sliding window
+    (2, 100, 100, 4, 4, 32, 0, True),      # ragged (pad path)
+    (1, 64, 192, 2, 2, 64, 0, False),      # bidirectional, Sq != Sk
+    (1, 128, 128, 2, 2, 128, 32, True),
+])
+def test_flash_attention_kernel(B, Sq, Sk, H, KVH, hd, window, causal):
+    from repro.kernels.ops import flash_attention as fa
+    rng = np.random.default_rng(Sq + Sk + H)
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, Sk, KVH, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, Sk, KVH, hd)).astype(np.float32))
+    got = fa(q, k, v, window=window, causal=causal)
+    want = _exact_attention(q, k, v, window, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(Sq=st.integers(16, 160), hd=st.sampled_from([32, 64]),
+       window=st.sampled_from([0, 32]), seed=st.integers(0, 2**31 - 1))
+def test_flash_attention_property(Sq, hd, window, seed):
+    from repro.kernels.ops import flash_attention as fa
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, Sq, 2, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, Sq, 2, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, Sq, 2, hd)).astype(np.float32))
+    got = fa(q, k, v, window=window, causal=True)
+    want = _exact_attention(q, k, v, window, True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)

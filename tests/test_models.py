@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests (reduced configs) + decode/forward
+consistency of the cache path."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import SMOKES, ARCHS
+from repro.configs.base import SHAPES
+from repro.models import transformer as T
+from repro.launch import steps as steps_lib
+from repro.optim.adamw import adamw_init
+
+
+def _batch(cfg, B=2, S=64, key=jax.random.PRNGKey(0)):
+    toks = jax.random.randint(key, (B, S), 1, cfg.vocab_size, dtype=jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.num_image_tokens:
+        batch["frontend_embeds"] = 0.02 * jnp.ones(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+    if cfg.encoder_layers:
+        batch["frontend_embeds"] = 0.02 * jnp.ones(
+            (B, cfg.num_frames, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(SMOKES))
+def test_arch_forward_and_train_step(name):
+    """One forward + one full train step (loss, grads, AdamW) per arch on
+    the reduced config; asserts finiteness and shape sanity."""
+    cfg = SMOKES[name]
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    opt = adamw_init(params)
+    step = steps_lib.make_train_step(cfg, loss_chunk=32)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_opt.step) == 1
+    # params actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), params, new_params)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("name", sorted(SMOKES))
+def test_arch_decode_steps(name):
+    cfg = SMOKES[name]
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    B = 2
+    cache = T.init_cache(cfg, B, 64)
+    tok = jnp.ones((B, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = T.decode_step(cfg, params, tok, cache)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    assert logits.shape[0] == B
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache["length"]) == 3
+
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "gemma3-12b",
+                                  "hymba-1.5b", "falcon-mamba-7b",
+                                  "deepseek-v2-lite-16b", "h2o-danube-3-4b"])
+def test_decode_matches_forward(name):
+    """The decode/cache path must reproduce the training forward's
+    next-token logits token-by-token (windows, ring buffers, MLA
+    absorption, SSM recurrence all exercised)."""
+    import dataclasses
+    cfg = SMOKES[name]
+    if cfg.is_moe:   # dropless MoE for exact train/decode comparability
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=16.0)
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 1, 24
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 1,
+                              cfg.vocab_size, dtype=jnp.int32)
+    # forward logits at each position
+    h = T.forward(cfg, params, toks, remat=False)
+    lm_head = (params["embed"].T if cfg.tie_embeddings
+               else params["lm_head"]).astype(T.COMPUTE_DTYPE)
+    fwd_logits = np.asarray((h @ lm_head).astype(jnp.float32))
+    # decode token-by-token
+    cache = T.init_cache(cfg, B, S)
+    dec = []
+    for s in range(S):
+        lg, cache = T.decode_step(cfg, params, toks[:, s:s + 1], cache)
+        dec.append(np.asarray(lg))
+    dec_logits = np.stack(dec, axis=1)
+    # compare softmax-normalized top regions (bf16-tolerant)
+    a = jax.nn.log_softmax(jnp.asarray(fwd_logits), -1)
+    b = jax.nn.log_softmax(jnp.asarray(dec_logits), -1)
+    per_pos = np.abs(np.asarray(a) - np.asarray(b)).max(axis=(0, 2))
+    if cfg.is_moe:
+        # a router top-k near-tie can flip one expert choice between the
+        # batched and single-token paths (bf16): allow isolated spikes.
+        assert np.quantile(per_pos, 0.9) < 0.15, per_pos
+    else:
+        assert per_pos.max() < 0.15, per_pos
+    agree = np.mean(np.argmax(fwd_logits, -1) == np.argmax(dec_logits, -1))
+    assert agree >= 0.9, agree   # bf16 near-ties may flip a few argmaxes
+
+
+def test_vocab_padding_invariance():
+    """Padded vocab rows must never receive probability mass in loss."""
+    cfg = SMOKES["whisper-tiny"]
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, S=32)
+    loss = T.loss_fn(cfg, params, batch, loss_chunk=32)
+    assert np.isfinite(float(loss))
+
+
+def test_param_counts_match_published():
+    expect = {"mixtral-8x7b": 46.7e9, "deepseek-v2-lite-16b": 15.7e9,
+              "falcon-mamba-7b": 7.3e9, "tinyllama-1.1b": 1.1e9,
+              "starcoder2-7b": 7.4e9, "gemma3-12b": 11.8e9}
+    for name, n in expect.items():
+        got = T.param_count(ARCHS[name])
+        assert abs(got - n) / n < 0.05, (name, got, n)
+
+
+def test_input_specs_cover_all_cells():
+    for aname, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            if sname in cfg.skip_shapes:
+                continue
+            specs = steps_lib.input_specs(cfg, shape)
+            assert "tokens" in specs
+            tot = shape.seq_len if shape.kind != "decode" else 1
+            if cfg.num_image_tokens and shape.kind != "decode":
+                assert (specs["tokens"].shape[1]
+                        + specs["frontend_embeds"].shape[1]) == shape.seq_len

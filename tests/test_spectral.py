@@ -1,0 +1,117 @@
+"""Exact numerical validation of the paper's Theorems 1-6 via exact
+transition matrices on tiny graphs (see repro.core.spectral)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.factor_graph import TabularPairwiseGraph
+from repro.core import spectral as sp
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return TabularPairwiseGraph.random(n=3, D=2, max_energy=0.6, seed=1,
+                                       connectivity="chain")
+
+
+@pytest.fixture(scope="module")
+def gibbs(tiny):
+    return sp.gibbs_transition_matrix(tiny)
+
+
+def test_gibbs_reversible(gibbs):
+    T, pi, _ = gibbs
+    assert np.abs(T.sum(1) - 1).max() < 1e-12
+    assert sp.reversibility_error(T, pi) < 1e-12
+
+
+def test_thm3_mgpmh_reversible_stationary(tiny):
+    """Theorem 3: MGPMH is reversible with stationary distribution pi."""
+    T, pi = sp.mgpmh_transition_matrix(tiny, lam=4.0, cap=10)
+    assert np.abs(T.sum(1) - 1).max() < 1e-10
+    assert sp.reversibility_error(T, pi) < 1e-12
+    assert np.abs(pi @ T - pi).max() < 1e-12
+
+
+def test_thm4_mgpmh_gap_bound(tiny, gibbs):
+    """Theorem 4: gap(MGPMH) >= exp(-L^2/lam) * gap(Gibbs)."""
+    Tg, pi, _ = gibbs
+    gam = sp.spectral_gap(Tg, pi)
+    for lam in (2.0, 4.0, 8.0):
+        Tm, pim = sp.mgpmh_transition_matrix(tiny, lam=lam, cap=10)
+        gbar = sp.spectral_gap(Tm, pim)
+        assert gbar >= math.exp(-tiny.L ** 2 / lam) * gam - 1e-9
+
+
+def test_thm1_min_gibbs_stationary(tiny):
+    """Theorem 1: the augmented chain is reversible with
+    bar_pi(x,e) ~ mu_x(e) exp(e)."""
+    T, bpi, labels = sp.min_gibbs_augmented_chain(tiny, lam=8.0, cap=8)
+    assert np.abs(T.sum(1) - 1).max() < 1e-10
+    assert sp.reversibility_error(T, bpi) < 1e-12
+    assert np.abs(bpi @ T - bpi).max() < 1e-12
+
+
+def test_lemma1_marginal_matches_pi(tiny):
+    """With the bias-adjusted estimator, the x-marginal of bar_pi equals pi
+    (up to Poisson truncation mass; cap=14 makes that negligible)."""
+    T, bpi, labels = sp.min_gibbs_augmented_chain(tiny, lam=6.0, cap=14)
+    marg = np.zeros(len(tiny.all_states()))
+    for j, (k, _) in enumerate(labels):
+        marg[k] += bpi[j]
+    assert np.abs(marg - tiny.pi()).max() < 2e-4
+
+
+def test_thm2_min_gibbs_gap_bound(tiny, gibbs):
+    """Theorem 2: gap >= exp(-6 delta) gap(Gibbs) where delta bounds
+    |eps - zeta| over the (truncated) estimator support."""
+    Tg, pi, _ = gibbs
+    gam = sp.spectral_gap(Tg, pi)
+    lam = 8.0
+    T, bpi, labels = sp.min_gibbs_augmented_chain(tiny, lam=lam, cap=8)
+    zeta = np.array([tiny.energy(s) for s in tiny.all_states()])
+    sup, _ = sp.enumerate_global_estimator(tiny, lam, 8)
+    delta = max(abs(v - z) for vals, z in zip(sup, zeta) for v in vals)
+    gbar = sp.spectral_gap(T, bpi)
+    assert gbar >= math.exp(-6 * delta) * gam - 1e-9
+
+
+def test_thm5_double_min_stationary(tiny):
+    """Theorem 5: DoubleMIN has the same stationary distribution (form) as
+    MIN-Gibbs with the same estimator."""
+    lam1, lam2 = 4.0, 8.0
+    Td, bpi_d, labels_d = sp.double_min_augmented_chain(tiny, lam1, 9,
+                                                        lam2, 8)
+    Tm, bpi_m, labels_m = sp.min_gibbs_augmented_chain(tiny, lam=lam2, cap=8)
+    assert labels_d == labels_m
+    assert np.allclose(bpi_d, bpi_m)
+    assert np.abs(Td.sum(1) - 1).max() < 1e-10
+    assert sp.reversibility_error(Td, bpi_d) < 1e-12
+    assert np.abs(bpi_d @ Td - bpi_d).max() < 1e-12
+
+
+def test_thm6_double_min_gap_bound(tiny):
+    """Theorem 6: gap(DoubleMIN) >= exp(-4 delta) gap(MGPMH)."""
+    lam1, lam2 = 4.0, 8.0
+    Td, bpi_d, _ = sp.double_min_augmented_chain(tiny, lam1, 9, lam2, 8)
+    Tm, pim = sp.mgpmh_transition_matrix(tiny, lam=lam1, cap=9)
+    zeta = np.array([tiny.energy(s) for s in tiny.all_states()])
+    sup, _ = sp.enumerate_global_estimator(tiny, lam2, 8)
+    delta = max(abs(v - z) for vals, z in zip(sup, zeta) for v in vals)
+    gd = sp.spectral_gap(Td, bpi_d)
+    gm = sp.spectral_gap(Tm, pim)
+    assert gd >= math.exp(-4 * delta) * gm - 1e-9
+
+
+def test_gap_bounds_tighten_with_lambda(tiny, gibbs):
+    """As lam grows, MGPMH's gap approaches the Gibbs gap (Thm 4 factor
+    exp(-L^2/lam) -> 1)."""
+    Tg, pi, _ = gibbs
+    gam = sp.spectral_gap(Tg, pi)
+    gaps = []
+    for lam in (1.0, 4.0, 16.0):
+        Tm, pim = sp.mgpmh_transition_matrix(tiny, lam=lam, cap=12)
+        gaps.append(sp.spectral_gap(Tm, pim))
+    assert gaps[-1] > gaps[0] - 1e-6
+    assert abs(gaps[-1] - gam) < 0.2 * gam
