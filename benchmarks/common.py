@@ -31,8 +31,21 @@ def timed_steps(step_fn, state, n_iters: int, n_chains: int, D: int,
     return us, np.asarray(tr.error), np.asarray(tr.iters)
 
 
-def row(name: str, us: float, derived: str):
+# Machine-readable perf trajectory: every row() call also appends a record
+# here; ``run.py --json PATH`` dumps them as BENCH_kernel.json-style
+# entries {name, us_per_call, derived, [sites_per_sec, ...]}.
+RECORDS: list = []
+
+
+def row(name: str, us: float, derived: str, **extra):
+    """Print one ``name,us_per_call,derived`` CSV row and record it.
+
+    ``extra`` holds machine-readable derived metrics (e.g.
+    ``sites_per_sec=...``) that only land in the JSON record.
+    """
     print(f"{name},{us:.3f},{derived}", flush=True)
+    RECORDS.append({"name": name, "us_per_call": round(us, 3),
+                    "derived": derived, **extra})
 
 
 def bench_graphs(paper_scale: bool):

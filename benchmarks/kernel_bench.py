@@ -38,3 +38,31 @@ def run(paper_scale: bool = False):
         t2 = _time(pl_fn, w, v, reps=3)
         row(f"kernel/pallas_interp_C{C}_K{K}_D{D}", t2 * 1e6,
             "interpret-mode (correctness path; perf target is TPU MXU)")
+    _run_fused_sweep(rng)
+
+
+def _run_fused_sweep(rng):
+    """Fused multi-site sweep kernel (kernels/fused_sweep.py): oracle vs
+    interpret-mode kernel on one moderate shape."""
+    from repro.core.factor_graph import build_alias_table
+    from repro.kernels.ops import mgpmh_sweep
+    C, S, K, D, n = 32, 16, 128, 10, 64
+    A = rng.uniform(0.1, 1.0, (n, n)); A = (A + A.T) / 2
+    np.fill_diagonal(A, 0)
+    rp = np.zeros((n, n), np.float32); ra = np.zeros((n, n), np.int32)
+    for i in range(n):
+        rp[i], ra[i] = build_alias_table(A[i])
+    args = (jnp.asarray(rng.integers(0, D, (C, n)), jnp.int32),
+            jnp.asarray(A, jnp.float32), jnp.asarray(rp), jnp.asarray(ra),
+            jnp.asarray(rng.integers(0, n, (C, S)), jnp.int32),
+            jnp.asarray(rng.integers(0, K + 1, (C, S)), jnp.int32),
+            jnp.asarray(rng.uniform(size=(C, S, K)), jnp.float32),
+            jnp.asarray(rng.uniform(size=(C, S, K)), jnp.float32),
+            jnp.asarray(rng.gumbel(size=(C, S, D)), jnp.float32),
+            jnp.asarray(np.log(rng.uniform(size=(C, S))), jnp.float32))
+    for impl, reps in (("jnp", 20), ("pallas", 1)):
+        fn = jax.jit(lambda *a: mgpmh_sweep(*a, D=D, scale=0.7, impl=impl))
+        t = _time(fn, *args, reps=reps)
+        tag = "oracle" if impl == "jnp" else \
+            "interpret-mode (correctness path; perf target is TPU MXU)"
+        row(f"kernel/fused_sweep_{impl}_C{C}_S{S}_K{K}", t * 1e6, tag)

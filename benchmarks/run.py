@@ -1,24 +1,38 @@
 """Benchmark harness entry point — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV.  ``--paper-scale`` switches the
-Gibbs benchmarks to the paper's exact 20x20 / 10^6-iteration setting."""
+Gibbs benchmarks to the paper's exact 20x20 / 10^6-iteration setting.
+``--json PATH`` additionally writes every row as a BENCH_kernel.json-style
+record (name, us_per_call, derived, plus metric fields like sites_per_sec)
+so the perf trajectory is machine-readable across PRs."""
 import argparse
+import json
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,fig1,fig2,kernel,roofline")
+                    help="comma list: table1,fig1,fig2,kernel,roofline,sweep")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all rows as JSON records to PATH")
     args = ap.parse_args()
-    from . import table1_cost, fig1_min_gibbs, fig2_variants, kernel_bench, \
-        roofline
+    from . import (table1_cost, fig1_min_gibbs, fig2_variants, kernel_bench,
+                   roofline, sweep_bench, common)
     mods = {"table1": table1_cost, "fig1": fig1_min_gibbs,
             "fig2": fig2_variants, "kernel": kernel_bench,
-            "roofline": roofline}
+            "roofline": roofline, "sweep": sweep_bench}
     only = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")
-    for key in only:
-        mods[key].run(paper_scale=args.paper_scale)
+    try:
+        for key in only:
+            mods[key].run(paper_scale=args.paper_scale)
+    finally:
+        # dump whatever was collected even if a later module failed
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(common.RECORDS, f, indent=1)
+            print(f"# wrote {len(common.RECORDS)} records to {args.json}",
+                  flush=True)
 
 
 if __name__ == '__main__':

@@ -1,0 +1,166 @@
+"""Fused multi-site sweep engine throughput: sites/sec of the sweep path
+(S site updates per launch) against the single-site step path, on the
+paper's default 20x20 Potts graph at (C=256 chains, S=64).
+
+Two single-site baselines bracket the comparison:
+  * ``engine_single_site`` — the repo's production dispatch pattern (one
+    jitted call, one alias-table gather pass and one padded bucket_energy
+    call per single-variable update: ``runtime/dist_gibbs.py`` driven like
+    ``launch/gibbs.py`` drives it).  This is the launch-bound path the
+    sweep engine replaces; the headline speedup row is measured against it.
+  * ``scan_single_site``  — the best case for single-site execution: the
+    step fully fused inside ``lax.scan`` (``chains.run_marginal_
+    experiment``), paying no dispatch, only per-update compute + snapshot
+    accumulation.
+
+On CPU the sweep path is the fused jnp schedule (`make_mgpmh_sweep`
+impl='jnp'); the Pallas kernel runs interpret-mode on CPU (correctness,
+not speed — a small row tracks it) and is the TPU path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (make_potts_graph, make_mgpmh_step, make_mgpmh_sweep,
+                        init_chains, init_state, run_marginal_experiment,
+                        recommended_capacity)
+from repro.runtime import dist_gibbs as DG
+from repro.launch.gibbs import shard_map
+from repro.launch.mesh import make_auto_mesh
+from .common import row
+
+
+def _tmin(f, *args, reps=3):
+    out = f(*args)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = f(*args)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _time_experiment(step, st, n_iters, D):
+    return _tmin(lambda s: run_marginal_experiment(
+        s, st, n_iters=n_iters, n_snapshots=1, D=D).error, step)
+
+
+def _engine_single_site_us(g, lam, cap, C, n_calls):
+    """Per-update cost of the dist-engine step dispatched per update
+    (single device / single shard), including marginal accumulation."""
+    gs = DG.ShardedMatchGraph.from_graph(g, 1)
+    step = DG.make_dist_mgpmh_step(gs, lam, cap)
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
+    shard_specs = {
+        "W_cols": P("model", None, None), "row_prob": P("model", None, None),
+        "row_alias": P("model", None, None), "row_sum": P("model", None),
+        "pair_a": P("model", None), "pair_b": P("model", None),
+        "pair_prob": P("model", None), "pair_alias": P("model", None),
+        "psi_loc": P("model")}
+    st_specs = DG.DistState(x=P("data", None), cache=P("data"),
+                            key=P("data"), accepts=P("data"),
+                            marg=P("data", "model", None), count=P())
+    smapped = shard_map(lambda st, sh: step(st, sh), mesh,
+                        (st_specs, shard_specs), st_specs)
+    st = DG.dist_init_state(C, g.n, g.n, g.D,
+                            jax.random.split(jax.random.PRNGKey(0), 1))
+    sh = {k: getattr(gs, k) for k in shard_specs}
+    with mesh:
+        jstep = jax.jit(smapped, donate_argnums=(0,))
+        st = jstep(st, sh)
+        jax.block_until_ready(st.x)
+        t0 = time.perf_counter()
+        for _ in range(n_calls):
+            st = jstep(st, sh)
+        jax.block_until_ready(st.x)
+        dt = time.perf_counter() - t0
+    return dt * 1e6 / (n_calls * C)
+
+
+def run(paper_scale: bool = False):
+    C, S = 256, 64
+    g = make_potts_graph(20, 4.6, 10)          # the paper's Potts model
+    lam = float(4 * g.L ** 2)
+    cap = recommended_capacity(lam)
+    st = init_chains(jax.random.PRNGKey(0), g, C, init_state)
+
+    us_engine = _engine_single_site_us(g, lam, cap, C,
+                                       n_calls=200 if not paper_scale
+                                       else 1000)
+    row(f"sweep/engine_single_site_C{C}", us_engine,
+        f"sites_per_sec={1e6 / us_engine:.0f} (per-update jitted dispatch)",
+        sites_per_sec=round(1e6 / us_engine))
+
+    n_single = 512 if not paper_scale else 4096
+    step = make_mgpmh_step(g, lam=lam, capacity=cap)
+    dt = _time_experiment(step, st, n_single, g.D)
+    us_scan = dt * 1e6 / (n_single * C)
+    row(f"sweep/scan_single_site_C{C}", us_scan,
+        f"sites_per_sec={n_single * C / dt:.0f} (fully lax.scan-fused)",
+        sites_per_sec=round(n_single * C / dt))
+
+    n_sweep = (64 if not paper_scale else 512) * S
+    sweep = make_mgpmh_sweep(g, lam, cap, S, impl="jnp")
+    dt = _time_experiment(sweep, st, n_sweep, g.D)
+    us_sweep = dt * 1e6 / (n_sweep * C)
+    sps = n_sweep * C / dt
+    row(f"sweep/fused_mgpmh_C{C}_S{S}", us_sweep,
+        f"sites_per_sec={sps:.0f} speedup_vs_engine="
+        f"{us_engine / us_sweep:.2f}x speedup_vs_scan="
+        f"{us_scan / us_sweep:.2f}x",
+        sites_per_sec=round(sps),
+        speedup_vs_engine=round(us_engine / us_sweep, 2),
+        speedup_vs_scan=round(us_scan / us_sweep, 2))
+
+    if jax.default_backend() == "tpu":
+        _run_tpu_kernel_rows(g, lam, cap, C, S)
+    else:
+        # fused Pallas kernel, interpret mode (correctness path; perf
+        # target is the TPU MXU) — small shape to keep the interpreter
+        # tractable
+        Ck, Sk = 16, 8
+        stk = init_chains(jax.random.PRNGKey(1), g, Ck, init_state)
+        sweep_k = make_mgpmh_sweep(g, lam, cap, Sk, impl="pallas")
+        t0 = time.perf_counter()
+        jax.block_until_ready(sweep_k(stk).x)
+        dt = time.perf_counter() - t0
+        row(f"sweep/pallas_interp_C{Ck}_S{Sk}", dt * 1e6 / (Sk * Ck),
+            "interpret-mode incl. compile (correctness path)")
+
+
+def _run_tpu_kernel_rows(g, lam, cap, C, S):
+    """Compiled-kernel rows (TPU only): host-rng kernel via the sampler
+    dispatch, plus the in-kernel-PRNG variant (host_rng=False, no random
+    streams in HBM) called on pre-padded inputs."""
+    from repro.kernels.fused_sweep import mgpmh_sweep_pallas_rng
+
+    st = init_chains(jax.random.PRNGKey(1), g, C, init_state)
+    sweep_k = make_mgpmh_sweep(g, lam, cap, S, impl="pallas")
+    dt = _tmin(sweep_k, st)
+    row(f"sweep/pallas_tpu_C{C}_S{S}", dt * 1e6 / (S * C),
+        f"sites_per_sec={S * C / dt:.0f} (compiled, host rng)",
+        sites_per_sec=round(S * C / dt))
+
+    up = lambda v, m: -(-v // m) * m
+    n, D = g.n, g.D
+    Np, Sp, Dp, Kp = up(n, 128), up(S, 128), up(D, 128), up(cap, 128)
+    Cp = up(C, 8)
+    x = jnp.full((Cp, Np), D, jnp.int32).at[:, :n].set(0)
+    pad_sq = lambda t: jnp.pad(t, ((0, Np - n), (0, Np - n)))
+    key = jax.random.PRNGKey(2)
+    i = jnp.pad(jax.random.randint(key, (Cp, S), 0, n), ((0, 0), (0, Sp - S)))
+    B = jnp.full((Cp, Sp), cap, jnp.int32)
+    fn = jax.jit(lambda x, seed: mgpmh_sweep_pallas_rng(
+        x, pad_sq(g.W), pad_sq(g.row_prob), pad_sq(g.row_alias), i, B, seed,
+        n=n, D=D, S=S, Kp=Kp, Dp=Dp, scale=float(g.L / lam)))
+    dt = _tmin(lambda s: fn(x, s), jnp.array([3], jnp.int32))
+    row(f"sweep/pallas_tpu_rng_C{C}_S{S}", dt * 1e6 / (S * C),
+        f"sites_per_sec={S * C / dt:.0f} (compiled, in-kernel PRNG)",
+        sites_per_sec=round(S * C / dt))

@@ -18,6 +18,7 @@ from .estimators import (lemma2_lambda, recommended_capacity,
 from .samplers import (ChainState, init_state, make_gibbs_step,
                        make_min_gibbs_step, make_local_gibbs_step,
                        make_mgpmh_step, make_double_min_step,
+                       make_gibbs_sweep, make_mgpmh_sweep,
                        init_min_gibbs_cache, init_double_min_cache)
 from .chains import (MarginalTrace, init_chains, run_marginal_experiment,
                      marginal_error)

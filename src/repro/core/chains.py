@@ -49,14 +49,31 @@ def marginal_error(marg_sum: jax.Array, count: jax.Array) -> jax.Array:
                                              "n_snapshots", "D"))
 def run_marginal_experiment(step_fn, state: ChainState, *, n_iters: int,
                             n_snapshots: int, D: int) -> MarginalTrace:
-    """Run ``n_iters`` sweeps of ``vmap(step_fn)`` over C chains, collecting
-    the marginal-error trajectory at ``n_snapshots`` evenly spaced points.
+    """Run ``n_iters`` site updates over C chains, collecting the
+    marginal-error trajectory at ``n_snapshots`` evenly spaced points.
 
-    The marginal average uses every iteration's sample (as in the paper),
-    accumulated in float32 (exact for < 2^24 iterations).
+    ``step_fn`` is either a single-chain single-site step (vmapped here, one
+    marginal sample per update, as in the paper) or a batched multi-site
+    sweep from ``samplers.make_*_sweep`` — detected via its ``batched`` /
+    ``updates_per_call`` markers.  A sweep advances ``updates_per_call``
+    site updates per call and contributes ONE marginal sample per call, so
+    snapshot accumulation (the (C, n, D) one-hot sum, the dominant per-update
+    memory cost of the single-site path) is amortized over the whole sweep.
+    ``iters`` always counts *site updates*, making trajectories comparable
+    across both paths.  ``n_iters`` is rounded DOWN to a whole number of
+    step calls per snapshot (a multiple of ``n_snapshots *
+    updates_per_call``) — the returned ``iters`` reports the updates that
+    actually ran.  Accumulation is float32 (exact for < 2^24 samples).
     """
-    per = n_iters // n_snapshots
-    vstep = jax.vmap(step_fn)
+    updates = getattr(step_fn, "updates_per_call", 1)
+    vstep = step_fn if getattr(step_fn, "batched", False) \
+        else jax.vmap(step_fn)
+    calls = n_iters // (n_snapshots * updates)   # step_fn calls per snapshot
+    if calls == 0:
+        raise ValueError(
+            f"n_iters={n_iters} must cover at least one step call per "
+            f"snapshot: n_snapshots={n_snapshots} x updates_per_call="
+            f"{updates}")
     C, n = state.x.shape
     marg0 = jnp.zeros((C, n, D), jnp.float32)
 
@@ -68,12 +85,12 @@ def run_marginal_experiment(step_fn, state: ChainState, *, n_iters: int,
 
     def outer(carry, k):
         st, ms = carry
-        (st, ms), _ = jax.lax.scan(inner, (st, ms), None, length=per)
-        cnt = (k + 1.0) * per
-        err = marginal_error(ms, cnt).mean()   # mean over chains
+        (st, ms), _ = jax.lax.scan(inner, (st, ms), None, length=calls)
+        cnt = (k + 1.0) * calls                  # samples accumulated
+        err = marginal_error(ms, cnt).mean()     # mean over chains
         return (st, ms), err
 
     (state, _), errs = jax.lax.scan(outer, (state, marg0),
                                     jnp.arange(n_snapshots))
-    iters = (jnp.arange(n_snapshots) + 1) * per
+    iters = (jnp.arange(n_snapshots) + 1) * calls * updates
     return MarginalTrace(iters=iters, error=errs, final=state)

@@ -1,4 +1,5 @@
-"""The paper's five sampling algorithms as pure-JAX single-chain steps.
+"""The paper's five sampling algorithms as pure-JAX single-chain steps,
+plus the fused multi-site *sweep* variants of the hot ones.
 
 Each ``make_*_step(graph, ...)`` returns a jit-able ``step(state) -> state``
 operating on one chain; multi-chain execution vmaps the step (see
@@ -12,6 +13,21 @@ Algorithms (paper numbering):
   3  Local Minibatch Gibbs                  O(D*B)       empirical only
   4  MGPMH (MB proposal + exact MH)         O(D*L^2+Delta) pi-stationary, Thm 3/4
   5  DoubleMIN-Gibbs (doubly minibatched)   O(D*L^2+Psi^2) Thm 5/6
+
+Single-site -> sweep migration (the batched-update execution engine):
+  ``make_gibbs_sweep`` / ``make_mgpmh_sweep`` return *batched* functions
+  (``sweep.batched = True``) that advance every chain by ``sweep_len``
+  sequentially composed site updates per call, dispatched to ONE fused
+  Pallas kernel launch (``kernels/fused_sweep.py``) or its jnp oracle.
+  Each sub-step is exactly one iteration of the corresponding single-site
+  chain at an i.i.d.-uniform site, so the sweep chain is *distributionally
+  identical* to ``sweep_len`` applications of the ``make_*_step`` kernel —
+  only the per-update dispatch, RNG and snapshot-accumulation overheads are
+  amortized.  All sub-step randomness (sites, Poisson counts, alias-table
+  and proposal uniforms) is drawn up front in one batched pass; the
+  x-dependent pipeline (gather -> bucket energy -> proposal -> MH accept)
+  runs inside the kernel without returning to HBM.  ``chains.py`` consumes
+  the ``batched`` / ``updates_per_call`` markers.
 """
 from __future__ import annotations
 
@@ -23,6 +39,7 @@ import jax.numpy as jnp
 from .factor_graph import MatchGraph, alias_draw
 from .estimators import (draw_global_minibatch, draw_local_minibatch,
                          min_gibbs_estimate)
+from ..kernels import ops as kernel_ops
 
 __all__ = [
     "ChainState",
@@ -32,6 +49,8 @@ __all__ = [
     "make_local_gibbs_step",
     "make_mgpmh_step",
     "make_double_min_step",
+    "make_gibbs_sweep",
+    "make_mgpmh_sweep",
 ]
 
 
@@ -218,3 +237,179 @@ def init_double_min_cache(key: jax.Array, graph: MatchGraph,
     idx, B = draw_global_minibatch(key, graph, lam2, capacity2)
     xi = min_gibbs_estimate(graph, state.x, idx, B, lam2)
     return state._replace(cache=xi)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-site sweeps (batched execution engine)
+# ---------------------------------------------------------------------------
+
+def _batch_keys(keys: jax.Array, num: int):
+    """Split every chain's key: (C, 2) -> ``num`` keysets of shape (C, 2)."""
+    ks = jax.vmap(lambda k: jax.random.split(k, num))(keys)
+    return [ks[:, t] for t in range(num)]
+
+
+def make_gibbs_sweep(graph: MatchGraph, sweep_len: int, *,
+                     impl: str = "auto"):
+    """``sweep_len`` sequential vanilla-Gibbs updates per call, one fused
+    kernel launch (or jnp oracle) for the whole batch of chains.
+
+    Returns a *batched* ``sweep(state) -> state`` over a vmapped-layout
+    ChainState (x of shape (C, n)); see the module docstring.
+    impl: 'pallas' | 'jnp' | 'auto' ('pallas' on TPU, 'jnp' elsewhere).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    n, D = graph.n, graph.D
+
+    def sweep(state: ChainState) -> ChainState:
+        ki, kg, knew = _batch_keys(state.key, 3)
+        i = jax.vmap(lambda k: jax.random.randint(
+            k, (sweep_len,), 0, n))(ki)                        # (C, S)
+        gumbel = jax.vmap(lambda k: jax.random.gumbel(
+            k, (sweep_len, D)))(kg)                            # (C, S, D)
+        x = kernel_ops.gibbs_sweep(state.x, graph.W, i, gumbel, D=D,
+                                   impl=impl)
+        return state._replace(x=x, key=knew)
+
+    sweep.batched = True
+    sweep.updates_per_call = sweep_len
+    return sweep
+
+
+def make_mgpmh_sweep(graph: MatchGraph, lam: float, capacity: int,
+                     sweep_len: int, *, impl: str = "auto"):
+    """``sweep_len`` sequential MGPMH updates (Algorithm 4 per sub-step)
+    per call, one fused launch for the whole batch of chains.
+
+    All randomness (sites, per-site Poisson totals via the footnote-7
+    decomposition, alias-table uniforms, Gumbel proposal noise, MH accept
+    uniforms) is drawn up front in one batched pass per sweep; the
+    x-dependent pipeline runs fused.  Distributionally identical to
+    ``sweep_len`` steps of ``make_mgpmh_step`` — Theorems 3/4 apply
+    unchanged.
+
+    impl: 'pallas' — the fused Pallas kernel (kernels/fused_sweep.py;
+          interpret mode off-TPU: correctness path, slow);
+          'jnp'    — a fused pure-jnp schedule of the same chain, tuned for
+          CPU/GPU (packed alias-table gathers, per-value bucket counting,
+          two-point exact pass);
+          'auto'   — 'pallas' on TPU, 'jnp' elsewhere.
+    The two impls consume different (equally valid) PRNG streams; each is
+    distributionally exact (tests/test_sweep.py).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "jnp":
+        return _make_mgpmh_sweep_jnp(graph, lam, capacity, sweep_len)
+    n, D = graph.n, graph.D
+    scale = float(graph.L / lam)
+
+    def sweep(state: ChainState) -> ChainState:
+        ki, kb, k1, k2, kg, ka, knew = _batch_keys(state.key, 7)
+        i = jax.vmap(lambda k: jax.random.randint(
+            k, (sweep_len,), 0, n))(ki)                        # (C, S)
+        lam_i = lam * graph.row_sum[i] / graph.L               # (C, S)
+        B = jax.vmap(lambda k, l: jax.random.poisson(
+            k, l, dtype=jnp.int32))(kb, lam_i)
+        B = jnp.minimum(B, capacity)
+        u_idx = jax.vmap(lambda k: jax.random.uniform(
+            k, (sweep_len, capacity)))(k1)
+        u_alias = jax.vmap(lambda k: jax.random.uniform(
+            k, (sweep_len, capacity)))(k2)
+        gumbel = jax.vmap(lambda k: jax.random.gumbel(
+            k, (sweep_len, D)))(kg)
+        logu = jnp.log(jax.vmap(lambda k: jax.random.uniform(
+            k, (sweep_len,)))(ka))
+        x, acc = kernel_ops.mgpmh_sweep(
+            state.x, graph.W, graph.row_prob, graph.row_alias, i, B,
+            u_idx, u_alias, gumbel, logu, D=D, scale=scale, impl=impl)
+        return state._replace(x=x, key=knew, accepts=state.accepts + acc)
+
+    sweep.batched = True
+    sweep.updates_per_call = sweep_len
+    return sweep
+
+
+def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
+                          sweep_len: int):
+    """CPU/GPU-tuned fused jnp schedule of the MGPMH sweep chain.
+
+    Same chain as the Pallas kernel, reorganized for a cache-hierarchy
+    machine instead of the MXU:
+      * prob/alias rows interleaved into one (n, n, 2) table so the
+        per-draw gather touches one cache line instead of two arrays;
+      * the classic one-uniform alias trick (index from ``floor(u*n)``,
+        accept from the leftover fraction ``u*n - idx`` — exact, and
+        halves the dominant threefry cost);
+      * minibatch bucket energies as D fused compare-reduce passes over the
+        draw window (no (C, K, D) one-hot materialization);
+      * the exact MH pass evaluated only at the two energies the
+        acceptance ratio needs (v and x_i) instead of all D.
+    """
+    n, D, S, K = graph.n, graph.D, sweep_len, capacity
+    scale = float(graph.L / lam)
+    packed = jnp.stack([graph.row_prob,
+                        graph.row_alias.astype(jnp.float32)], axis=-1)
+
+    def sweep(state: ChainState) -> ChainState:
+        C = state.x.shape[0]
+        rows = jnp.arange(C)
+        # Deliberate deviation from the per-chain-stream contract of the
+        # pallas path: every per-chain key advances (knew), but all batch
+        # draws derive from chain 0's spare split — one threefry stream
+        # feeding (C, ...) shaped draws is ~3x cheaper than C vmapped
+        # streams and statistically equivalent (splits are independent).
+        ks = jax.vmap(lambda k: jax.random.split(k, 2))(state.key)
+        knew = ks[:, 0]
+        master = ks[0, 1]
+        ki, kb, k1, kg, ka = jax.random.split(master, 5)
+        i = jax.random.randint(ki, (C, S), 0, n)
+        lam_i = lam * graph.row_sum[i] / graph.L
+        B = jnp.minimum(jax.random.poisson(kb, lam_i, dtype=jnp.int32), K)
+        un = jax.random.uniform(k1, (C, S, K)) * n
+        idx = jnp.minimum(un.astype(jnp.int32), n - 1)
+        pk = packed[i[..., None], idx]                         # (C, S, K, 2)
+        j = jnp.where(un - idx < pk[..., 0], idx,
+                      pk[..., 1].astype(jnp.int32))
+        # sentinel n for draws past B: they gather the pad column (value D)
+        # and land in no bucket
+        j = jnp.where(jnp.arange(K)[None, None, :] < B[..., None], j, n)
+        gumbel = jax.random.gumbel(kg, (C, S, D))
+        logu = jnp.log(jax.random.uniform(ka, (C, S)))
+        xp = jnp.pad(state.x, ((0, 0), (0, 1)), constant_values=D)
+
+        def substep(carry, s):
+            xp, acc = carry
+            i_s = i[:, s]
+            vals = jnp.take_along_axis(xp, j[:, s, :], axis=1)  # (C, K)
+            if D <= 32:   # fused compare-reduce per value; unrolls D ops
+                counts = jnp.stack(
+                    [jnp.sum(vals == d, axis=1) for d in range(D)], axis=1)
+                eps = scale * counts.astype(jnp.float32)        # (C, D)
+            else:         # large D: one-hot reduce (sentinel rows are zero)
+                eps = scale * jnp.sum(
+                    jax.nn.one_hot(vals, D, dtype=jnp.float32), axis=1)
+            v = jnp.argmax(eps + gumbel[:, s, :],
+                           axis=-1).astype(jnp.int32)
+            xi = xp[rows, i_s]
+            w_row = graph.W[i_s]                                # (C, n)
+            x_body = xp[:, :n]
+            exact_diff = jnp.sum(
+                w_row * ((x_body == v[:, None]).astype(jnp.float32)
+                         - (x_body == xi[:, None]).astype(jnp.float32)),
+                axis=1)
+            log_a = exact_diff + (eps[rows, xi] - eps[rows, v])
+            accept = logu[:, s] < log_a
+            new_v = jnp.where(accept, v, xi)
+            xp = xp.at[rows, i_s].set(new_v)
+            return (xp, acc + accept.astype(jnp.int32)), None
+
+        (xp, acc), _ = jax.lax.scan(
+            substep, (xp, jnp.zeros((C,), jnp.int32)), jnp.arange(S))
+        return state._replace(x=xp[:, :n], key=knew,
+                              accepts=state.accepts + acc)
+
+    sweep.batched = True
+    sweep.updates_per_call = sweep_len
+    return sweep

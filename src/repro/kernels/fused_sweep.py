@@ -1,0 +1,308 @@
+"""Pallas TPU kernel: fused multi-site Gibbs/MGPMH sweep.
+
+Updates ``S`` sites per chain in ONE kernel launch instead of one launch
+per site — the chain state lives in VMEM across all ``S`` sequentially
+composed sub-steps, so the per-update cost is pure compute (the paper's
+O(lambda)) instead of kernel-dispatch latency.  Per sub-step the kernel
+fuses the full single-site update pipeline without returning to HBM:
+
+  1. alias-table minibatch draw  — uniforms -> table index -> alias select;
+     the (n, n) row tables are VMEM-resident and both gathers are realized
+     as one-hot GEMMs so the MXU does the indexing (mh mode only);
+  2. bucket-energy reduction     — ``eps_u = scale * #{k < B : x[j_k] = u}``
+     factored as two one-hot GEMMs: draws -> per-site counts ``cnt`` over n
+     buckets, then ``cnt @ onehot(x)`` over D buckets (the MXU trick of
+     kernels/minibatch_energy.py, applied twice);
+  3. exact conditional pass      — ``W[i] @ onehot(x)`` (shares the
+     in-register ``onehot(x)`` block with stage 2);
+  4. Gumbel-max categorical proposal + Metropolis-Hastings accept, then the
+     in-VMEM state update ``x[i] <- v``.
+
+Randomness: ``host_rng=True`` (default, and the only option off-TPU /
+interpret mode) consumes pre-drawn uniforms so the kernel is bit-comparable
+to the jnp oracle (kernels/ref.py).  ``host_rng=False`` generates the
+uniforms in-kernel from ``pltpu.prng_random_bits`` seeded per chain-block —
+identical arithmetic, only the bit source changes; it removes the (C, S, K)
+uniform streams from HBM entirely but cannot run in interpret mode
+(``prng_seed`` has no CPU lowering), so it is TPU-compiled-only.
+
+Tiling / VMEM budget (per grid step, grid = (C/BC,)):
+  resident:  W, row_prob, row_alias (Np x Np each), x (BC x Np),
+             the (BC, Sp, Kp) uniform/weight blocks;
+  transient: one-hot blocks (BC, Kp, Np) and (BC, Np, Dp).
+  Np/Kp/Dp are 128-multiples (lane width), BC a multiple of 8 (sublanes).
+  For the paper's 20x20 Potts graph (n=400 -> Np=512, K~256, S=64) this is
+  ~6 MiB, comfortably inside 16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu namespace may be unavailable on CPU-only jaxlib builds
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+__all__ = ["mgpmh_sweep_pallas", "mgpmh_sweep_pallas_rng",
+           "gibbs_sweep_pallas"]
+
+_NEG = -1e30
+
+
+def _uniform_from_bits(bits):  # pragma: no cover - TPU-compiled path
+    """uint32 random bits -> f32 uniform in [0, 1) with 24-bit mantissa."""
+    return (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+
+
+def _row_select(oh_i, table):
+    """Gather rows table[i] for per-chain site ids via one-hot GEMM."""
+    return jax.lax.dot(oh_i, table, preferred_element_type=jnp.float32)
+
+
+def _bucket(w, onehot):
+    """Batched ``E[c, u] = sum_k w[c, k] onehot[c, k, u]`` on the MXU."""
+    acc = jax.lax.dot_general(
+        w[:, None, :], onehot,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    return acc[:, 0, :]
+
+
+def _argmax_lanes(scores, iota_d, width):
+    """First-max index over lanes, as (BC, 1) int32 (Mosaic-safe argmax)."""
+    m = jnp.max(scores, axis=1, keepdims=True)
+    return jnp.min(jnp.where(scores == m, iota_d, width),
+                   axis=1, keepdims=True).astype(jnp.int32)
+
+
+def _pick_lane(vec, iota_d, lane):
+    """vec[c, lane[c]] as (BC, 1) f32 via a one-hot reduction."""
+    return jnp.sum(jnp.where(iota_d == lane, vec, 0.0), axis=1,
+                   keepdims=True)
+
+
+def _sweep_kernel(*refs, n: int, D: int, S: int, Kp: int, scale: float,
+                  mh: bool, host_rng: bool):
+    """One (BC, Np) chain block: S fused sequential site updates."""
+    if mh:
+        if host_rng:
+            (x_ref, w_ref, rp_ref, ra_ref, i_ref, b_ref, u1_ref, u2_ref,
+             g_ref, lu_ref, xo_ref, acc_ref) = refs
+        else:  # pragma: no cover - TPU-compiled path
+            (x_ref, w_ref, rp_ref, ra_ref, i_ref, b_ref, seed_ref,
+             xo_ref, acc_ref) = refs
+    else:
+        if host_rng:
+            x_ref, w_ref, i_ref, g_ref, xo_ref, acc_ref = refs
+        else:  # pragma: no cover - TPU-compiled path
+            x_ref, w_ref, i_ref, seed_ref, xo_ref, acc_ref = refs
+
+    BC, Np = x_ref.shape
+    Dp = acc_ref.shape[1]
+    W = w_ref[...]
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (BC, Np), 1)
+    iota_d = jax.lax.broadcasted_iota(jnp.int32, (BC, Dp), 1)
+    lane_pad = iota_d >= D
+    if mh:
+        RP = rp_ref[...]
+        RA = ra_ref[...].astype(jnp.float32)  # int-valued, < n <= 2^24: exact
+    if not host_rng:  # pragma: no cover - TPU-compiled path
+        pltpu.prng_seed(seed_ref[0], pl.program_id(0))
+
+    def rand_mb(s):
+        """(u_idx, u_alias) uniforms for the alias draw of sub-step s."""
+        if host_rng:
+            return u1_ref[:, s, :], u2_ref[:, s, :]
+        return (_uniform_from_bits(pltpu.prng_random_bits((BC, Kp))),
+                _uniform_from_bits(pltpu.prng_random_bits((BC, Kp))))
+
+    def rand_gumbel(s):
+        if host_rng:
+            return g_ref[:, s, :]
+        u = _uniform_from_bits(pltpu.prng_random_bits((BC, Dp)))
+        return -jnp.log(-jnp.log(u + 1e-20) + 1e-20)
+
+    def rand_logu(s):
+        if host_rng:
+            return lu_ref[:, pl.ds(s, 1)]
+        u = _uniform_from_bits(pltpu.prng_random_bits((BC, 128)))
+        return jnp.log(u[:, :1] + 1e-20)
+
+    def substep(s, carry):
+        x, acc = carry                                     # (BC,Np), (BC,1)
+        i_s = i_ref[:, pl.ds(s, 1)]                        # (BC, 1)
+        oh_i = (iota_n == i_s).astype(jnp.float32)         # (BC, Np)
+        w_row = _row_select(oh_i, W)                       # (BC, Np)
+        # shared one-hot of the current state (stage 2 + stage 3 operand);
+        # padded sites hold D which one-hots into a masked lane.
+        iota_nd = jax.lax.broadcasted_iota(jnp.int32, (BC, Np, Dp), 2)
+        oh_x = (x[:, :, None] == iota_nd).astype(jnp.float32)
+        exact = _bucket(w_row, oh_x)                       # (BC, Dp)
+
+        if mh:
+            # stage 1: alias-table minibatch draw, gathers as one-hot GEMMs
+            u_idx, u_alias = rand_mb(s)                    # (BC, Kp)
+            idx = jnp.minimum((u_idx * n).astype(jnp.int32), n - 1)
+            # transposed one-hot (BC, Np, Kp) built directly from an iota
+            # compare so the table gathers are plain _bucket contractions
+            iota_nk = jax.lax.broadcasted_iota(jnp.int32, (BC, Np, Kp), 1)
+            oh_idx_t = (idx[:, None, :] == iota_nk).astype(jnp.float32)
+            prob_row = _row_select(oh_i, RP)               # (BC, Np)
+            alias_row = _row_select(oh_i, RA)
+            p_g = _bucket(prob_row, oh_idx_t)              # (BC, Kp)
+            a_g = _bucket(alias_row, oh_idx_t)
+            j = jnp.where(u_alias < p_g, idx,
+                          a_g.astype(jnp.int32))           # (BC, Kp)
+            b_s = b_ref[:, pl.ds(s, 1)]                    # (BC, 1)
+            iota_k = jax.lax.broadcasted_iota(jnp.int32, (BC, Kp), 1)
+            w_k = scale * (iota_k < b_s).astype(jnp.float32)
+            # stage 2: draws -> per-site counts -> bucket energies over D
+            iota_kn = jax.lax.broadcasted_iota(jnp.int32, (BC, Kp, Np), 2)
+            oh_j = (j[:, :, None] == iota_kn).astype(jnp.float32)
+            cnt = _bucket(w_k, oh_j)                       # (BC, Np)
+            eps = _bucket(cnt, oh_x)                       # (BC, Dp)
+            scores = eps + rand_gumbel(s)
+        else:
+            eps = exact
+            scores = exact + rand_gumbel(s)
+
+        # stage 4: Gumbel-max proposal + MH accept, state update in VMEM
+        scores = jnp.where(lane_pad, _NEG, scores)
+        v = _argmax_lanes(scores, iota_d, Dp)              # (BC, 1)
+        if mh:
+            xi = jnp.sum(jnp.where(iota_n == i_s, x, 0), axis=1,
+                         keepdims=True)                    # (BC, 1)
+            log_a = (_pick_lane(exact, iota_d, v)
+                     - _pick_lane(exact, iota_d, xi)
+                     + _pick_lane(eps, iota_d, xi)
+                     - _pick_lane(eps, iota_d, v))
+            accept = rand_logu(s) < log_a                  # (BC, 1)
+            new_v = jnp.where(accept, v, xi)
+            acc = acc + accept.astype(jnp.int32)
+        else:
+            new_v = v
+        x = jnp.where(iota_n == i_s, new_v, x)
+        return x, acc
+
+    x, acc = jax.lax.fori_loop(
+        0, S, substep, (x_ref[...], jnp.zeros((BC, 1), jnp.int32)))
+    xo_ref[...] = x
+    acc_ref[...] = jnp.broadcast_to(acc, (BC, Dp))
+
+
+def _grid_specs(BC, shapes):
+    """BlockSpecs taking the ci-th chain block of each (C, ...) input and
+    the full array for (n, n) tables (leading dim not C)."""
+    specs = []
+    for shp, chain_major in shapes:
+        if chain_major:
+            block = (BC,) + shp[1:]
+            nones = (0,) * (len(shp) - 1)
+            specs.append(pl.BlockSpec(block, lambda ci, _n=nones: (ci,) + _n))
+        else:
+            specs.append(pl.BlockSpec(shp, lambda ci, _z=(0,) * len(shp): _z))
+    return specs
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n", "D", "S", "scale", "bc", "interpret"))
+def mgpmh_sweep_pallas(x, W, row_prob, row_alias, i_sites, B, u_idx, u_alias,
+                       gumbel, logu, *, n: int, D: int, S: int, scale: float,
+                       bc: int = 8, interpret: bool = True):
+    """Fused S-site MGPMH sweep; pre-padded inputs (see ops.mgpmh_sweep).
+
+    x (C, Np) i32; W/row_prob/row_alias (Np, Np); i_sites/B/logu (C, Sp);
+    u_idx/u_alias (C, Sp, Kp) f32; gumbel (C, Sp, Dp) f32.  C % bc == 0,
+    Np/Kp/Dp % 128 == 0, S <= Sp.  Returns (x_out (C, Np) i32,
+    accepts (C, Dp) i32 — count broadcast over lanes).
+    """
+    C, Np = x.shape
+    Kp = u_idx.shape[-1]
+    Dp = gumbel.shape[-1]
+    ins = [(x.shape, True), (W.shape, False), (row_prob.shape, False),
+           (row_alias.shape, False), (i_sites.shape, True), (B.shape, True),
+           (u_idx.shape, True), (u_alias.shape, True), (gumbel.shape, True),
+           (logu.shape, True)]
+    kernel = functools.partial(_sweep_kernel, n=n, D=D, S=S, Kp=Kp,
+                               scale=scale, mh=True, host_rng=True)
+    return pl.pallas_call(
+        kernel,
+        grid=(C // bc,),
+        in_specs=_grid_specs(bc, ins),
+        out_specs=[pl.BlockSpec((bc, Np), lambda ci: (ci, 0)),
+                   pl.BlockSpec((bc, Dp), lambda ci: (ci, 0))],
+        out_shape=[jax.ShapeDtypeStruct((C, Np), jnp.int32),
+                   jax.ShapeDtypeStruct((C, Dp), jnp.int32)],
+        interpret=interpret,
+    )(x, W.astype(jnp.float32), row_prob.astype(jnp.float32),
+      row_alias.astype(jnp.int32), i_sites.astype(jnp.int32),
+      B.astype(jnp.int32), u_idx.astype(jnp.float32),
+      u_alias.astype(jnp.float32), gumbel.astype(jnp.float32),
+      logu.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n", "D", "S", "Kp", "Dp", "scale", "bc"))
+def mgpmh_sweep_pallas_rng(x, W, row_prob, row_alias, i_sites, B, seed,
+                           *, n: int, D: int, S: int, Kp: int, Dp: int,
+                           scale: float, bc: int = 8):
+    """TPU-only variant with in-kernel PRNG (``host_rng=False``): the alias
+    draw, Gumbel proposal and MH accept uniforms come from
+    ``pltpu.prng_random_bits`` seeded per chain block, so no (C, S, K)
+    random streams leave HBM.  ``seed`` is a (1,) int32.  Same pre-padded
+    input contract as ``mgpmh_sweep_pallas`` otherwise; cannot run in
+    interpret mode (``prng_seed`` has no CPU lowering) — this is the
+    ROADMAP's TPU-compiled bench entry point.
+    """
+    if pltpu is None:  # pragma: no cover
+        raise NotImplementedError("in-kernel PRNG requires pallas TPU")
+    C, Np = x.shape
+    ins = [(x.shape, True), (W.shape, False), (row_prob.shape, False),
+           (row_alias.shape, False), (i_sites.shape, True), (B.shape, True)]
+    kernel = functools.partial(_sweep_kernel, n=n, D=D, S=S, Kp=Kp,
+                               scale=scale, mh=True, host_rng=False)
+    return pl.pallas_call(
+        kernel,
+        grid=(C // bc,),
+        in_specs=_grid_specs(bc, ins)
+        + [pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=[pl.BlockSpec((bc, Np), lambda ci: (ci, 0)),
+                   pl.BlockSpec((bc, Dp), lambda ci: (ci, 0))],
+        out_shape=[jax.ShapeDtypeStruct((C, Np), jnp.int32),
+                   jax.ShapeDtypeStruct((C, Dp), jnp.int32)],
+        interpret=False,
+    )(x, W.astype(jnp.float32), row_prob.astype(jnp.float32),
+      row_alias.astype(jnp.int32), i_sites.astype(jnp.int32),
+      B.astype(jnp.int32), seed.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n", "D", "S", "bc", "interpret"))
+def gibbs_sweep_pallas(x, W, i_sites, gumbel, *, n: int, D: int, S: int,
+                       bc: int = 8, interpret: bool = True):
+    """Fused S-site vanilla-Gibbs sweep; pre-padded inputs.
+
+    Shapes as in mgpmh_sweep_pallas minus the minibatch streams.
+    Returns (x_out (C, Np) i32, accepts (C, Dp) i32 — always zero).
+    """
+    C, Np = x.shape
+    Dp = gumbel.shape[-1]
+    ins = [(x.shape, True), (W.shape, False), (i_sites.shape, True),
+           (gumbel.shape, True)]
+    kernel = functools.partial(_sweep_kernel, n=n, D=D, S=S, Kp=0,
+                               scale=1.0, mh=False, host_rng=True)
+    return pl.pallas_call(
+        kernel,
+        grid=(C // bc,),
+        in_specs=_grid_specs(bc, ins),
+        out_specs=[pl.BlockSpec((bc, Np), lambda ci: (ci, 0)),
+                   pl.BlockSpec((bc, Dp), lambda ci: (ci, 0))],
+        out_shape=[jax.ShapeDtypeStruct((C, Np), jnp.int32),
+                   jax.ShapeDtypeStruct((C, Dp), jnp.int32)],
+        interpret=interpret,
+    )(x, W.astype(jnp.float32), i_sites.astype(jnp.int32),
+      gumbel.astype(jnp.float32))

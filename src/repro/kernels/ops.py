@@ -10,9 +10,10 @@ import jax.numpy as jnp
 
 from .minibatch_energy import bucket_energy_pallas
 from .flash_attention import flash_attention_pallas
-from .ref import bucket_energy_ref
+from .fused_sweep import mgpmh_sweep_pallas, gibbs_sweep_pallas
+from .ref import bucket_energy_ref, mgpmh_sweep_ref, gibbs_sweep_ref
 
-__all__ = ["bucket_energy", "flash_attention"]
+__all__ = ["bucket_energy", "flash_attention", "mgpmh_sweep", "gibbs_sweep"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -38,11 +39,119 @@ def bucket_energy(w: jax.Array, v: jax.Array, D: int,
     bc = 8
     bk = max(128, min(512, _round_up((2 * 1024 * 1024) // (4 * bc * dp), 128)))
     Cp, Kp = _round_up(C, bc), _round_up(K, bk)
-    wp = jnp.zeros((Cp, Kp), jnp.float32).at[:C, :K].set(w)
-    vp = jnp.full((Cp, Kp), D, jnp.int32).at[:C, :K].set(v)  # D = no bucket
+    # jnp.pad only touches the pad region (no full extra copy of the
+    # inputs); aligned shapes skip padding entirely.
+    wp = w.astype(jnp.float32)
+    vp = v.astype(jnp.int32)
+    if (Cp, Kp) != (C, K):
+        pad = ((0, Cp - C), (0, Kp - K))
+        wp = jnp.pad(wp, pad)                                # zero weight
+        vp = jnp.pad(vp, pad, constant_values=D)             # D = no bucket
     interpret = jax.default_backend() != "tpu"
     out = bucket_energy_pallas(wp, vp, D, bc=bc, bk=bk, interpret=interpret)
-    return out[:C, :D]
+    return out[:C, :D] if (Cp, dp) != (C, D) else out
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-site sweep (kernels/fused_sweep.py)
+# ---------------------------------------------------------------------------
+
+def _sweep_pads(C, n, S, D, bc=8):
+    """(Cp, Np, Sp, Dp): chain/site/sub-step/domain padded dims.  The
+    sub-step axis is a lane axis for the (C, S) streams, hence 128."""
+    return (_round_up(C, bc), max(128, _round_up(n, 128)),
+            max(128, _round_up(S, 128)), max(128, _round_up(D, 128)))
+
+
+def _pad2(a, Cp, Sp, value=0):
+    C, S = a.shape
+    if (Cp, Sp) == (C, S):
+        return a
+    return jnp.pad(a, ((0, Cp - C), (0, Sp - S)), constant_values=value)
+
+
+def _pad3(a, Cp, Lp):
+    """Pad a (C, S, L) stream: chains to Cp, sub-steps to a sublane multiple
+    of 8, the trailing lane axis to Lp."""
+    C, S, L = a.shape
+    Sp = _round_up(S, 8)
+    if (Cp, Sp, Lp) == (C, S, L):
+        return a
+    return jnp.pad(a, ((0, Cp - C), (0, Sp - S), (0, Lp - L)))
+
+
+def _pad_square(t, Np):
+    n = t.shape[0]
+    if n == Np:
+        return t
+    return jnp.pad(t, ((0, Np - n), (0, Np - n)))
+
+
+@functools.partial(jax.jit, static_argnames=("D", "scale", "impl"))
+def mgpmh_sweep(x, W, row_prob, row_alias, i_sites, B, u_idx, u_alias,
+                gumbel, logu, *, D: int, scale: float, impl: str = "auto"):
+    """S fused sequential MGPMH site updates per chain (see kernels/ref.py
+    ``mgpmh_sweep_ref`` for exact semantics).
+
+    x (C, n) i32; W/row_prob/row_alias (n, n); i_sites/B/logu (C, S);
+    u_idx/u_alias (C, S, K) f32 uniforms; gumbel (C, S, D) f32.
+    ``scale`` = L/lambda.
+    impl: 'auto'   — kernel on TPU, jnp oracle elsewhere (the interpret-mode
+                     kernel is orders of magnitude slower than the oracle),
+          'pallas' — force the kernel (interpret off-TPU),
+          'jnp'    — the oracle (kernels/ref.py).
+    Returns (x_out (C, n) i32, accepts (C,) i32).
+
+    Padding: chains to 8, sites to 128 lanes with x = D (one-hots into a
+    masked lane), draws to 128 with zero weight, the sub-step axis of the
+    (C, S) streams to 128 lanes (the kernel only loops the real S).
+    """
+    if impl not in ("auto", "pallas", "jnp"):
+        raise ValueError(f"unknown impl: {impl!r}")
+    if impl == "jnp" or (impl == "auto" and jax.default_backend() != "tpu"):
+        return mgpmh_sweep_ref(x, W, row_prob, row_alias, i_sites, B,
+                               u_idx, u_alias, gumbel, logu, D, scale)
+    C, n = x.shape
+    S = i_sites.shape[1]
+    K = u_idx.shape[-1]
+    Cp, Np, Sp, Dp = _sweep_pads(C, n, S, D)
+    Kp = max(128, _round_up(K, 128))
+    xp = x
+    if (Cp, Np) != (C, n):
+        xp = jnp.pad(x, ((0, Cp - C), (0, Np - n)), constant_values=D)
+    out_x, out_acc = mgpmh_sweep_pallas(
+        xp, _pad_square(W, Np), _pad_square(row_prob, Np),
+        _pad_square(row_alias, Np), _pad2(i_sites, Cp, Sp),
+        _pad2(B, Cp, Sp), _pad3(u_idx, Cp, Kp), _pad3(u_alias, Cp, Kp),
+        _pad3(gumbel, Cp, Dp), _pad2(logu, Cp, Sp),
+        n=n, D=D, S=S, scale=scale,
+        interpret=jax.default_backend() != "tpu")
+    return out_x[:C, :n], out_acc[:C, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("D", "impl"))
+def gibbs_sweep(x, W, i_sites, gumbel, *, D: int, impl: str = "auto"):
+    """S fused sequential vanilla-Gibbs site updates per chain (exact
+    conditionals; see kernels/ref.py ``gibbs_sweep_ref``).
+
+    x (C, n) i32; W (n, n); i_sites (C, S); gumbel (C, S, D).
+    Returns x_out (C, n) i32.  impl and padding as in mgpmh_sweep.
+    """
+    if impl not in ("auto", "pallas", "jnp"):
+        raise ValueError(f"unknown impl: {impl!r}")
+    if impl == "jnp" or (impl == "auto" and jax.default_backend() != "tpu"):
+        return gibbs_sweep_ref(x, W, i_sites, gumbel, D)
+    C, n = x.shape
+    S = i_sites.shape[1]
+    Cp, Np, Sp, Dp = _sweep_pads(C, n, S, D)
+    xp = x
+    if (Cp, Np) != (C, n):
+        xp = jnp.pad(x, ((0, Cp - C), (0, Np - n)), constant_values=D)
+    out_x, _ = gibbs_sweep_pallas(
+        xp, _pad_square(W, Np), _pad2(i_sites, Cp, Sp),
+        _pad3(gumbel, Cp, Dp), n=n, D=D, S=S,
+        interpret=jax.default_backend() != "tpu")
+    return out_x[:C, :n]
 
 
 @functools.partial(jax.jit, static_argnames=("window", "causal"))

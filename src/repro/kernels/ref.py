@@ -1,10 +1,18 @@
-"""Pure-jnp oracles for the Pallas kernels (the allclose reference)."""
+"""Pure-jnp oracles for the Pallas kernels (the allclose reference).
+
+``mgpmh_sweep_ref`` / ``gibbs_sweep_ref`` are the semantic definition of the
+fused multi-site sweep kernel (kernels/fused_sweep.py): S sequentially
+composed single-site updates per call, consuming *pre-drawn* uniforms so the
+kernel and the oracle make bit-identical random choices and the resulting
+states can be compared exactly (up to float-reduction-order accept flips of
+measure ~0).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["bucket_energy_ref"]
+__all__ = ["bucket_energy_ref", "mgpmh_sweep_ref", "gibbs_sweep_ref"]
 
 
 def bucket_energy_ref(w: jax.Array, v: jax.Array, D: int) -> jax.Array:
@@ -20,3 +28,89 @@ def bucket_energy_ref(w: jax.Array, v: jax.Array, D: int) -> jax.Array:
     """
     onehot = jax.nn.one_hot(v, D, dtype=jnp.float32)
     return jnp.einsum("ck,ckd->cd", w.astype(jnp.float32), onehot)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-site sweep oracles
+# ---------------------------------------------------------------------------
+
+def _alias_pick(row_prob, row_alias, i, u_idx, u_alias, n):
+    """Vectorized alias-table draw for one sub-step.
+
+    i: (C,) row ids; u_idx/u_alias: (C, K) uniforms.  Returns (C, K) int32
+    neighbor ids drawn from ``p_j = W[i, j] / L_i`` — identical arithmetic to
+    the in-kernel draw in fused_sweep.py.
+    """
+    idx = jnp.minimum((u_idx * n).astype(jnp.int32), n - 1)
+    prob = row_prob[i[:, None], idx]
+    alias = row_alias[i[:, None], idx]
+    return jnp.where(u_alias < prob, idx, alias).astype(jnp.int32)
+
+
+def mgpmh_sweep_ref(x, W, row_prob, row_alias, i_sites, B, u_idx, u_alias,
+                    gumbel, logu, D: int, scale: float):
+    """S sequentially composed MGPMH site updates (Algorithm 4 per sub-step).
+
+    Per sub-step s (all chains c in parallel, sites sequential in s):
+      j_k   ~ alias(W[i_s]/L_i)            from u_idx/u_alias   (x-independent)
+      eps_u = scale * #{k < B : x[j_k] = u}                     (minibatch)
+      v     = argmax_u eps_u + gumbel_u                         (proposal)
+      log a = (exact_v - exact_{x_i}) + (eps_{x_i} - eps_v)     (exact MH)
+      accept iff logu < log a, where exact_u = sum_j W[i,j] 1[x_j = u].
+
+    x: (C, n) int32; W/row_prob/row_alias: (n, n); i_sites/B/logu: (C, S);
+    u_idx/u_alias: (C, S, K); gumbel: (C, S, D).  ``scale`` is L/lambda.
+    Returns (x_out (C, n) int32, accepts (C,) int32).
+    """
+    C, n = x.shape
+    S = i_sites.shape[1]
+    K = u_idx.shape[-1]
+    rows = jnp.arange(C)
+    # the alias draws are x-independent: hoist them out of the scan
+    j_all = jax.vmap(
+        lambda i, u1, u2: _alias_pick(row_prob, row_alias, i, u1, u2, n),
+        in_axes=1, out_axes=1)(i_sites, u_idx, u_alias)        # (C, S, K)
+    w_all = scale * (jnp.arange(K)[None, None, :]
+                     < B[:, :, None]).astype(jnp.float32)      # (C, S, K)
+
+    def substep(carry, s):
+        x, acc = carry
+        i = i_sites[:, s]                                      # (C,)
+        vals = jnp.take_along_axis(x, j_all[:, s, :], axis=1)  # (C, K)
+        eps = bucket_energy_ref(w_all[:, s, :], vals, D)       # (C, D)
+        v = jnp.argmax(eps + gumbel[:, s, :], axis=-1).astype(jnp.int32)
+        xi = x[rows, i]
+        w_row = W[i]                                           # (C, n)
+        exact_v = jnp.sum(w_row * (x == v[:, None]), axis=1)
+        exact_xi = jnp.sum(w_row * (x == xi[:, None]), axis=1)
+        log_a = (exact_v - exact_xi) + (eps[rows, xi] - eps[rows, v])
+        accept = logu[:, s] < log_a
+        new_v = jnp.where(accept, v, xi)
+        x = x.at[rows, i].set(new_v)
+        return (x, acc + accept.astype(jnp.int32)), None
+
+    (x, acc), _ = jax.lax.scan(substep, (x, jnp.zeros((C,), jnp.int32)),
+                               jnp.arange(S))
+    return x, acc
+
+
+def gibbs_sweep_ref(x, W, i_sites, gumbel, D: int):
+    """S sequentially composed vanilla-Gibbs site updates (Algorithm 1).
+
+    Per sub-step: eps_u = sum_j W[i,j] 1[x_j = u] exactly, then
+    x_i <- argmax_u eps_u + gumbel_u (Gumbel-max == categorical(exp eps)).
+    Shapes as in mgpmh_sweep_ref minus the minibatch inputs.
+    Returns x_out (C, n) int32.
+    """
+    C, n = x.shape
+    S = i_sites.shape[1]
+    rows = jnp.arange(C)
+
+    def substep(x, s):
+        i = i_sites[:, s]
+        eps = bucket_energy_ref(W[i], x, D)                    # (C, D)
+        v = jnp.argmax(eps + gumbel[:, s, :], axis=-1).astype(jnp.int32)
+        return x.at[rows, i].set(v), None
+
+    x, _ = jax.lax.scan(substep, x, jnp.arange(S))
+    return x

@@ -5,9 +5,11 @@ sampler state and marginal-error reporting.
   PYTHONPATH=src python -m repro.launch.gibbs --config potts-20x20 \
       --engine mgpmh --steps 20000 --chains 64 [--ckpt-dir /tmp/gc]
 
-Engines: gibbs | mgpmh | doublemin.  Sampler state (chains, caches, rng,
-running marginals) is a pytree checkpointed/restored exactly like model
-params — restart resumes the chain bit-exactly.
+Engines: gibbs | mgpmh | doublemin.  ``--sweep S`` (mgpmh) batches S site
+updates per launch through the fused sweep engine — one psum per sweep
+instead of two per update (see runtime/dist_gibbs.py).  Sampler state
+(chains, caches, rng, running marginals) is a pytree checkpointed/restored
+exactly like model params — restart resumes the chain bit-exactly.
 """
 from __future__ import annotations
 
@@ -24,6 +26,7 @@ from ..core.factor_graph import make_ising_graph, make_potts_graph
 from ..core.estimators import recommended_capacity
 from ..runtime import dist_gibbs as DG
 from ..checkpoint import checkpoint as ckpt
+from .mesh import make_auto_mesh
 
 try:
     from jax import shard_map as _shard_map            # jax >= 0.8
@@ -46,14 +49,12 @@ def build_graph(name: str):
 
 def run(config: str, engine: str, steps: int, chains: int,
         ckpt_dir: str = "", log_every: int = 2000, mp_shards: int = 0,
-        seed: int = 0):
+        seed: int = 0, sweep: int = 0):
     g = build_graph(config)
     n_dev = len(jax.devices())
     mp = mp_shards or 1
     dp = n_dev // mp
-    auto = jax.sharding.AxisType.Auto
-    mesh = jax.make_mesh((dp, mp), ("data", "model"),
-                         axis_types=(auto, auto))
+    mesh = make_auto_mesh((dp, mp), ("data", "model"))
     # pad n to a multiple of mp for column sharding
     assert g.n % mp == 0, (g.n, mp)
     gs = DG.ShardedMatchGraph.from_graph(g, mp)
@@ -62,10 +63,15 @@ def run(config: str, engine: str, steps: int, chains: int,
     cap1 = recommended_capacity(max(lam1 / mp, 1.0)) + 8
     lam2 = float(min(2 * g.psi ** 2, 16384.0))
     cap2 = recommended_capacity(max(lam2 / mp, 1.0)) + 8
+    upd_per_step = max(sweep, 1)
+    if sweep > 1 and engine != "mgpmh":
+        raise ValueError(f"--sweep only supports the mgpmh engine, got "
+                         f"{engine}")
     if engine == "gibbs":
         step = DG.make_dist_gibbs_step(gs)
     elif engine == "mgpmh":
-        step = DG.make_dist_mgpmh_step(gs, lam1, cap1)
+        step = DG.make_dist_mgpmh_sweep(gs, lam1, cap1, sweep) if sweep > 1 \
+            else DG.make_dist_mgpmh_step(gs, lam1, cap1)
     elif engine == "doublemin":
         step = DG.make_dist_double_min_step(gs, lam1, cap1, lam2, cap2)
     else:
@@ -106,8 +112,12 @@ def run(config: str, engine: str, steps: int, chains: int,
             if (s + 1) % log_every == 0 or s == steps - 1:
                 marg = np.asarray(st.marg).sum(0) / (float(st.count) * chains)
                 err = float(np.sqrt(((marg - 1 / g.D) ** 2).sum(-1)).mean())
-                acc = float(np.asarray(st.accepts).mean()) / float(st.count)
-                rate = (s + 1 - start) * chains / (time.time() - t0)
+                # count counts accumulated samples (sweeps accumulate once
+                # per S site updates); acc is per site update either way
+                acc = float(np.asarray(st.accepts).mean()) \
+                    / (float(st.count) * upd_per_step)
+                rate = ((s + 1 - start) * chains * upd_per_step
+                        / (time.time() - t0))
                 print(f"[gibbs] step {s+1:7d} marg_err={err:.4f} "
                       f"acc={acc:.3f} {rate/1e3:.1f}k updates/s", flush=True)
                 if ckpt_dir:
@@ -124,10 +134,13 @@ def main():
     ap.add_argument("--steps", type=int, default=20_000)
     ap.add_argument("--chains", type=int, default=64)
     ap.add_argument("--mp-shards", type=int, default=0)
+    ap.add_argument("--sweep", type=int, default=0,
+                    help="site updates per launch (mgpmh only): one fused "
+                         "psum per sweep instead of two per update")
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
     run(args.config, args.engine, args.steps, args.chains,
-        ckpt_dir=args.ckpt_dir, mp_shards=args.mp_shards)
+        ckpt_dir=args.ckpt_dir, mp_shards=args.mp_shards, sweep=args.sweep)
 
 
 if __name__ == "__main__":

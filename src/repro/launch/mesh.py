@@ -9,19 +9,38 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "dp_axes", "MP_AXIS"]
+__all__ = ["make_production_mesh", "make_auto_mesh", "auto_axis_types",
+           "dp_axes", "MP_AXIS"]
 
 MP_AXIS = "model"
+
+
+def auto_axis_types(n_axes: int) -> dict:
+    """Version-compatible ``axis_types`` kwargs for ``jax.make_mesh``.
+
+    Newer jax exposes ``jax.sharding.AxisType`` and expects explicit
+    axis types; older releases have neither the enum nor the kwarg.
+    Returns ``{"axis_types": (Auto,) * n_axes}`` when available, else ``{}``
+    — callers splat it: ``jax.make_mesh(shape, axes, **auto_axis_types(2))``.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_auto_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types when the jax version has them."""
+    try:
+        return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
+    except TypeError:                      # older jax without axis_types kwarg
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    try:
-        auto = jax.sharding.AxisType.Auto
-        return jax.make_mesh(shape, axes, axis_types=(auto,) * len(axes))
-    except TypeError:                      # older jax without axis_types
-        return jax.make_mesh(shape, axes)
+    return make_auto_mesh(shape, axes)
 
 
 def dp_axes(mesh: jax.sharding.Mesh):

@@ -25,6 +25,7 @@ from ..optim.adamw import adamw_init
 from ..checkpoint import checkpoint as ckpt
 from ..runtime.fault import StepWatchdog, Heartbeat
 from . import steps as steps_lib
+from .mesh import make_auto_mesh
 from .shardings import param_pspecs, tree_named
 from jax.sharding import PartitionSpec as P
 
@@ -33,12 +34,7 @@ def make_mesh_for_host():
     """All local devices on one 'data' axis (the production mesh function
     lives in mesh.py; real runs use whatever topology is present)."""
     n = len(jax.devices())
-    auto = jax.sharding.AxisType.Auto
-    try:
-        return jax.make_mesh((n, 1), ("data", "model"),
-                             axis_types=(auto, auto))
-    except TypeError:
-        return jax.make_mesh((n, 1), ("data", "model"))
+    return make_auto_mesh((n, 1), ("data", "model"))
 
 
 def train(cfg, *, steps: int, global_batch: int, seq: int, ckpt_dir: str,

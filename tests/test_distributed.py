@@ -39,8 +39,8 @@ def test_dist_mgpmh_matches_reference():
         g = make_potts_graph(grid=2, beta=0.8, D=3)     # n=4, enumerable
         lam = float(4*g.L**2); cap = int(lam + 6*lam**0.5 + 16)
 
-        auto = jax.sharding.AxisType.Auto
-        mesh = jax.make_mesh((2,4), ("data","model"), axis_types=(auto,auto))
+        from repro.launch.mesh import make_auto_mesh
+        mesh = make_auto_mesh((2,4), ("data","model"))
         gs = DG.ShardedMatchGraph.from_graph(g, 4)
         step = DG.make_dist_mgpmh_step(gs, lam, cap)
         shard_specs = {"W_cols": P("model",None,None), "row_prob": P("model",None,None),
@@ -89,8 +89,8 @@ def test_compressed_psum_mean():
         from jax.experimental.shard_map import shard_map
         from repro.runtime.compression import compressed_psum_mean
 
-        auto = jax.sharding.AxisType.Auto
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(auto,))
+        from repro.launch.mesh import make_auto_mesh
+        mesh = make_auto_mesh((8,), ("data",))
         L = 1024
         x = jnp.asarray(np.random.default_rng(0).normal(size=(8, L)).astype(np.float32))
         err0 = jnp.zeros((8, L), jnp.float32)
@@ -164,8 +164,8 @@ def test_sharded_moe_matches_gspmd():
         import dataclasses, jax, jax.numpy as jnp
         from repro.configs.registry import SMOKES
         from repro.models import transformer as T, meshctx
-        auto = jax.sharding.AxisType.Auto
-        mesh = jax.make_mesh((2,4), ("data","model"), axis_types=(auto,auto))
+        from repro.launch.mesh import make_auto_mesh
+        mesh = make_auto_mesh((2,4), ("data","model"))
         for name, par in [("mixtral-8x7b","tp"), ("deepseek-v2-lite-16b","ep")]:
             cfg0 = dataclasses.replace(SMOKES[name], moe_parallelism=par)
             params = T.init_params(cfg0, jax.random.PRNGKey(0))
@@ -201,8 +201,8 @@ def test_dist_double_min_matches_reference():
         g = make_potts_graph(grid=2, beta=0.8, D=3)
         lam1 = float(4*g.L**2); cap1 = int(lam1 + 6*lam1**0.5 + 16)
         lam2 = float(2*g.psi**2); cap2 = int(lam2 + 6*lam2**0.5 + 16)
-        auto = jax.sharding.AxisType.Auto
-        mesh = jax.make_mesh((2,4), ("data","model"), axis_types=(auto,auto))
+        from repro.launch.mesh import make_auto_mesh
+        mesh = make_auto_mesh((2,4), ("data","model"))
         gs = DG.ShardedMatchGraph.from_graph(g, 4)
         step = DG.make_dist_double_min_step(gs, lam1, cap1, lam2, cap2)
         shard_specs = {"W_cols": P("model",None,None), "row_prob": P("model",None,None),

@@ -1,10 +1,28 @@
 """Pallas kernel validation: shape/dtype sweep + hypothesis property tests
-against the pure-jnp oracle (interpret mode on CPU)."""
+against the pure-jnp oracle (interpret mode on CPU).
+
+``hypothesis`` is optional: without it the property tests are skipped but
+the deterministic shape/dtype sweeps still run (a hard import here would
+error the entire tier-1 collection)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # pragma: no cover
+    def given(*_a, **_k):
+        def deco(f):
+            return pytest.mark.skip(reason="hypothesis not installed")(f)
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class st:  # placeholder strategies so decorator args still evaluate
+        integers = staticmethod(lambda *a, **k: None)
+        sampled_from = staticmethod(lambda *a, **k: None)
 
 from repro.kernels.ops import bucket_energy
 from repro.kernels.ref import bucket_energy_ref

@@ -1,0 +1,222 @@
+"""Fused multi-site sweep engine validation.
+
+Three layers:
+  * kernel parity — the fused Pallas sweep kernel (interpret mode on CPU)
+    must make bit-identical decisions to the jnp oracle when fed the same
+    pre-drawn uniforms, across padded/unaligned (C, S, K, D, n) shapes;
+  * distributional agreement — `make_*_sweep` chains (both impls route
+    through exact single-site updates) must converge to the exact
+    marginals of enumerable graphs, like the single-site reference;
+  * integration — `run_marginal_experiment` consumes batched sweeps, and
+    the distributed sweep (one psum per sweep) matches exact marginals.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (make_potts_graph, make_gibbs_sweep, make_mgpmh_sweep,
+                        init_chains, init_state, run_marginal_experiment,
+                        ChainState)
+from repro.core.factor_graph import TabularPairwiseGraph, build_alias_table
+from repro.kernels.ops import mgpmh_sweep, gibbs_sweep
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# kernel parity vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+def _random_graph_arrays(rng, n):
+    A = rng.uniform(0.1, 1.0, (n, n))
+    A = (A + A.T) / 2
+    np.fill_diagonal(A, 0)
+    rp = np.zeros((n, n), np.float32)
+    ra = np.zeros((n, n), np.int32)
+    for i in range(n):
+        rp[i], ra[i] = build_alias_table(A[i])
+    return jnp.asarray(A, jnp.float32), jnp.asarray(rp), jnp.asarray(ra)
+
+
+@pytest.mark.parametrize("C,S,K,D,n", [
+    (4, 5, 17, 3, 11),      # everything unaligned
+    (8, 8, 128, 10, 40),    # aligned K
+    (3, 1, 1, 2, 5),        # degenerate sweep
+    (5, 12, 33, 6, 20),
+    (2, 3, 9, 129, 7),      # D above one lane tile
+])
+def test_mgpmh_sweep_kernel_parity(C, S, K, D, n):
+    rng = np.random.default_rng(C * 100 + S * 10 + K + D + n)
+    W, rp, ra = _random_graph_arrays(rng, n)
+    x = jnp.asarray(rng.integers(0, D, (C, n)), jnp.int32)
+    i_sites = jnp.asarray(rng.integers(0, n, (C, S)), jnp.int32)
+    B = jnp.asarray(rng.integers(0, K + 1, (C, S)), jnp.int32)
+    u1 = jnp.asarray(rng.uniform(size=(C, S, K)), jnp.float32)
+    u2 = jnp.asarray(rng.uniform(size=(C, S, K)), jnp.float32)
+    g = jnp.asarray(rng.gumbel(size=(C, S, D)), jnp.float32)
+    lu = jnp.asarray(np.log(rng.uniform(size=(C, S))), jnp.float32)
+    args = (x, W, rp, ra, i_sites, B, u1, u2, g, lu)
+    xr, ar = mgpmh_sweep(*args, D=D, scale=0.7, impl="jnp")
+    xp, ap = mgpmh_sweep(*args, D=D, scale=0.7, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(xr), np.asarray(xp))
+    np.testing.assert_array_equal(np.asarray(ar), np.asarray(ap))
+
+
+@pytest.mark.parametrize("C,S,D,n", [
+    (4, 5, 3, 11), (8, 8, 10, 40), (3, 1, 2, 5),
+])
+def test_gibbs_sweep_kernel_parity(C, S, D, n):
+    rng = np.random.default_rng(C + S + D + n)
+    W, _, _ = _random_graph_arrays(rng, n)
+    x = jnp.asarray(rng.integers(0, D, (C, n)), jnp.int32)
+    i_sites = jnp.asarray(rng.integers(0, n, (C, S)), jnp.int32)
+    g = jnp.asarray(rng.gumbel(size=(C, S, D)), jnp.float32)
+    xr = gibbs_sweep(x, W, i_sites, g, D=D, impl="jnp")
+    xp = gibbs_sweep(x, W, i_sites, g, D=D, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(xr), np.asarray(xp))
+
+
+# ---------------------------------------------------------------------------
+# distributional agreement on enumerable graphs
+# ---------------------------------------------------------------------------
+
+def _exact_marginals(g):
+    tg = TabularPairwiseGraph.from_match_graph(g)
+    states = tg.all_states()
+    pi = tg.pi()
+    marg = np.zeros((g.n, g.D))
+    for p, s in zip(pi, states):
+        for i, v in enumerate(s):
+            marg[i, v] += p
+    return marg
+
+
+def _empirical_sweep_marginals(sweep, g, n_sweeps, n_chains=16, seed=0):
+    st = init_chains(jax.random.PRNGKey(seed), g, n_chains,
+                     lambda k, gg: init_state(k, gg, start="random"))
+
+    @jax.jit
+    def run(st):
+        def body(carry, _):
+            s, m = carry
+            s = sweep(s)
+            m = m + jax.nn.one_hot(s.x, g.D, dtype=jnp.float32)
+            return (s, m), None
+        m0 = jnp.zeros((n_chains, g.n, g.D), jnp.float32)
+        (s, m), _ = jax.lax.scan(body, (st, m0), None, length=n_sweeps)
+        return m.sum(0) / (n_sweeps * n_chains)
+    return np.asarray(run(st))
+
+
+def test_gibbs_sweep_marginals():
+    g = make_potts_graph(grid=2, beta=0.8, D=3)
+    sweep = make_gibbs_sweep(g, 8, impl="jnp")
+    emp = _empirical_sweep_marginals(sweep, g, 8000)
+    assert np.abs(emp - _exact_marginals(g)).max() < 0.03
+
+
+def test_mgpmh_sweep_marginals():
+    """Distributional agreement of the sweep chain with the exact pi on the
+    small Potts validator (i.e. with the single-site reference, which is
+    validated against the same exact marginals in test_samplers.py)."""
+    g = make_potts_graph(grid=2, beta=0.8, D=3)
+    lam = float(4 * g.L ** 2)
+    cap = int(lam + 6 * lam ** 0.5 + 16)
+    sweep = make_mgpmh_sweep(g, lam, cap, 8, impl="jnp")
+    emp = _empirical_sweep_marginals(sweep, g, 8000)
+    assert np.abs(emp - _exact_marginals(g)).max() < 0.03
+
+
+def test_mgpmh_sweep_kernel_impl_marginals():
+    """The Pallas-kernel impl (interpret mode) is also a correct chain —
+    short run, loose tolerance (the interpreter is slow)."""
+    g = make_potts_graph(grid=2, beta=0.8, D=3)
+    lam = float(4 * g.L ** 2)
+    cap = int(lam + 6 * lam ** 0.5 + 16)
+    sweep = make_mgpmh_sweep(g, lam, cap, 8, impl="pallas")
+    emp = _empirical_sweep_marginals(sweep, g, 600, n_chains=32)
+    assert np.abs(emp - _exact_marginals(g)).max() < 0.08
+
+
+# ---------------------------------------------------------------------------
+# integration
+# ---------------------------------------------------------------------------
+
+def test_run_marginal_experiment_with_sweep():
+    """The runner consumes batched sweeps; iters counts site updates and
+    the error trajectory decreases."""
+    g = make_potts_graph(grid=4, beta=1.0, D=4)
+    lam = float(4 * g.L ** 2)
+    cap = int(lam + 6 * lam ** 0.5 + 16)
+    sweep = make_mgpmh_sweep(g, lam, cap, 16, impl="jnp")
+    st = init_chains(jax.random.PRNGKey(0), g, 4, init_state)
+    tr = run_marginal_experiment(sweep, st, n_iters=8000, n_snapshots=4, D=4)
+    iters = np.asarray(tr.iters)
+    assert iters[-1] == 8000 and iters[0] == 2000  # site updates, not calls
+    err = np.asarray(tr.error)
+    assert err[-1] < err[0]
+    assert isinstance(tr.final, ChainState)
+
+
+def test_dist_mgpmh_sweep_matches_reference():
+    """Distributed sweep (2 dp x 4 mp, one psum per sweep) matches exact
+    marginals — subprocess for the 8-device host platform flag."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.core.factor_graph import make_potts_graph, TabularPairwiseGraph
+        from repro.runtime import dist_gibbs as DG
+        from repro.launch.mesh import make_auto_mesh
+
+        g = make_potts_graph(grid=2, beta=0.8, D=3)
+        lam = float(4*g.L**2); cap = int(lam + 6*lam**0.5 + 16)
+        mesh = make_auto_mesh((2,4), ("data","model"))
+        gs = DG.ShardedMatchGraph.from_graph(g, 4)
+        step = DG.make_dist_mgpmh_sweep(gs, lam, cap, 4)
+        shard_specs = {"W_cols": P("model",None,None), "row_prob": P("model",None,None),
+                       "row_alias": P("model",None,None), "row_sum": P("model",None),
+                       "pair_a": P("model",None), "pair_b": P("model",None),
+                       "pair_prob": P("model",None), "pair_alias": P("model",None),
+                       "psi_loc": P("model")}
+        st_specs = DG.DistState(x=P("data",None), cache=P("data"), key=P("data"),
+                                accepts=P("data"), marg=P("data","model",None), count=P())
+        smapped = shard_map(lambda st, sh: step(st, sh), mesh=mesh,
+                            in_specs=(st_specs, shard_specs), out_specs=st_specs,
+                            check_rep=False)
+        C = 64
+        st = DG.DistState(x=jnp.zeros((C, g.n), jnp.int32),
+                          cache=jnp.zeros((C,), jnp.float32),
+                          key=jax.random.split(jax.random.PRNGKey(0), 2),
+                          accepts=jnp.zeros((C,), jnp.int32),
+                          marg=jnp.zeros((C, g.n, g.D), jnp.float32),
+                          count=jnp.int32(0))
+        sh = {k: getattr(gs, k) for k in shard_specs}
+        with mesh:
+            jstep = jax.jit(smapped, donate_argnums=(0,))
+            for _ in range(1500):
+                st = jstep(st, sh)
+        emp = np.asarray(st.marg).sum(0) / (float(st.count) * C)
+        tg = TabularPairwiseGraph.from_match_graph(g)
+        pi = tg.pi(); states = tg.all_states()
+        exact = np.zeros((g.n, g.D))
+        for p_, s_ in zip(pi, states):
+            for i, v in enumerate(s_):
+                exact[i, v] += p_
+        err = np.abs(emp - exact).max()
+        print("ERR", err)
+        assert err < 0.05, err
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ERR" in out.stdout
