@@ -4,6 +4,11 @@ Default scales are chosen to finish on a single CPU core in seconds-to-
 minutes; ``--paper-scale`` reproduces the paper's exact setting (20x20
 grid, beta = 1.0 / 4.6, 10^6 iterations) at correspondingly higher runtime.
 Every benchmark prints ``name,us_per_call,derived`` CSV rows.
+
+All sampler benchmarks drive :class:`repro.core.engine.Engine` objects;
+``row(..., **eng.describe())`` stamps each JSON record with the engine /
+backend / schedule identity so the perf trajectory is attributable across
+API changes.
 """
 from __future__ import annotations
 
@@ -12,36 +17,46 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (make_ising_graph, make_potts_graph, init_chains,
-                        init_state, run_marginal_experiment)
+from repro.core import (make_ising_graph, make_potts_graph,
+                        run_marginal_experiment)
 
 
-def timed_steps(step_fn, state, n_iters: int, n_chains: int, D: int,
+def timed_steps(eng, state, n_iters: int, n_chains: int,
                 n_snapshots: int = 8):
-    """Run + time a sampler; returns (us_per_update, error trajectory)."""
-    tr = run_marginal_experiment(step_fn, state, n_iters=64,
-                                 n_snapshots=1, D=D)          # compile
+    """Run + time an Engine through the marginal experiment; returns
+    (us_per_update, error trajectory, iters).
+
+    The compile warm-up must use the SAME (n_iters, n_snapshots) — they are
+    jit-static in the runner, so a smaller warm-up run would leave the real
+    signature's compile inside the timed window.  The trace length is
+    scan-compressed, so compiling the full n_iters signature is cheap; only
+    the warm-up's *execution* costs a second full run.
+    """
+    tr = run_marginal_experiment(eng, state, n_iters=n_iters,
+                                 n_snapshots=n_snapshots)      # compile+warm
     jax.block_until_ready(tr.error)
     t0 = time.perf_counter()
-    tr = run_marginal_experiment(step_fn, state, n_iters=n_iters,
-                                 n_snapshots=n_snapshots, D=D)
+    tr = run_marginal_experiment(eng, state, n_iters=n_iters,
+                                 n_snapshots=n_snapshots)
     jax.block_until_ready(tr.error)
     dt = time.perf_counter() - t0
-    us = dt * 1e6 / (n_iters * n_chains)
+    updates = int(np.asarray(tr.iters)[-1])
+    us = dt * 1e6 / (updates * n_chains)
     return us, np.asarray(tr.error), np.asarray(tr.iters)
 
 
 # Machine-readable perf trajectory: every row() call also appends a record
 # here; ``run.py --json PATH`` dumps them as BENCH_kernel.json-style
-# entries {name, us_per_call, derived, [sites_per_sec, ...]}.
+# entries {name, us_per_call, derived, engine, backend, schedule, ...}.
 RECORDS: list = []
 
 
 def row(name: str, us: float, derived: str, **extra):
     """Print one ``name,us_per_call,derived`` CSV row and record it.
 
-    ``extra`` holds machine-readable derived metrics (e.g.
-    ``sites_per_sec=...``) that only land in the JSON record.
+    ``extra`` holds machine-readable fields that only land in the JSON
+    record: derived metrics (``sites_per_sec=...``) and the engine identity
+    (pass ``**eng.describe()`` for engine/backend/schedule/updates_per_call).
     """
     print(f"{name},{us:.3f},{derived}", flush=True)
     RECORDS.append({"name": name, "us_per_call": round(us, 3),

@@ -6,9 +6,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import (init_chains, init_state, init_min_gibbs_cache,
-                        make_gibbs_step, make_min_gibbs_step,
-                        recommended_capacity)
+from repro.core import engine
 from .common import bench_graphs, timed_steps, row
 
 
@@ -17,18 +15,17 @@ def run(paper_scale: bool = False):
     iters = 1_000_000 if paper_scale else 30_000
     C = 4
     key = jax.random.PRNGKey(0)
-    st = init_chains(key, g, C, init_state)
 
-    us, err, it = timed_steps(make_gibbs_step(g), st, iters, C, g.D)
-    row("fig1/gibbs", us, f"err_traj={[float(e) for e in err.round(4)]}")
+    ref = engine.make("gibbs", g, backend="jnp")
+    us, err, it = timed_steps(ref, ref.init(key, C), iters, C)
+    row("fig1/gibbs", us, f"err_traj={[float(e) for e in err.round(4)]}",
+        **ref.describe())
 
     psi2 = g.psi ** 2
     for mult in (0.25, 1.0, 4.0):
         lam = float(mult * psi2)
-        cap = recommended_capacity(lam)
-        st_m = jax.vmap(lambda k, s: init_min_gibbs_cache(
-            k, g, s, lam, cap))(jax.random.split(key, C), st)
-        step = make_min_gibbs_step(g, lam, cap)
-        us, err, _ = timed_steps(step, st_m, iters, C, g.D)
+        eng = engine.make("min-gibbs", g, lam=lam)
+        us, err, _ = timed_steps(eng, eng.init(key, C), iters, C)
         row(f"fig1/min_gibbs_lam{mult}psi2", us,
-            f"lam={lam:.0f};err_traj={[float(e) for e in err.round(4)]}")
+            f"lam={lam:.0f};err_traj={[float(e) for e in err.round(4)]}",
+            **eng.describe())

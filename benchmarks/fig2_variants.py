@@ -9,10 +9,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import (init_chains, init_state, init_double_min_cache,
-                        make_gibbs_step, make_local_gibbs_step,
-                        make_mgpmh_step, make_double_min_step,
-                        recommended_capacity)
+from repro.core import engine
 from .common import bench_graphs, timed_steps, row
 
 
@@ -21,38 +18,38 @@ def run(paper_scale: bool = False):
     iters = 1_000_000 if paper_scale else 30_000
     C = 4
     key = jax.random.PRNGKey(0)
-    st = init_chains(key, g, C, init_state)
 
-    us, err, _ = timed_steps(make_gibbs_step(g), st, iters, C, g.D)
-    row("fig2/gibbs", us, f"err_traj={[float(e) for e in err.round(4)]}")
+    ref = engine.make("gibbs", g, backend="jnp")
+    us, err, _ = timed_steps(ref, ref.init(key, C), iters, C)
+    row("fig2/gibbs", us, f"err_traj={[float(e) for e in err.round(4)]}",
+        **ref.describe())
 
     # (a) Local Minibatch Gibbs
     for B in (8, 32, 128):
         B = min(B, g.n - 1)
-        us, err, _ = timed_steps(make_local_gibbs_step(g, B), st, iters,
-                                 C, g.D)
-        row(f"fig2a/local_B{B}", us, f"err_traj={[float(e) for e in err.round(4)]}")
+        eng = engine.make("local-gibbs", g, batch_size=B)
+        us, err, _ = timed_steps(eng, eng.init(key, C), iters, C)
+        row(f"fig2a/local_B{B}", us,
+            f"err_traj={[float(e) for e in err.round(4)]}",
+            **eng.describe())
 
     # (b) MGPMH, lambda in multiples of L^2
     L2 = g.L ** 2
     for mult in (1.0, 2.0, 4.0):
         lam = float(mult * L2)
-        cap = recommended_capacity(lam)
-        us, err, it = timed_steps(make_mgpmh_step(g, lam, cap), st, iters,
-                                  C, g.D)
+        eng = engine.make("mgpmh", g, backend="jnp", lam=lam)
+        us, err, it = timed_steps(eng, eng.init(key, C), iters, C)
         row(f"fig2b/mgpmh_lam{mult}L2", us,
-            f"lam={lam:.1f};err_traj={[float(e) for e in err.round(4)]}")
+            f"lam={lam:.1f};err_traj={[float(e) for e in err.round(4)]}",
+            **eng.describe())
 
     # (c) DoubleMIN, lambda_1 = L^2 fixed, lambda_2 in multiples of Psi^2
     lam1 = float(L2)
-    cap1 = recommended_capacity(lam1)
     psi2 = g.psi ** 2
     for mult in (1.0, 2.0):
         lam2 = float(mult * psi2)
-        cap2 = recommended_capacity(lam2)
-        st_d = jax.vmap(lambda k, s: init_double_min_cache(
-            k, g, s, lam2, cap2))(jax.random.split(key, C), st)
-        step = make_double_min_step(g, lam1, cap1, lam2, cap2)
-        us, err, _ = timed_steps(step, st_d, iters, C, g.D)
+        eng = engine.make("doublemin", g, lam1=lam1, lam2=lam2)
+        us, err, _ = timed_steps(eng, eng.init(key, C), iters, C)
         row(f"fig2c/double_lam2_{mult}psi2", us,
-            f"lam2={lam2:.0f};err_traj={[float(e) for e in err.round(4)]}")
+            f"lam2={lam2:.0f};err_traj={[float(e) for e in err.round(4)]}",
+            **eng.describe())

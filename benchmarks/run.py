@@ -2,8 +2,10 @@
 Prints ``name,us_per_call,derived`` CSV.  ``--paper-scale`` switches the
 Gibbs benchmarks to the paper's exact 20x20 / 10^6-iteration setting.
 ``--json PATH`` additionally writes every row as a BENCH_kernel.json-style
-record (name, us_per_call, derived, plus metric fields like sites_per_sec)
-so the perf trajectory is machine-readable across PRs."""
+record (name, us_per_call, derived, engine identity fields
+engine/backend/schedule/updates_per_call, plus metric fields like
+sites_per_sec) so the perf trajectory is machine-readable and attributable
+across PRs."""
 import argparse
 import json
 

@@ -3,19 +3,22 @@
 paper's default 20x20 Potts graph at (C=256 chains, S=64).
 
 Two single-site baselines bracket the comparison:
-  * ``engine_single_site`` — the repo's production dispatch pattern (one
-    jitted call, one alias-table gather pass and one padded bucket_energy
-    call per single-variable update: ``runtime/dist_gibbs.py`` driven like
-    ``launch/gibbs.py`` drives it).  This is the launch-bound path the
-    sweep engine replaces; the headline speedup row is measured against it.
+  * ``engine_single_site`` — the repo's production dispatch pattern (the
+    dist-backend engine on a 1x1 mesh: one jitted shard_map'd call per
+    single-variable update).  This is the launch-bound path the sweep
+    engine replaces; the headline speedup row is measured against it.
   * ``scan_single_site``  — the best case for single-site execution: the
-    step fully fused inside ``lax.scan`` (``chains.run_marginal_
-    experiment``), paying no dispatch, only per-update compute + snapshot
-    accumulation.
+    sweep=1 engine fully fused inside ``lax.scan``
+    (``chains.run_marginal_experiment``), paying no dispatch, only
+    per-update compute + snapshot accumulation.
 
-On CPU the sweep path is the fused jnp schedule (`make_mgpmh_sweep`
-impl='jnp'); the Pallas kernel runs interpret-mode on CPU (correctness,
-not speed — a small row tracks it) and is the TPU path.
+All rows are registry engines (``engine.make``); records carry the
+engine/backend/schedule identity.  On CPU the sweep path is the fused jnp
+schedule; the Pallas kernel runs interpret-mode on CPU (correctness, not
+speed — a small row tracks it) and is the TPU path.  The newly-swept
+MIN-Gibbs and DoubleMIN engines get their own rows (smaller shapes: their
+upfront draw buffers scale with lam), plus a chromatic-blocks row on the
+sparse lattice Ising.
 """
 from __future__ import annotations
 
@@ -23,14 +26,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.core import (make_potts_graph, make_mgpmh_step, make_mgpmh_sweep,
-                        init_chains, init_state, run_marginal_experiment,
-                        recommended_capacity)
-from repro.runtime import dist_gibbs as DG
-from repro.launch.gibbs import shard_map
+from repro.core import (engine, make_potts_graph, make_lattice_ising,
+                        lattice_colors, run_marginal_experiment)
 from repro.launch.mesh import make_auto_mesh
 from .common import row
 
@@ -47,68 +45,50 @@ def _tmin(f, *args, reps=3):
     return min(ts)
 
 
-def _time_experiment(step, st, n_iters, D):
+def _time_experiment(eng, st, n_iters):
     return _tmin(lambda s: run_marginal_experiment(
-        s, st, n_iters=n_iters, n_snapshots=1, D=D).error, step)
+        s, st, n_iters=n_iters, n_snapshots=1).error, eng)
 
 
-def _engine_single_site_us(g, lam, cap, C, n_calls):
-    """Per-update cost of the dist-engine step dispatched per update
+def _engine_single_site_us(g, C, n_calls):
+    """Per-update cost of the dist-backend engine dispatched per update
     (single device / single shard), including marginal accumulation."""
-    gs = DG.ShardedMatchGraph.from_graph(g, 1)
-    step = DG.make_dist_mgpmh_step(gs, lam, cap)
     mesh = make_auto_mesh((1, 1), ("data", "model"))
-    shard_specs = {
-        "W_cols": P("model", None, None), "row_prob": P("model", None, None),
-        "row_alias": P("model", None, None), "row_sum": P("model", None),
-        "pair_a": P("model", None), "pair_b": P("model", None),
-        "pair_prob": P("model", None), "pair_alias": P("model", None),
-        "psi_loc": P("model")}
-    st_specs = DG.DistState(x=P("data", None), cache=P("data"),
-                            key=P("data"), accepts=P("data"),
-                            marg=P("data", "model", None), count=P())
-    smapped = shard_map(lambda st, sh: step(st, sh), mesh,
-                        (st_specs, shard_specs), st_specs)
-    st = DG.dist_init_state(C, g.n, g.n, g.D,
-                            jax.random.split(jax.random.PRNGKey(0), 1))
-    sh = {k: getattr(gs, k) for k in shard_specs}
-    with mesh:
-        jstep = jax.jit(smapped, donate_argnums=(0,))
-        st = jstep(st, sh)
-        jax.block_until_ready(st.x)
-        t0 = time.perf_counter()
-        for _ in range(n_calls):
-            st = jstep(st, sh)
-        jax.block_until_ready(st.x)
-        dt = time.perf_counter() - t0
-    return dt * 1e6 / (n_calls * C)
+    eng = engine.make("mgpmh", g, backend="dist", mesh=mesh)
+    st = eng.init(jax.random.PRNGKey(0), C)
+    st = eng.sweep(st)
+    jax.block_until_ready(st.x)
+    t0 = time.perf_counter()
+    for _ in range(n_calls):
+        st = eng.sweep(st)
+    jax.block_until_ready(st.x)
+    dt = time.perf_counter() - t0
+    return dt * 1e6 / (n_calls * C), eng
 
 
 def run(paper_scale: bool = False):
     C, S = 256, 64
     g = make_potts_graph(20, 4.6, 10)          # the paper's Potts model
-    lam = float(4 * g.L ** 2)
-    cap = recommended_capacity(lam)
-    st = init_chains(jax.random.PRNGKey(0), g, C, init_state)
+    key = jax.random.PRNGKey(0)
 
-    us_engine = _engine_single_site_us(g, lam, cap, C,
-                                       n_calls=200 if not paper_scale
-                                       else 1000)
+    us_engine, deng = _engine_single_site_us(
+        g, C, n_calls=200 if not paper_scale else 1000)
     row(f"sweep/engine_single_site_C{C}", us_engine,
         f"sites_per_sec={1e6 / us_engine:.0f} (per-update jitted dispatch)",
-        sites_per_sec=round(1e6 / us_engine))
+        sites_per_sec=round(1e6 / us_engine), **deng.describe())
 
     n_single = 512 if not paper_scale else 4096
-    step = make_mgpmh_step(g, lam=lam, capacity=cap)
-    dt = _time_experiment(step, st, n_single, g.D)
+    eng1 = engine.make("mgpmh", g, backend="jnp")
+    st = eng1.init(key, C)
+    dt = _time_experiment(eng1, st, n_single)
     us_scan = dt * 1e6 / (n_single * C)
     row(f"sweep/scan_single_site_C{C}", us_scan,
         f"sites_per_sec={n_single * C / dt:.0f} (fully lax.scan-fused)",
-        sites_per_sec=round(n_single * C / dt))
+        sites_per_sec=round(n_single * C / dt), **eng1.describe())
 
     n_sweep = (64 if not paper_scale else 512) * S
-    sweep = make_mgpmh_sweep(g, lam, cap, S, impl="jnp")
-    dt = _time_experiment(sweep, st, n_sweep, g.D)
+    engS = engine.make("mgpmh", g, sweep=S, backend="jnp")
+    dt = _time_experiment(engS, st, n_sweep)
     us_sweep = dt * 1e6 / (n_sweep * C)
     sps = n_sweep * C / dt
     row(f"sweep/fused_mgpmh_C{C}_S{S}", us_sweep,
@@ -117,37 +97,90 @@ def run(paper_scale: bool = False):
         f"{us_scan / us_sweep:.2f}x",
         sites_per_sec=round(sps),
         speedup_vs_engine=round(us_engine / us_sweep, 2),
-        speedup_vs_scan=round(us_scan / us_sweep, 2))
+        speedup_vs_scan=round(us_scan / us_sweep, 2), **engS.describe())
+
+    _run_newly_swept_rows(g, paper_scale)
+    _run_chromatic_row(paper_scale)
 
     if jax.default_backend() == "tpu":
-        _run_tpu_kernel_rows(g, lam, cap, C, S)
+        _run_tpu_kernel_rows(g, C, S)
     else:
         # fused Pallas kernel, interpret mode (correctness path; perf
         # target is the TPU MXU) — small shape to keep the interpreter
         # tractable
         Ck, Sk = 16, 8
-        stk = init_chains(jax.random.PRNGKey(1), g, Ck, init_state)
-        sweep_k = make_mgpmh_sweep(g, lam, cap, Sk, impl="pallas")
+        engK = engine.make("mgpmh", g, sweep=Sk, backend="pallas")
+        stk = engK.init(jax.random.PRNGKey(1), Ck)
         t0 = time.perf_counter()
-        jax.block_until_ready(sweep_k(stk).x)
+        jax.block_until_ready(engK.sweep(stk).x)
         dt = time.perf_counter() - t0
         row(f"sweep/pallas_interp_C{Ck}_S{Sk}", dt * 1e6 / (Sk * Ck),
-            "interpret-mode incl. compile (correctness path)")
+            "interpret-mode incl. compile (correctness path)",
+            **engK.describe())
 
 
-def _run_tpu_kernel_rows(g, lam, cap, C, S):
-    """Compiled-kernel rows (TPU only): host-rng kernel via the sampler
+def _run_newly_swept_rows(g, paper_scale):
+    """MIN-Gibbs and DoubleMIN on the sweep path (PR 2 coverage): modest
+    (C, S) and capped lam — their upfront draw buffers are O(C*S*D*lam)
+    resp. O(C*S*lam2) — so the row tracks schedule overhead, not paging."""
+    key = jax.random.PRNGKey(2)
+    C, S = 64, 8
+    n_sweep = (16 if not paper_scale else 128) * S
+
+    eng_m = engine.make("min-gibbs", g, sweep=S,
+                        lam=min(float(g.psi ** 2), 1024.0))
+    st = eng_m.init(key, C)
+    dt = _time_experiment(eng_m, st, n_sweep)
+    sps = n_sweep * C / dt
+    row(f"sweep/fused_min_gibbs_C{C}_S{S}", dt * 1e6 / (n_sweep * C),
+        f"sites_per_sec={sps:.0f} lam={eng_m.params['lam']:.0f}",
+        sites_per_sec=round(sps), **eng_m.describe())
+
+    eng_d = engine.make("doublemin", g, sweep=S,
+                        lam2=min(float(g.psi ** 2), 4096.0))
+    st = eng_d.init(key, C)
+    dt = _time_experiment(eng_d, st, n_sweep)
+    sps = n_sweep * C / dt
+    row(f"sweep/fused_doublemin_C{C}_S{S}", dt * 1e6 / (n_sweep * C),
+        f"sites_per_sec={sps:.0f} lam2={eng_d.params['lam2']:.0f}",
+        sites_per_sec=round(sps), **eng_d.describe())
+
+
+def _run_chromatic_row(paper_scale):
+    """Chromatic-blocks schedule on the sparse lattice Ising: one call
+    updates every site (two fused color-block launches)."""
+    grid = 32 if not paper_scale else 64
+    g = make_lattice_ising(grid, beta=0.4)
+    eng = engine.make(
+        "gibbs", g, backend="jnp",
+        schedule=engine.ChromaticBlocks(lattice_colors(grid)))
+    C = 64
+    st = eng.init(jax.random.PRNGKey(3), C)
+    calls = 8 if not paper_scale else 64
+    dt = _time_experiment(eng, st, calls * eng.updates_per_call)
+    sps = calls * eng.updates_per_call * C / dt
+    row(f"sweep/chromatic_lattice{grid}_C{C}",
+        dt * 1e6 / (calls * eng.updates_per_call * C),
+        f"sites_per_sec={sps:.0f} (full-lattice block sweep per call)",
+        sites_per_sec=round(sps), **eng.describe())
+
+
+def _run_tpu_kernel_rows(g, C, S):
+    """Compiled-kernel rows (TPU only): host-rng kernel via the engine
     dispatch, plus the in-kernel-PRNG variant (host_rng=False, no random
     streams in HBM) called on pre-padded inputs."""
     from repro.kernels.fused_sweep import mgpmh_sweep_pallas_rng
 
-    st = init_chains(jax.random.PRNGKey(1), g, C, init_state)
-    sweep_k = make_mgpmh_sweep(g, lam, cap, S, impl="pallas")
-    dt = _tmin(sweep_k, st)
+    engK = engine.make("mgpmh", g, sweep=S, backend="pallas")
+    st = engK.init(jax.random.PRNGKey(1), C)
+    dt = _tmin(engK.sweep, st)
     row(f"sweep/pallas_tpu_C{C}_S{S}", dt * 1e6 / (S * C),
         f"sites_per_sec={S * C / dt:.0f} (compiled, host rng)",
-        sites_per_sec=round(S * C / dt))
+        sites_per_sec=round(S * C / dt), **engK.describe())
 
+    # mirror the engine row's resolved parameters exactly
+    lam = engK.params["lam"]
+    cap = engK.params["capacity"]
     up = lambda v, m: -(-v // m) * m
     n, D = g.n, g.D
     Np, Sp, Dp, Kp = up(n, 128), up(S, 128), up(D, 128), up(cap, 128)

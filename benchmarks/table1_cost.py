@@ -3,17 +3,14 @@
 Measures wall-time per update for Gibbs / MIN-Gibbs / Local-MB / MGPMH /
 DoubleMIN on the same graph family at increasing degree Delta, reporting
 the paper's asymptotic story (Gibbs grows with D*Delta; MGPMH's minibatch
-part does not) as derived columns.
+part does not) as derived columns.  All five rows are engines from the
+registry at sweep=1 (single-site cost, the paper's accounting unit).
 """
 from __future__ import annotations
 
 import jax
 
-from repro.core import (make_potts_graph, init_chains, init_state,
-                        init_min_gibbs_cache, init_double_min_cache,
-                        make_gibbs_step, make_min_gibbs_step,
-                        make_local_gibbs_step, make_mgpmh_step,
-                        make_double_min_step, recommended_capacity)
+from repro.core import engine, make_potts_graph
 from .common import timed_steps, row
 
 
@@ -26,26 +23,18 @@ def run(paper_scale: bool = False):
     for grid in grids:
         g = make_potts_graph(grid, beta, D)
         delta = g.delta
-        lam_g = float(4 * g.L ** 2)
-        cap_g = recommended_capacity(lam_g)
         lam_m = min(float(g.psi ** 2), 4096.0)
-        cap_m = recommended_capacity(lam_m)
         key = jax.random.PRNGKey(0)
-        st = init_chains(key, g, C, init_state)
-        st_min = jax.vmap(lambda k, s: init_min_gibbs_cache(
-            k, g, s, lam_m, cap_m))(jax.random.split(key, C), st)
-        st_dbl = jax.vmap(lambda k, s: init_double_min_cache(
-            k, g, s, lam_m, cap_m))(jax.random.split(key, C), st)
         cases = [
-            ("gibbs", make_gibbs_step(g), st),
-            ("min_gibbs", make_min_gibbs_step(g, lam_m, cap_m), st_min),
-            ("local_b32", make_local_gibbs_step(g, min(32, g.n - 1)), st),
-            ("mgpmh", make_mgpmh_step(g, lam_g, cap_g), st),
-            ("double_min", make_double_min_step(g, lam_g, cap_g,
-                                                lam_m, cap_m), st_dbl),
+            engine.make("gibbs", g, backend="jnp"),
+            engine.make("min-gibbs", g, lam=lam_m),
+            engine.make("local-gibbs", g, batch_size=min(32, g.n - 1)),
+            engine.make("mgpmh", g, backend="jnp"),
+            engine.make("doublemin", g, lam2=lam_m),
         ]
-        for name, step, st0 in cases:
-            us, err, _ = timed_steps(step, st0, iters, C, D)
+        names = ["gibbs", "min_gibbs", "local_b32", "mgpmh", "double_min"]
+        for name, eng in zip(names, cases):
+            us, err, _ = timed_steps(eng, eng.init(key, C), iters, C)
             row(f"table1/{name}/delta{delta}", us,
                 f"D={D};Delta={delta};L2={g.L**2:.1f};Psi2={g.psi**2:.0f};"
-                f"final_err={err[-1]:.4f}")
+                f"final_err={err[-1]:.4f}", **eng.describe())

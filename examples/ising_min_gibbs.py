@@ -11,15 +11,14 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core import (make_ising_graph, make_gibbs_step,
-                        make_min_gibbs_step, init_chains, init_state,
-                        init_min_gibbs_cache, run_marginal_experiment,
-                        recommended_capacity)
+from repro.core import engine, make_ising_graph, run_marginal_experiment
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--sweep", type=int, default=8,
+                    help="fused site updates per engine call")
     args = ap.parse_args()
     if args.paper_scale:
         g, iters = make_ising_graph(20, 1.0), 1_000_000
@@ -29,19 +28,19 @@ def main():
 
     C = 8
     key = jax.random.PRNGKey(0)
-    st = init_chains(key, g, C, init_state)
-    tr = run_marginal_experiment(make_gibbs_step(g), st, n_iters=iters,
-                                 n_snapshots=8, D=2)
+    ref = engine.make("gibbs", g, sweep=args.sweep)
+    tr = run_marginal_experiment(ref, ref.init(key, C), n_iters=iters,
+                                 n_snapshots=8)
     print("gibbs        ", np.round(np.asarray(tr.error), 4))
 
+    # Fig 1 sweep over the estimator batch size lam in multiples of Psi^2.
+    # engine.init seeds Alg 2's cached-energy augmented state; the sweep
+    # threads it through the fused update loop.
     for mult in (0.25, 1.0, 4.0):
         lam = float(mult * g.psi ** 2)
-        cap = recommended_capacity(lam)
-        st_m = jax.vmap(lambda k, s: init_min_gibbs_cache(k, g, s, lam, cap)
-                        )(jax.random.split(key, C), st)
-        step = make_min_gibbs_step(g, lam, cap)
-        tr = run_marginal_experiment(step, st_m, n_iters=iters,
-                                     n_snapshots=8, D=2)
+        eng = engine.make("min-gibbs", g, sweep=args.sweep, lam=lam)
+        tr = run_marginal_experiment(eng, eng.init(key, C), n_iters=iters,
+                                     n_snapshots=8)
         print(f"min lam={mult:>4}Psi^2", np.round(np.asarray(tr.error), 4))
 
 

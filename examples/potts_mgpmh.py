@@ -8,15 +8,14 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core import (make_potts_graph, make_gibbs_step, make_mgpmh_step,
-                        make_double_min_step, init_chains, init_state,
-                        init_double_min_cache, run_marginal_experiment,
-                        recommended_capacity)
+from repro.core import engine, make_potts_graph, run_marginal_experiment
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--sweep", type=int, default=8,
+                    help="fused site updates per engine call")
     args = ap.parse_args()
     if args.paper_scale:
         g, iters = make_potts_graph(20, 4.6, 10), 1_000_000
@@ -27,33 +26,31 @@ def main():
 
     C = 8
     key = jax.random.PRNGKey(0)
-    st = init_chains(key, g, C, init_state)
-    tr = run_marginal_experiment(make_gibbs_step(g), st, n_iters=iters,
-                                 n_snapshots=8, D=g.D)
+    ref = engine.make("gibbs", g, sweep=args.sweep)
+    tr = run_marginal_experiment(ref, ref.init(key, C), n_iters=iters,
+                                 n_snapshots=8)
     print("gibbs           ", np.round(np.asarray(tr.error), 4))
 
-    # Fig 2(b): MGPMH
+    # Fig 2(b): MGPMH, proposal batch in multiples of L^2
     for mult in (1.0, 2.0, 4.0):
         lam = float(mult * g.L ** 2)
-        step = make_mgpmh_step(g, lam, recommended_capacity(lam))
-        tr = run_marginal_experiment(step, st, n_iters=iters,
-                                     n_snapshots=8, D=g.D)
-        acc = float(np.mean(np.asarray(tr.final.accepts))) / iters
+        eng = engine.make("mgpmh", g, sweep=args.sweep, lam=lam)
+        tr = run_marginal_experiment(eng, eng.init(key, C), n_iters=iters,
+                                     n_snapshots=8)
+        updates = int(np.asarray(tr.iters)[-1])
+        acc = float(np.mean(np.asarray(tr.final.accepts))) / updates
         print(f"mgpmh lam={mult}L^2  ",
               np.round(np.asarray(tr.error), 4), f"acc={acc:.3f}")
 
-    # Fig 2(c): DoubleMIN (second minibatch in multiples of Psi^2)
+    # Fig 2(c): DoubleMIN (second minibatch in multiples of Psi^2);
+    # engine.init seeds the cached xi_x augmented state (Thm 5)
     lam1 = float(g.L ** 2)
-    cap1 = recommended_capacity(lam1)
     for mult in (1.0, 2.0):
         lam2 = float(mult * g.psi ** 2)
-        cap2 = recommended_capacity(lam2)
-        st_d = jax.vmap(lambda k, s: init_double_min_cache(k, g, s, lam2,
-                                                           cap2)
-                        )(jax.random.split(key, C), st)
-        step = make_double_min_step(g, lam1, cap1, lam2, cap2)
-        tr = run_marginal_experiment(step, st_d, n_iters=iters,
-                                     n_snapshots=8, D=g.D)
+        eng = engine.make("doublemin", g, sweep=args.sweep, lam1=lam1,
+                          lam2=lam2)
+        tr = run_marginal_experiment(eng, eng.init(key, C), n_iters=iters,
+                                     n_snapshots=8)
         print(f"double l2={mult}Psi^2",
               np.round(np.asarray(tr.error), 4))
 

@@ -25,14 +25,10 @@ _MODULES = {
 ARCHS: Dict[str, ModelConfig] = {k: m.CONFIG for k, m in _MODULES.items()}
 SMOKES: Dict[str, ModelConfig] = {k: m.SMOKE for k, m in _MODULES.items()}
 
-# The paper's own workload configurations (Gibbs engine) — selectable through
-# the same launcher (`--arch ising-20x20` etc.); see repro.runtime.dist_gibbs.
-GIBBS_CONFIGS = {
-    "ising-20x20":  dict(kind="ising", grid=20, beta=1.0, D=2),
-    "potts-20x20":  dict(kind="potts", grid=20, beta=4.6, D=10),
-    "ising-128x128": dict(kind="ising", grid=128, beta=1.0, D=2),
-    "potts-64x64":  dict(kind="potts", grid=64, beta=4.6, D=10),
-}
+# The paper's workload configurations moved to the engine/workload registry
+# (repro.core.engine.WORKLOADS / make_workload) — this deprecated alias keeps
+# old imports working; new code should use the engine registry directly.
+from ..core.engine import WORKLOADS as GIBBS_CONFIGS  # noqa: E402,F401
 
 
 def get_arch(name: str, smoke: bool = False) -> ModelConfig:

@@ -1,17 +1,23 @@
-"""Core library: the paper's minibatch Gibbs algorithms.
+"""Core library: the paper's minibatch Gibbs algorithms behind the unified
+Engine API.
 
 Public API:
+  Engine API:     engine.make(name, graph, sweep=S, backend=...), Engine,
+                  UniformSites, ChromaticBlocks, make_workload, WORKLOADS
   Factor graphs:  MatchGraph, TabularPairwiseGraph, make_ising_graph,
-                  make_potts_graph
-  Samplers:       make_gibbs_step, make_min_gibbs_step, make_local_gibbs_step,
-                  make_mgpmh_step, make_double_min_step, ChainState, init_state
+                  make_potts_graph, make_lattice_ising, lattice_colors
+  Samplers:       single-chain reference steps make_gibbs_step,
+                  make_min_gibbs_step, make_local_gibbs_step,
+                  make_mgpmh_step, make_double_min_step; ChainState,
+                  init_state
   Estimators:     lemma2_lambda, recommended_capacity, min_gibbs_estimate
-  Runner:         init_chains, run_marginal_experiment
+  Runner:         init_chains, run_marginal_experiment (Engine-only)
   Exact theory:   spectral (transition matrices, gaps, theorem checks)
 """
 from .factor_graph import (MatchGraph, TabularPairwiseGraph,
                            gaussian_kernel_interactions, make_ising_graph,
-                           make_potts_graph, build_alias_table, alias_draw)
+                           make_potts_graph, make_lattice_ising,
+                           lattice_colors, build_alias_table, alias_draw)
 from .estimators import (lemma2_lambda, recommended_capacity,
                          capacity_overflow_prob, draw_global_minibatch,
                          draw_local_minibatch, min_gibbs_estimate)
@@ -20,6 +26,9 @@ from .samplers import (ChainState, init_state, make_gibbs_step,
                        make_mgpmh_step, make_double_min_step,
                        make_gibbs_sweep, make_mgpmh_sweep,
                        init_min_gibbs_cache, init_double_min_cache)
+from . import engine
+from .engine import (Engine, Schedule, UniformSites, ChromaticBlocks,
+                     Workload, WORKLOADS, make_workload)
 from .chains import (MarginalTrace, init_chains, run_marginal_experiment,
                      marginal_error)
 from . import spectral

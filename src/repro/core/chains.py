@@ -3,8 +3,9 @@
 The paper evaluates convergence by the running average of per-variable
 marginals against the fully-mixed (uniform) marginal: the "average
 l2-distance error in the estimated marginals" (Figs 1-2).  `run_marginal_
-experiment` reproduces that trajectory with C vmapped chains under a single
-`lax.scan`.
+experiment` reproduces that trajectory for any :class:`~repro.core.engine.
+Engine` — the sole execution contract; bare step functions (and the old
+``batched`` / ``updates_per_call`` attribute sniffing) are not accepted.
 """
 from __future__ import annotations
 
@@ -16,6 +17,7 @@ import jax.numpy as jnp
 
 from .factor_graph import MatchGraph
 from .samplers import ChainState
+from .engine import Engine
 
 __all__ = ["MarginalTrace", "init_chains", "run_marginal_experiment",
            "marginal_error"]
@@ -30,6 +32,8 @@ class MarginalTrace(NamedTuple):
 def init_chains(key: jax.Array, graph: MatchGraph, n_chains: int,
                 init_fn: Callable[[jax.Array, MatchGraph], ChainState]
                 ) -> ChainState:
+    """Vmapped chain init from a single-chain ``init_fn`` (prefer
+    ``Engine.init``, which also seeds estimator caches)."""
     keys = jax.random.split(key, n_chains)
     return jax.vmap(lambda k: init_fn(k, graph))(keys)
 
@@ -45,41 +49,31 @@ def marginal_error(marg_sum: jax.Array, count: jax.Array) -> jax.Array:
     return jnp.sqrt(jnp.sum((p - 1.0 / D) ** 2, axis=-1)).mean(axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("step_fn", "n_iters",
+@functools.partial(jax.jit, static_argnames=("engine", "n_iters",
                                              "n_snapshots", "D"))
-def run_marginal_experiment(step_fn, state: ChainState, *, n_iters: int,
-                            n_snapshots: int, D: int) -> MarginalTrace:
-    """Run ``n_iters`` site updates over C chains, collecting the
-    marginal-error trajectory at ``n_snapshots`` evenly spaced points.
-
-    ``step_fn`` is either a single-chain single-site step (vmapped here, one
-    marginal sample per update, as in the paper) or a batched multi-site
-    sweep from ``samplers.make_*_sweep`` — detected via its ``batched`` /
-    ``updates_per_call`` markers.  A sweep advances ``updates_per_call``
-    site updates per call and contributes ONE marginal sample per call, so
-    snapshot accumulation (the (C, n, D) one-hot sum, the dominant per-update
-    memory cost of the single-site path) is amortized over the whole sweep.
-    ``iters`` always counts *site updates*, making trajectories comparable
-    across both paths.  ``n_iters`` is rounded DOWN to a whole number of
-    step calls per snapshot (a multiple of ``n_snapshots *
-    updates_per_call``) — the returned ``iters`` reports the updates that
-    actually ran.  Accumulation is float32 (exact for < 2^24 samples).
-    """
-    updates = getattr(step_fn, "updates_per_call", 1)
-    vstep = step_fn if getattr(step_fn, "batched", False) \
-        else jax.vmap(step_fn)
-    calls = n_iters // (n_snapshots * updates)   # step_fn calls per snapshot
+def _run(engine: Engine, state: ChainState, *, n_iters: int,
+         n_snapshots: int, D: int) -> MarginalTrace:
+    updates = engine.updates_per_call
+    calls = n_iters // (n_snapshots * updates)   # sweep calls per snapshot
     if calls == 0:
         raise ValueError(
-            f"n_iters={n_iters} must cover at least one step call per "
+            f"n_iters={n_iters} must cover at least one sweep call per "
             f"snapshot: n_snapshots={n_snapshots} x updates_per_call="
             f"{updates}")
+    # the inner loop snapshots the final state once per sweep call; an
+    # engine claiming a different sample count needs runner cooperation
+    # that doesn't exist yet — fail loudly rather than mis-normalize
+    if engine.marginal_samples_per_call != 1:
+        raise NotImplementedError(
+            f"run_marginal_experiment accumulates one marginal sample per "
+            f"sweep call; engine {engine.name!r} declares "
+            f"marginal_samples_per_call={engine.marginal_samples_per_call}")
     C, n = state.x.shape
     marg0 = jnp.zeros((C, n, D), jnp.float32)
 
     def inner(carry, _):
         st, ms = carry
-        st = vstep(st)
+        st = engine.sweep(st)
         ms = ms + jax.nn.one_hot(st.x, D, dtype=jnp.float32)
         return (st, ms), None
 
@@ -94,3 +88,33 @@ def run_marginal_experiment(step_fn, state: ChainState, *, n_iters: int,
                                     jnp.arange(n_snapshots))
     iters = (jnp.arange(n_snapshots) + 1) * calls * updates
     return MarginalTrace(iters=iters, error=errs, final=state)
+
+
+def run_marginal_experiment(engine: Engine, state: ChainState, *,
+                            n_iters: int, n_snapshots: int,
+                            D: int | None = None) -> MarginalTrace:
+    """Run ``n_iters`` site updates over C chains, collecting the
+    marginal-error trajectory at ``n_snapshots`` evenly spaced points.
+
+    ``engine`` must be an :class:`~repro.core.engine.Engine` (build one with
+    ``engine.make(name, graph, sweep=S, ...)``); its explicit
+    ``updates_per_call`` / ``marginal_samples_per_call`` metadata replaces
+    the old attribute sniffing.  One ``sweep`` call advances
+    ``updates_per_call`` site updates and contributes one marginal sample,
+    so snapshot accumulation (the (C, n, D) one-hot sum, the dominant
+    per-update memory cost of single-site execution) is amortized over the
+    whole sweep.  ``iters`` always counts *site updates*, making
+    trajectories comparable across engines and schedules.  ``n_iters`` is
+    rounded DOWN to a whole number of sweep calls per snapshot — the
+    returned ``iters`` reports the updates that actually ran.  Accumulation
+    is float32 (exact for < 2^24 samples).  ``D`` defaults to the engine's
+    graph domain size.
+    """
+    if not isinstance(engine, Engine):
+        raise TypeError(
+            f"run_marginal_experiment requires an Engine (got "
+            f"{type(engine).__name__}); build one with "
+            f"repro.core.engine.make(name, graph, sweep=S, backend=...)")
+    if D is None:
+        D = engine.graph.D
+    return _run(engine, state, n_iters=n_iters, n_snapshots=n_snapshots, D=D)

@@ -1,0 +1,495 @@
+"""The unified sampler Engine API: one contract over single-site,
+fused-sweep, chromatic, and distributed execution paths.
+
+De Sa et al.'s five algorithms differ only in their estimator and
+acceptance rule; execution is always "advance every chain by some number of
+site updates".  This module makes that the *only* surface consumers see:
+
+  engine = make("mgpmh", graph, sweep=64, backend="auto")
+  state  = engine.init(jax.random.PRNGKey(0), n_chains=256)
+  state  = engine.sweep(state)          # always batched: x is (C, n)
+
+An :class:`Engine` carries explicit metadata — ``updates_per_call``,
+``marginal_samples_per_call``, ``backend``, ``schedule`` — so nothing
+downstream sniffs ``batched`` / ``updates_per_call`` attributes off bare
+functions (``chains.run_marginal_experiment`` accepts only Engines).
+
+Schedules decide *which sites* a call updates:
+  * :class:`UniformSites(S)` — S sequentially composed i.i.d.-uniform site
+    updates per call (the paper's update loop, fused S-at-a-time);
+  * :class:`ChromaticBlocks(colors)` — one full sweep per call: each color
+    class updated as a parallel block through the fused sweep kernel
+    (valid for proper colorings; exact block Gibbs).
+
+Backends decide *where* the sweep runs:
+  * ``"jnp"``    — fused pure-jnp schedules tuned for CPU/GPU;
+  * ``"pallas"`` — the fused Pallas TPU kernel (interpret mode off-TPU);
+  * ``"dist"``   — shard_map over a (data, model) mesh (graph column-
+    sharded, one psum per sweep; ``runtime/dist_gibbs.py``), pass ``mesh=``;
+  * ``"auto"``   — pallas on TPU, jnp elsewhere.
+
+The registry (`register` / `make` / `names`) subsumes the previous three
+divergent construction paths (``make_*_step``, ``make_*_sweep``,
+``make_dist_*``); those factories survive only as deprecation shims.  The
+workload registry (`WORKLOADS` / `make_workload`) names the paper's
+experimental models plus the sparse lattice Ising where chromatic
+scheduling applies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .factor_graph import (MatchGraph, make_ising_graph, make_potts_graph,
+                           make_lattice_ising, lattice_colors)
+from .estimators import (recommended_capacity, draw_global_minibatch,
+                         min_gibbs_estimate)
+from . import samplers as S
+
+__all__ = [
+    "Engine", "Schedule", "UniformSites", "ChromaticBlocks",
+    "make", "names", "backends", "register",
+    "Workload", "WORKLOADS", "make_workload", "workload_names",
+]
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+class Schedule:
+    """Site-selection policy of one ``sweep`` call."""
+
+    def describe(self) -> str:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSites(Schedule):
+    """``sweep_len`` sequentially composed updates at i.i.d.-uniform sites
+    per call — the paper's update loop, fused S at a time."""
+    sweep_len: int = 1
+
+    def __post_init__(self):
+        if self.sweep_len < 1:
+            raise ValueError(f"sweep_len must be >= 1, got {self.sweep_len}")
+
+    def describe(self) -> str:
+        return f"uniform-sites(S={self.sweep_len})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ChromaticBlocks(Schedule):
+    """One full chromatic sweep per call: every color class updated as a
+    parallel block (through the fused sweep kernel — same-color sites share
+    no factor, so the kernel's sequential loop IS the block update).
+
+    ``colors`` is a per-site color id array; stored as a tuple so schedules
+    are hashable (jit-static).  Exact for proper colorings (checked at
+    engine build time).
+    """
+    colors: Tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "colors",
+                           tuple(int(c) for c in np.asarray(self.colors)))
+
+    @property
+    def colors_array(self) -> np.ndarray:
+        return np.asarray(self.colors, np.int32)
+
+    @property
+    def n_colors(self) -> int:
+        return max(self.colors) + 1
+
+    def describe(self) -> str:
+        return f"chromatic-blocks(k={self.n_colors}, n={len(self.colors)})"
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False, frozen=True)
+class Engine:
+    """A constructed sampler: ``init`` makes a batched state, ``sweep``
+    advances it, metadata says how much work one call does.
+
+    ``updates_per_call``          site updates one ``sweep`` call performs.
+    ``marginal_samples_per_call`` snapshot samples one call contributes to a
+                                  running marginal estimate (1: snapshots
+                                  are amortized over the whole sweep).
+    ``backend``                   'jnp' | 'pallas' | 'dist' (resolved, never
+                                  'auto').
+    Hash/eq are identity so an Engine can be a jit-static argument.
+    """
+    name: str
+    backend: str
+    schedule: Schedule
+    updates_per_call: int
+    marginal_samples_per_call: int
+    graph: MatchGraph
+    params: Dict[str, Any] = dataclasses.field(repr=False)
+    init_fn: Callable = dataclasses.field(repr=False)
+    sweep_fn: Callable = dataclasses.field(repr=False)
+
+    def init(self, key: jax.Array, n_chains: int, **kwargs):
+        """Batched initial state for ``n_chains`` chains (cached-estimator
+        algorithms get their eps/xi cache initialized here)."""
+        return self.init_fn(key, n_chains, **kwargs)
+
+    def sweep(self, state):
+        """Advance every chain by ``updates_per_call`` site updates.
+
+        The 'dist' backend DONATES the input state (its buffers are dead
+        after the call — rebind, don't reuse: ``st = eng.sweep(st)``); the
+        jnp/pallas backends leave the input intact.
+        """
+        return self.sweep_fn(state)
+
+    def describe(self) -> Dict[str, Any]:
+        """Machine-readable identity (benchmarks attach this to records)."""
+        return {"engine": self.name, "backend": self.backend,
+                "schedule": self.schedule.describe(),
+                "updates_per_call": self.updates_per_call}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_BUILDERS: Dict[str, Tuple[Callable, Tuple[str, ...]]] = {}
+
+
+def register(name: str, *, backends: Tuple[str, ...]):
+    """Register an engine builder under ``name``.
+
+    The builder is called as ``builder(graph, schedule=..., backend=...,
+    mesh=..., **params)`` with ``backend`` already resolved and validated
+    against ``backends``.
+    """
+    def deco(builder):
+        _BUILDERS[name] = (builder, tuple(backends))
+        return builder
+    return deco
+
+
+def names() -> Tuple[str, ...]:
+    """Registered engine names."""
+    return tuple(sorted(_BUILDERS))
+
+
+def backends(name: str) -> Tuple[str, ...]:
+    """Backends supported by engine ``name``."""
+    return _BUILDERS[name][1]
+
+
+def make(name: str, graph: MatchGraph, *, sweep: Optional[int] = None,
+         schedule: Optional[Schedule] = None, backend: str = "auto",
+         mesh=None, **params) -> Engine:
+    """Build an :class:`Engine` by registry name.
+
+    ``sweep=S`` is shorthand for ``schedule=UniformSites(S)``; pass a
+    :class:`Schedule` for anything else.  ``backend`` is 'auto' | 'pallas'
+    | 'jnp' | 'dist' ('dist' needs ``mesh=``).  Algorithm parameters (lam,
+    capacity, ...) are keyword ``params`` with paper-recipe defaults.
+    """
+    if name not in _BUILDERS:
+        raise KeyError(f"unknown engine {name!r}; available: {list(names())}")
+    builder, supported = _BUILDERS[name]
+    if schedule is None:
+        schedule = UniformSites(sweep if sweep is not None else 1)
+    elif sweep is not None:
+        raise ValueError("pass either sweep= or schedule=, not both")
+    if not isinstance(schedule, Schedule):
+        raise TypeError(f"schedule must be a Schedule, got {schedule!r}")
+    if backend == "auto":
+        backend = "pallas" if (jax.default_backend() == "tpu"
+                               and "pallas" in supported) else "jnp"
+    if backend not in supported:
+        raise ValueError(f"engine {name!r} supports backends {supported}, "
+                         f"got {backend!r}")
+    if backend == "dist" and mesh is None:
+        raise ValueError("backend='dist' requires mesh=")
+    return builder(graph, schedule=schedule, backend=backend, mesh=mesh,
+                   **params)
+
+
+# ---------------------------------------------------------------------------
+# Shared construction pieces
+# ---------------------------------------------------------------------------
+
+def _chain_init(graph: MatchGraph, cache_init: Optional[Callable] = None):
+    """Batched ChainState init; ``cache_init(key, state) -> state`` (vmapped
+    here) seeds the augmented-energy cache when the algorithm has one."""
+    def init(key: jax.Array, n_chains: int, *, start: str = "constant"):
+        keys = jax.random.split(key, n_chains)
+        st = jax.vmap(lambda k: S.init_state(k, graph, start=start))(keys)
+        if cache_init is not None:
+            ck = jax.random.split(jax.random.fold_in(key, 0x5eed), n_chains)
+            st = jax.vmap(cache_init)(ck, st)
+        return st
+    return init
+
+
+def _uniform_or_chromatic(graph, schedule, backend, uniform_builder):
+    """Dispatch the gibbs-family schedule: UniformSites -> fused sweep of
+    ``sweep_len``; ChromaticBlocks -> color-class blocks through the fused
+    kernel."""
+    if isinstance(schedule, ChromaticBlocks):
+        sweep_fn = S._build_chromatic_gibbs_sweep(
+            graph, schedule.colors_array, impl=backend)
+        return sweep_fn, graph.n
+    return uniform_builder(schedule.sweep_len), schedule.sweep_len
+
+
+def _engine(name, backend, schedule, upd, graph, params, init_fn, sweep_fn):
+    return Engine(name=name, backend=backend, schedule=schedule,
+                  updates_per_call=upd, marginal_samples_per_call=1,
+                  graph=graph, params=params, init_fn=init_fn,
+                  sweep_fn=sweep_fn)
+
+
+def _reject_unknown(name, params):
+    if params:
+        raise TypeError(f"engine {name!r} got unknown params "
+                        f"{sorted(params)}")
+
+
+# ---------------------------------------------------------------------------
+# The five paper algorithms
+# ---------------------------------------------------------------------------
+
+@register("gibbs", backends=("jnp", "pallas", "dist"))
+def _gibbs_builder(graph, *, schedule, backend, mesh, **params):
+    _reject_unknown("gibbs", params)
+    if backend == "dist":
+        return _dist_engine("gibbs", graph, schedule, mesh, {})
+    sweep_fn, upd = _uniform_or_chromatic(
+        graph, schedule, backend,
+        lambda sl: S._build_gibbs_sweep(graph, sl, impl=backend))
+    return _engine("gibbs", backend, schedule, upd, graph, {},
+                   _chain_init(graph), sweep_fn)
+
+
+@register("min-gibbs", backends=("jnp",))
+def _min_gibbs_builder(graph, *, schedule, backend, mesh, lam=None,
+                       capacity=None, **params):
+    _reject_unknown("min-gibbs", params)
+    _require_uniform("min-gibbs", schedule)
+    # paper recipe 2 Psi^2, capped: the sweep's upfront draw buffers are
+    # O(C*S*D*capacity) and capacity ~ lam, so an uncapped default OOMs on
+    # the large registered workloads; pass lam= explicitly to exceed it
+    lam = float(min(2.0 * graph.psi ** 2, 16384.0)) if lam is None \
+        else float(lam)
+    capacity = recommended_capacity(lam) if capacity is None else capacity
+    cache_init = lambda k, st: S.init_min_gibbs_cache(k, graph, st, lam,
+                                                      capacity)
+    return _engine(
+        "min-gibbs", backend, schedule, schedule.sweep_len, graph,
+        dict(lam=lam, capacity=capacity),
+        _chain_init(graph, cache_init),
+        S._build_min_gibbs_sweep(graph, lam, capacity, schedule.sweep_len))
+
+
+@register("local-gibbs", backends=("jnp",))
+def _local_gibbs_builder(graph, *, schedule, backend, mesh, batch_size=None,
+                         **params):
+    _reject_unknown("local-gibbs", params)
+    _require_uniform("local-gibbs", schedule)
+    batch_size = min(32, graph.n - 1) if batch_size is None else batch_size
+    step = S.make_local_gibbs_step(graph, batch_size)
+    return _engine(
+        "local-gibbs", backend, schedule, schedule.sweep_len, graph,
+        dict(batch_size=batch_size), _chain_init(graph),
+        S._build_step_sweep(step, schedule.sweep_len))
+
+
+@register("mgpmh", backends=("jnp", "pallas", "dist"))
+def _mgpmh_builder(graph, *, schedule, backend, mesh, lam=None,
+                   capacity=None, **params):
+    _reject_unknown("mgpmh", params)
+    _require_uniform("mgpmh", schedule)
+    lam = float(4.0 * graph.L ** 2) if lam is None else float(lam)
+    if backend == "dist":
+        return _dist_engine("mgpmh", graph, schedule, mesh,
+                            dict(lam=lam, capacity=capacity))
+    capacity = recommended_capacity(lam) if capacity is None else capacity
+    return _engine(
+        "mgpmh", backend, schedule, schedule.sweep_len, graph,
+        dict(lam=lam, capacity=capacity), _chain_init(graph),
+        S._build_mgpmh_sweep(graph, lam, capacity, schedule.sweep_len,
+                             impl=backend))
+
+
+@register("doublemin", backends=("jnp", "dist"))
+def _doublemin_builder(graph, *, schedule, backend, mesh, lam1=None,
+                       capacity1=None, lam2=None, capacity2=None, **params):
+    _reject_unknown("doublemin", params)
+    _require_uniform("doublemin", schedule)
+    lam1 = float(4.0 * graph.L ** 2) if lam1 is None else float(lam1)
+    # second-batch default: 2 Psi^2, capped so the (C, capacity2) factor-draw
+    # buffer stays bounded on large graphs (matching accuracy is then
+    # tail-bound- rather than recipe-limited)
+    lam2 = float(min(2.0 * graph.psi ** 2, 16384.0)) if lam2 is None \
+        else float(lam2)
+    if backend == "dist":
+        return _dist_engine("doublemin", graph, schedule, mesh,
+                            dict(lam1=lam1, capacity1=capacity1,
+                                 lam2=lam2, capacity2=capacity2))
+    capacity1 = recommended_capacity(lam1) if capacity1 is None else capacity1
+    capacity2 = recommended_capacity(lam2) if capacity2 is None else capacity2
+    cache_init = lambda k, st: S.init_double_min_cache(k, graph, st, lam2,
+                                                       capacity2)
+    return _engine(
+        "doublemin", backend, schedule, schedule.sweep_len, graph,
+        dict(lam1=lam1, capacity1=capacity1, lam2=lam2, capacity2=capacity2),
+        _chain_init(graph, cache_init),
+        S._build_double_min_sweep(graph, lam1, capacity1, lam2, capacity2,
+                                  schedule.sweep_len))
+
+
+def _require_uniform(name, schedule):
+    if not isinstance(schedule, UniformSites):
+        raise ValueError(f"engine {name!r} supports only the UniformSites "
+                         f"schedule, got {schedule.describe()}")
+
+
+# ---------------------------------------------------------------------------
+# Distributed backend (shard_map over a (data, model) mesh)
+# ---------------------------------------------------------------------------
+
+def _dist_engine(name: str, graph: MatchGraph, schedule: Schedule, mesh,
+                 params: Dict[str, Any]) -> Engine:
+    """Wrap the ``runtime/dist_gibbs`` constructions: graph column-sharded
+    over the model axis, chains over the data axis, state/marginals carried
+    in a DistState.  One jitted shard_map'd step, donated state."""
+    from ..runtime import dist_gibbs as DG
+    from ..launch.mesh import compat_shard_map, dp_axes, MP_AXIS
+
+    _require_uniform(name, schedule)
+    sweep_len = schedule.sweep_len
+    mp = mesh.shape[MP_AXIS]
+    dps = dp_axes(mesh)                       # ("data",) or ("pod", "data")
+    dp = int(np.prod([mesh.shape[a] for a in dps]))
+    if graph.n % mp:
+        raise ValueError(f"graph.n={graph.n} must divide into mp={mp} "
+                         f"column shards")
+    gs = DG.ShardedMatchGraph.from_graph(graph, mp)
+
+    # paper-recipe defaults; capacities sized for the per-shard thinned rate
+    def cap(lam, explicit):
+        return (recommended_capacity(max(lam / mp, 1.0)) + 8
+                if explicit is None else explicit)
+
+    cache_fn = None
+    if name == "gibbs":
+        if sweep_len != 1:
+            raise ValueError("dist gibbs supports sweep=1 only")
+        step = DG.make_dist_gibbs_step(gs)
+        resolved = {}
+    elif name == "mgpmh":
+        lam = params["lam"]
+        capacity = cap(lam, params.get("capacity"))
+        step = (DG.make_dist_mgpmh_sweep(gs, lam, capacity, sweep_len)
+                if sweep_len > 1
+                else DG.make_dist_mgpmh_step(gs, lam, capacity))
+        resolved = dict(lam=lam, capacity=capacity)
+    elif name == "doublemin":
+        if sweep_len != 1:
+            raise ValueError("dist doublemin supports sweep=1 only")
+        lam1, lam2 = params["lam1"], params["lam2"]
+        c1 = cap(lam1, params.get("capacity1"))
+        c2 = cap(lam2, params.get("capacity2"))
+        step = DG.make_dist_double_min_step(gs, lam1, c1, lam2, c2)
+        resolved = dict(lam1=lam1, capacity1=c1, lam2=lam2, capacity2=c2)
+
+        # seed the cached xi_x with one full-rate estimator draw (same
+        # estimator the per-shard thinned psum realizes; Engine.init's
+        # cache contract holds on every backend)
+        cap_full = recommended_capacity(lam2)
+
+        def cache_fn(k, x):
+            idx, B = draw_global_minibatch(k, graph, lam2, cap_full)
+            return min_gibbs_estimate(graph, x, idx, B, lam2)
+    else:
+        raise ValueError(f"engine {name!r} has no dist backend")
+
+    sh_specs = DG.shard_specs()
+    st_specs = DG.state_specs(dp_axes=dps)
+    smapped = compat_shard_map(lambda st, sh: step(st, sh), mesh,
+                               (st_specs, sh_specs), st_specs)
+    sh = {k: getattr(gs, k) for k in sh_specs}
+    # state donation: avoids double-buffering the (C, n, D) marginal sums
+    # at scale; Engine.sweep documents the rebind-don't-reuse contract
+    jstep = jax.jit(smapped, donate_argnums=(0,))
+
+    def sweep_fn(state):
+        with mesh:
+            return jstep(state, sh)
+
+    def init_fn(key: jax.Array, n_chains: int, *, start: str = "constant"):
+        if start != "constant":
+            raise ValueError("dist engines support start='constant' only")
+        x = jnp.zeros((n_chains, graph.n), jnp.int32)
+        cache = jnp.zeros((n_chains,), jnp.float32)
+        if cache_fn is not None:
+            ck = jax.random.split(jax.random.fold_in(key, 0x5eed), n_chains)
+            cache = jax.vmap(cache_fn)(ck, x)
+        return DG.DistState(
+            x=x, cache=cache,
+            key=jax.random.split(key, dp),
+            accepts=jnp.zeros((n_chains,), jnp.int32),
+            marg=jnp.zeros((n_chains, graph.n, graph.D), jnp.float32),
+            count=jnp.int32(0))
+
+    return _engine(name, "dist", schedule, sweep_len, graph, resolved,
+                   init_fn, sweep_fn)
+
+
+# ---------------------------------------------------------------------------
+# Workload registry (the paper's experimental models + chromatic lattice)
+# ---------------------------------------------------------------------------
+
+WORKLOADS: Dict[str, Dict[str, Any]] = {
+    "ising-20x20":        dict(kind="ising", grid=20, beta=1.0, D=2),
+    "potts-20x20":        dict(kind="potts", grid=20, beta=4.6, D=10),
+    "ising-128x128":      dict(kind="ising", grid=128, beta=1.0, D=2),
+    "potts-64x64":        dict(kind="potts", grid=64, beta=4.6, D=10),
+    # sparse nearest-neighbor lattice: the first-class chromatic workload
+    # (2-colorable; Workload.colors feeds ChromaticBlocks)
+    "lattice-ising-64x64": dict(kind="lattice", grid=64, beta=0.4, D=2),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A named graph (plus its coloring when the graph is colorable, so
+    ``ChromaticBlocks(workload.colors)`` is one line away)."""
+    name: str
+    graph: MatchGraph
+    colors: Optional[np.ndarray] = None
+
+
+def workload_names() -> Tuple[str, ...]:
+    return tuple(sorted(WORKLOADS))
+
+
+def make_workload(name: str) -> Workload:
+    """Build a registered workload by name."""
+    if name not in WORKLOADS:
+        raise KeyError(f"unknown workload {name!r}; available: "
+                       f"{list(workload_names())}")
+    c = WORKLOADS[name]
+    if c["kind"] == "ising":
+        return Workload(name, make_ising_graph(c["grid"], c["beta"]))
+    if c["kind"] == "potts":
+        return Workload(name, make_potts_graph(c["grid"], c["beta"], c["D"]))
+    if c["kind"] == "lattice":
+        return Workload(name, make_lattice_ising(c["grid"], c["beta"]),
+                        colors=lattice_colors(c["grid"]))
+    raise ValueError(f"unknown workload kind {c['kind']!r}")

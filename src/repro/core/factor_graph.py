@@ -40,6 +40,8 @@ __all__ = [
     "gaussian_kernel_interactions",
     "make_ising_graph",
     "make_potts_graph",
+    "make_lattice_ising",
+    "lattice_colors",
 ]
 
 
@@ -244,6 +246,28 @@ def make_potts_graph(grid: int = 20, beta: float = 4.6, D: int = 10,
     """
     A = gaussian_kernel_interactions(grid, gamma)
     return MatchGraph.from_interactions(A, match_weight_scale=beta, D=D)
+
+
+def make_lattice_ising(grid: int, beta: float = 0.4) -> MatchGraph:
+    """Nearest-neighbor Ising on a grid (sparse, 2-colorable): the workload
+    where chromatic scheduling applies."""
+    n = grid * grid
+    W = np.zeros((n, n))
+    for r in range(grid):
+        for c in range(grid):
+            i = r * grid + c
+            for (dr, dc) in ((0, 1), (1, 0)):
+                rr, cc = r + dr, c + dc
+                if rr < grid and cc < grid:
+                    j = rr * grid + cc
+                    W[i, j] = W[j, i] = 2.0 * beta   # ising match weight
+    return MatchGraph.from_interactions(W, match_weight_scale=1.0, D=2)
+
+
+def lattice_colors(grid: int) -> np.ndarray:
+    """Checkerboard 2-coloring of the ``grid x grid`` lattice."""
+    r, c = np.divmod(np.arange(grid * grid), grid)
+    return ((r + c) % 2).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,27 @@
-"""The paper's five sampling algorithms as pure-JAX single-chain steps,
-plus the fused multi-site *sweep* variants of the hot ones.
+"""The paper's five sampling algorithms: single-chain reference steps plus
+the fused multi-site *sweep* builders the `Engine` API assembles.
 
-Each ``make_*_step(graph, ...)`` returns a jit-able ``step(state) -> state``
-operating on one chain; multi-chain execution vmaps the step (see
-``chains.py``).  The batched, shard_map-distributed, Pallas-accelerated
-production path lives in ``repro.runtime.dist_gibbs`` and is tested for
-distributional agreement against these reference implementations.
+Layering (post engine redesign — see ``core/engine.py``):
+  * ``make_*_step(graph, ...)`` — jit-able single-chain ``step(state) ->
+    state`` reference implementations, one per paper algorithm.  They remain
+    the distributional ground truth the sweep/distributed paths are tested
+    against, and the building block for algorithms without a fused sweep.
+  * ``_build_*_sweep(...)`` — *batched* ``sweep(state) -> state`` builders
+    over the vmapped-layout ChainState (x of shape (C, n)): ``sweep_len``
+    sequentially composed site updates per call, all sub-step randomness
+    (sites, Poisson counts, alias-table and proposal uniforms) drawn up
+    front in one batched pass, the x-dependent pipeline (gather -> bucket
+    energy -> proposal -> MH accept) fused in one kernel launch
+    (``kernels/fused_sweep.py``) or one jnp scan.  Each sub-step is exactly
+    one iteration of the corresponding single-site chain at an
+    i.i.d.-uniform site, so every sweep chain is *distributionally
+    identical* to ``sweep_len`` applications of the reference step.
+    MIN-Gibbs and DoubleMIN thread their cached energy estimate (Alg 2's
+    eps / Thm 5's xi_x) through the sweep scan carry.
+  * construction + metadata live in ``core/engine.py``: consumers call
+    ``engine.make(name, graph, sweep=S, backend=...)`` and receive an
+    ``Engine`` with explicit ``updates_per_call`` / ``backend`` metadata —
+    nothing downstream sniffs attributes off bare functions anymore.
 
 Algorithms (paper numbering):
   1  vanilla Gibbs                          O(D*Delta)   exact
@@ -14,27 +30,17 @@ Algorithms (paper numbering):
   4  MGPMH (MB proposal + exact MH)         O(D*L^2+Delta) pi-stationary, Thm 3/4
   5  DoubleMIN-Gibbs (doubly minibatched)   O(D*L^2+Psi^2) Thm 5/6
 
-Single-site -> sweep migration (the batched-update execution engine):
-  ``make_gibbs_sweep`` / ``make_mgpmh_sweep`` return *batched* functions
-  (``sweep.batched = True``) that advance every chain by ``sweep_len``
-  sequentially composed site updates per call, dispatched to ONE fused
-  Pallas kernel launch (``kernels/fused_sweep.py``) or its jnp oracle.
-  Each sub-step is exactly one iteration of the corresponding single-site
-  chain at an i.i.d.-uniform site, so the sweep chain is *distributionally
-  identical* to ``sweep_len`` applications of the ``make_*_step`` kernel —
-  only the per-update dispatch, RNG and snapshot-accumulation overheads are
-  amortized.  All sub-step randomness (sites, Poisson counts, alias-table
-  and proposal uniforms) is drawn up front in one batched pass; the
-  x-dependent pipeline (gather -> bucket energy -> proposal -> MH accept)
-  runs inside the kernel without returning to HBM.  ``chains.py`` consumes
-  the ``batched`` / ``updates_per_call`` markers.
+The old public ``make_gibbs_sweep`` / ``make_mgpmh_sweep`` factories are
+deprecation shims over ``engine.make`` and will be removed.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .factor_graph import MatchGraph, alias_draw
 from .estimators import (draw_global_minibatch, draw_local_minibatch,
@@ -249,17 +255,60 @@ def _batch_keys(keys: jax.Array, num: int):
     return [ks[:, t] for t in range(num)]
 
 
-def make_gibbs_sweep(graph: MatchGraph, sweep_len: int, *,
-                     impl: str = "auto"):
+def _master_key(keys: jax.Array):
+    """(knew (C, 2), master key): every per-chain key advances, all batch
+    draws derive from chain 0's spare split — one threefry stream feeding
+    (C, ...) shaped draws is ~3x cheaper than C vmapped streams and
+    statistically equivalent (splits are independent).  This is the RNG
+    contract of every jnp sweep schedule below; the Pallas path keeps
+    per-chain streams (equally valid, different bits)."""
+    ks = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    return ks[:, 0], ks[0, 1]
+
+
+def _bucket_counts(vals: jax.Array, D: int) -> jax.Array:
+    """(C, K) int values -> (C, D) float32 counts.  Values >= D (pad
+    sentinels) land in no bucket.  D fused compare-reduce passes for small
+    D (no (C, K, D) one-hot materialization); one-hot reduce above."""
+    if D <= 32:
+        return jnp.stack([jnp.sum(vals == d, axis=1) for d in range(D)],
+                         axis=1).astype(jnp.float32)
+    return jnp.sum(jax.nn.one_hot(vals, D, dtype=jnp.float32), axis=1)
+
+
+def _alias_gather(prob, alias, key, shape, m):
+    """``shape`` alias-table draws from a flat ``(m,)`` table: randint
+    index + separate accept uniform (the reference `alias_draw` scheme).
+
+    NOT the one-uniform trick: ``u*m`` in float32 has ulp >= 0.25 for
+    m ~ 2^23 (the factor count of the large registered workloads), which
+    quantizes the accept fraction and silently biases the draw; the
+    per-row site tables (m = n) stay on the one-uniform fast path in the
+    mgpmh/doublemin proposal schedules.
+    """
+    k1, k2 = jax.random.split(key)
+    idx = jax.random.randint(k1, shape, 0, m)
+    u = jax.random.uniform(k2, shape)
+    return jnp.where(u < prob[idx], idx, alias[idx])
+
+
+def _check_impl(impl: str):
+    if impl not in ("jnp", "pallas"):
+        raise ValueError(f"impl must be 'jnp' or 'pallas' (engine.make owns "
+                         f"the 'auto' policy), got {impl!r}")
+
+
+def _build_gibbs_sweep(graph: MatchGraph, sweep_len: int, *,
+                       impl: str):
     """``sweep_len`` sequential vanilla-Gibbs updates per call, one fused
     kernel launch (or jnp oracle) for the whole batch of chains.
 
     Returns a *batched* ``sweep(state) -> state`` over a vmapped-layout
     ChainState (x of shape (C, n)); see the module docstring.
-    impl: 'pallas' | 'jnp' | 'auto' ('pallas' on TPU, 'jnp' elsewhere).
+    impl: 'pallas' | 'jnp' — resolved by the caller (engine.make owns the
+    'auto' policy).
     """
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    _check_impl(impl)
     n, D = graph.n, graph.D
 
     def sweep(state: ChainState) -> ChainState:
@@ -272,13 +321,11 @@ def make_gibbs_sweep(graph: MatchGraph, sweep_len: int, *,
                                    impl=impl)
         return state._replace(x=x, key=knew)
 
-    sweep.batched = True
-    sweep.updates_per_call = sweep_len
     return sweep
 
 
-def make_mgpmh_sweep(graph: MatchGraph, lam: float, capacity: int,
-                     sweep_len: int, *, impl: str = "auto"):
+def _build_mgpmh_sweep(graph: MatchGraph, lam: float, capacity: int,
+                       sweep_len: int, *, impl: str):
     """``sweep_len`` sequential MGPMH updates (Algorithm 4 per sub-step)
     per call, one fused launch for the whole batch of chains.
 
@@ -293,13 +340,12 @@ def make_mgpmh_sweep(graph: MatchGraph, lam: float, capacity: int,
           interpret mode off-TPU: correctness path, slow);
           'jnp'    — a fused pure-jnp schedule of the same chain, tuned for
           CPU/GPU (packed alias-table gathers, per-value bucket counting,
-          two-point exact pass);
-          'auto'   — 'pallas' on TPU, 'jnp' elsewhere.
-    The two impls consume different (equally valid) PRNG streams; each is
+          two-point exact pass).
+    Resolved by the caller (engine.make owns the 'auto' policy).  The two
+    impls consume different (equally valid) PRNG streams; each is
     distributionally exact (tests/test_sweep.py).
     """
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    _check_impl(impl)
     if impl == "jnp":
         return _make_mgpmh_sweep_jnp(graph, lam, capacity, sweep_len)
     n, D = graph.n, graph.D
@@ -326,8 +372,6 @@ def make_mgpmh_sweep(graph: MatchGraph, lam: float, capacity: int,
             u_idx, u_alias, gumbel, logu, D=D, scale=scale, impl=impl)
         return state._replace(x=x, key=knew, accepts=state.accepts + acc)
 
-    sweep.batched = True
-    sweep.updates_per_call = sweep_len
     return sweep
 
 
@@ -355,14 +399,7 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
     def sweep(state: ChainState) -> ChainState:
         C = state.x.shape[0]
         rows = jnp.arange(C)
-        # Deliberate deviation from the per-chain-stream contract of the
-        # pallas path: every per-chain key advances (knew), but all batch
-        # draws derive from chain 0's spare split — one threefry stream
-        # feeding (C, ...) shaped draws is ~3x cheaper than C vmapped
-        # streams and statistically equivalent (splits are independent).
-        ks = jax.vmap(lambda k: jax.random.split(k, 2))(state.key)
-        knew = ks[:, 0]
-        master = ks[0, 1]
+        knew, master = _master_key(state.key)
         ki, kb, k1, kg, ka = jax.random.split(master, 5)
         i = jax.random.randint(ki, (C, S), 0, n)
         lam_i = lam * graph.row_sum[i] / graph.L
@@ -383,13 +420,7 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
             xp, acc = carry
             i_s = i[:, s]
             vals = jnp.take_along_axis(xp, j[:, s, :], axis=1)  # (C, K)
-            if D <= 32:   # fused compare-reduce per value; unrolls D ops
-                counts = jnp.stack(
-                    [jnp.sum(vals == d, axis=1) for d in range(D)], axis=1)
-                eps = scale * counts.astype(jnp.float32)        # (C, D)
-            else:         # large D: one-hot reduce (sentinel rows are zero)
-                eps = scale * jnp.sum(
-                    jax.nn.one_hot(vals, D, dtype=jnp.float32), axis=1)
+            eps = scale * _bucket_counts(vals, D)               # (C, D)
             v = jnp.argmax(eps + gumbel[:, s, :],
                            axis=-1).astype(jnp.int32)
             xi = xp[rows, i_s]
@@ -410,6 +441,248 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
         return state._replace(x=xp[:, :n], key=knew,
                               accepts=state.accepts + acc)
 
-    sweep.batched = True
-    sweep.updates_per_call = sweep_len
     return sweep
+
+
+# ---------------------------------------------------------------------------
+# MIN-Gibbs sweep (Algorithm 2, batched): the cached energy estimate eps of
+# the *current global state* rides the sweep scan carry — each sub-step
+# overwrites the current-value slot with it and caches the winner's estimate,
+# exactly Alg 2's augmented-state recursion, now at sweep granularity.
+# ---------------------------------------------------------------------------
+
+def _build_min_gibbs_sweep(graph: MatchGraph, lam: float, capacity: int,
+                           sweep_len: int):
+    """``sweep_len`` sequential MIN-Gibbs updates per call (jnp schedule).
+
+    All randomness — sites, per-candidate Poisson totals, factor ids from
+    the global alias table (one-uniform trick), Gumbel noise — is drawn up
+    front; the x-dependent matches/candidate-substitution pipeline runs in
+    one scan.  Distributionally identical to ``sweep_len`` steps of
+    ``make_min_gibbs_step`` (Thm 1/2 apply unchanged).  The cache must be
+    initialized with ``init_min_gibbs_cache`` (engine.init does this).
+    """
+    n, D, S, K = graph.n, graph.D, sweep_len, capacity
+    F = int(graph.pair_a.shape[0])
+    lscale = float(np.log1p(graph.psi / lam))
+
+    def sweep(state: ChainState) -> ChainState:
+        C = state.x.shape[0]
+        rows = jnp.arange(C)
+        knew, master = _master_key(state.key)
+        ki, kb, kf, kg = jax.random.split(master, 4)
+        i = jax.random.randint(ki, (C, S), 0, n)
+        # D independent global minibatches per sub-step, one per candidate.
+        B = jnp.minimum(jax.random.poisson(kb, lam, (C, S, D),
+                                           dtype=jnp.int32), K)
+        f = _alias_gather(graph.pair_prob, graph.pair_alias, kf,
+                          (C, S, D, K), F)
+        a, b = graph.pair_a[f], graph.pair_b[f]             # (C, S, D, K)
+        mask = jnp.arange(K)[None, None, :] < B[..., None]  # (C, S, D, K)
+        gumbel = jax.random.gumbel(kg, (C, S, D))
+        u_cand = jnp.arange(D, dtype=jnp.int32)[None, :, None]   # (1, D, 1)
+
+        def substep(carry, s):
+            x, cache = carry
+            i_s = i[:, s]
+            a_s, b_s = a[:, s], b[:, s]                     # (C, D, K)
+            xa = x[rows[:, None, None], a_s]
+            xb = x[rows[:, None, None], b_s]
+            xa = jnp.where(a_s == i_s[:, None, None], u_cand, xa)
+            xb = jnp.where(b_s == i_s[:, None, None], u_cand, xb)
+            matches = jnp.sum((xa == xb) & mask[:, s], axis=-1)
+            eps = lscale * matches.astype(jnp.float32)      # (C, D)
+            xi = x[rows, i_s]
+            eps = eps.at[rows, xi].set(cache)   # Alg 2: eps_{x(i)} <- cache
+            v = jnp.argmax(eps + gumbel[:, s, :],
+                           axis=-1).astype(jnp.int32)
+            x = x.at[rows, i_s].set(v)
+            return (x, eps[rows, v]), None
+
+        (x, cache), _ = jax.lax.scan(substep, (state.x, state.cache),
+                                     jnp.arange(S))
+        return state._replace(x=x, cache=cache, key=knew)
+
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# DoubleMIN-Gibbs sweep (Algorithm 5, batched): the cached second-minibatch
+# estimate xi_x rides the scan carry, updated on every acceptance (Thm 5's
+# augmented state at sweep granularity).
+# ---------------------------------------------------------------------------
+
+def _build_double_min_sweep(graph: MatchGraph, lam1: float, capacity1: int,
+                            lam2: float, capacity2: int, sweep_len: int):
+    """``sweep_len`` sequential DoubleMIN updates per call (jnp schedule):
+    MGPMH proposal (packed alias gathers, bucket-count energies) + a second
+    global bias-adjusted minibatch in the acceptance test.  Distributionally
+    identical to ``sweep_len`` steps of ``make_double_min_step``; the cache
+    must be initialized with ``init_double_min_cache`` (engine.init does
+    this)."""
+    n, D, S = graph.n, graph.D, sweep_len
+    K1, K2 = capacity1, capacity2
+    F = int(graph.pair_a.shape[0])
+    scale1 = float(graph.L / lam1)
+    lscale2 = float(np.log1p(graph.psi / lam2))
+    packed = jnp.stack([graph.row_prob,
+                        graph.row_alias.astype(jnp.float32)], axis=-1)
+
+    def sweep(state: ChainState) -> ChainState:
+        C = state.x.shape[0]
+        rows = jnp.arange(C)
+        knew, master = _master_key(state.key)
+        ki, kb1, k1, kg, kb2, kf, ka = jax.random.split(master, 7)
+        i = jax.random.randint(ki, (C, S), 0, n)
+        # proposal minibatch over A[i] (as in the MGPMH jnp schedule)
+        lam_i = lam1 * graph.row_sum[i] / graph.L
+        B1 = jnp.minimum(jax.random.poisson(kb1, lam_i, dtype=jnp.int32), K1)
+        un = jax.random.uniform(k1, (C, S, K1)) * n
+        idx = jnp.minimum(un.astype(jnp.int32), n - 1)
+        pk = packed[i[..., None], idx]
+        j = jnp.where(un - idx < pk[..., 0], idx,
+                      pk[..., 1].astype(jnp.int32))
+        j = jnp.where(jnp.arange(K1)[None, None, :] < B1[..., None], j, n)
+        gumbel = jax.random.gumbel(kg, (C, S, D))
+        # second (global, eq.-2) minibatch for the acceptance test
+        B2 = jnp.minimum(jax.random.poisson(kb2, lam2, (C, S),
+                                            dtype=jnp.int32), K2)
+        f = _alias_gather(graph.pair_prob, graph.pair_alias, kf,
+                          (C, S, K2), F)
+        a, b = graph.pair_a[f], graph.pair_b[f]             # (C, S, K2)
+        mask2 = jnp.arange(K2)[None, None, :] < B2[..., None]
+        logu = jnp.log(jax.random.uniform(ka, (C, S)))
+        xp0 = jnp.pad(state.x, ((0, 0), (0, 1)), constant_values=D)
+
+        def substep(carry, s):
+            xp, cache, acc = carry
+            i_s = i[:, s]
+            vals = jnp.take_along_axis(xp, j[:, s, :], axis=1)   # (C, K1)
+            eps = scale1 * _bucket_counts(vals, D)               # (C, D)
+            v = jnp.argmax(eps + gumbel[:, s, :],
+                           axis=-1).astype(jnp.int32)
+            xi = xp[rows, i_s]
+            # xi_y = eq.-(2) estimate at y = x[i_s <- v]
+            a_s, b_s = a[:, s], b[:, s]
+            ya = xp[rows[:, None], a_s]
+            yb = xp[rows[:, None], b_s]
+            ya = jnp.where(a_s == i_s[:, None], v[:, None], ya)
+            yb = jnp.where(b_s == i_s[:, None], v[:, None], yb)
+            matches = jnp.sum((ya == yb) & mask2[:, s], axis=-1)
+            xi_y = lscale2 * matches.astype(jnp.float32)
+            log_a = (xi_y - cache) + (eps[rows, xi] - eps[rows, v])
+            accept = logu[:, s] < log_a
+            xp = xp.at[rows, i_s].set(jnp.where(accept, v, xi))
+            cache = jnp.where(accept, xi_y, cache)
+            return (xp, cache, acc + accept.astype(jnp.int32)), None
+
+        (xp, cache, acc), _ = jax.lax.scan(
+            substep, (xp0, state.cache, jnp.zeros((C,), jnp.int32)),
+            jnp.arange(S))
+        return state._replace(x=xp[:, :n], cache=cache, key=knew,
+                              accepts=state.accepts + acc)
+
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# Chromatic block sweep: color classes through the fused sweep kernel
+# ---------------------------------------------------------------------------
+
+def _build_chromatic_gibbs_sweep(graph: MatchGraph, colors, *,
+                                 impl: str):
+    """One full chromatic Gibbs sweep per call: every color class updated as
+    a block through the fused sweep kernel (``kernel_ops.gibbs_sweep``).
+
+    Same-color sites share no factor (checked at build time), so the
+    kernel's sequential S-loop over a class IS the parallel block update:
+    W[i, j] = 0 for every earlier same-class site j means each in-class
+    update reads energies of the frozen entry state.  Per color class c the
+    draw protocol is bit-compatible with ``make_chromatic_gibbs_step``'s
+    dense path — ``kv, = split(key_c, 1)``, full-lattice Gumbel noise
+    ``gumbel(kv, (C, n, D))`` sliced at the class sites (``categorical``
+    IS argmax(logits + gumbel)) — so the two paths match exactly.
+    ``updates_per_call`` is n: one call updates every site once.
+    """
+    _check_impl(impl)
+    colors = np.asarray(colors)
+    n, D = graph.n, graph.D
+    if colors.shape != (n,):
+        raise ValueError(f"colors must have shape ({n},), got {colors.shape}")
+    n_colors = int(colors.max()) + 1
+    classes = [np.flatnonzero(colors == c) for c in range(n_colors)]
+    W = np.asarray(graph.W)
+    for c, sites in enumerate(classes):
+        if sites.size == 0:
+            raise ValueError(f"color class {c} is empty")
+        if np.any(W[np.ix_(sites, sites)] != 0.0):
+            raise ValueError(
+                f"colors is not a proper coloring: class {c} shares factors")
+    classes = [jnp.asarray(s, jnp.int32) for s in classes]
+
+    def sweep(state: ChainState) -> ChainState:
+        C = state.x.shape[0]
+        knew, master = _master_key(state.key)
+        keys = jax.random.split(master, n_colors)
+        x = state.x
+        for c, sites in enumerate(classes):   # static unroll over colors
+            kv, = jax.random.split(keys[c], 1)
+            gumbel = jax.random.gumbel(kv, (C, n, D))[:, sites, :]
+            i_sites = jnp.broadcast_to(sites[None, :], (C, sites.shape[0]))
+            x = kernel_ops.gibbs_sweep(x, graph.W, i_sites, gumbel, D=D,
+                                       impl=impl)
+        return state._replace(x=x, key=knew)
+
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# Generic fallback: a batched sweep from any single-chain step
+# ---------------------------------------------------------------------------
+
+def _build_step_sweep(step, sweep_len: int):
+    """``sweep_len`` scanned applications of the vmapped single-chain
+    ``step`` — the sweep scaffold for algorithms without a fused schedule
+    (currently local-gibbs)."""
+    vstep = jax.vmap(step)
+
+    def sweep(state: ChainState) -> ChainState:
+        out, _ = jax.lax.scan(lambda s, _: (vstep(s), None), state, None,
+                              length=sweep_len)
+        return out
+
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims (pre-engine public factories)
+# ---------------------------------------------------------------------------
+
+def _deprecated_sweep(name: str, engine):
+    warnings.warn(
+        f"{name} is deprecated; use repro.core.engine.make(...) which "
+        f"returns an Engine with explicit updates_per_call/backend metadata",
+        DeprecationWarning, stacklevel=3)
+    sweep = engine.sweep_fn
+    sweep.batched = True                      # legacy markers; nothing in
+    sweep.updates_per_call = engine.updates_per_call   # repo reads them now
+    return sweep
+
+
+def make_gibbs_sweep(graph: MatchGraph, sweep_len: int, *,
+                     impl: str = "auto"):
+    """Deprecated: use ``engine.make("gibbs", graph, sweep=S, backend=...)``."""
+    from . import engine
+    return _deprecated_sweep(
+        "make_gibbs_sweep",
+        engine.make("gibbs", graph, sweep=sweep_len, backend=impl))
+
+
+def make_mgpmh_sweep(graph: MatchGraph, lam: float, capacity: int,
+                     sweep_len: int, *, impl: str = "auto"):
+    """Deprecated: use ``engine.make("mgpmh", graph, sweep=S, backend=...)``."""
+    from . import engine
+    return _deprecated_sweep(
+        "make_mgpmh_sweep",
+        engine.make("mgpmh", graph, sweep=sweep_len, backend=impl,
+                    lam=lam, capacity=capacity))

@@ -5,11 +5,14 @@ sampler state and marginal-error reporting.
   PYTHONPATH=src python -m repro.launch.gibbs --config potts-20x20 \
       --engine mgpmh --steps 20000 --chains 64 [--ckpt-dir /tmp/gc]
 
-Engines: gibbs | mgpmh | doublemin.  ``--sweep S`` (mgpmh) batches S site
-updates per launch through the fused sweep engine — one psum per sweep
-instead of two per update (see runtime/dist_gibbs.py).  Sampler state
-(chains, caches, rng, running marginals) is a pytree checkpointed/restored
-exactly like model params — restart resumes the chain bit-exactly.
+Engines and workloads come straight from the registries in
+``repro.core.engine`` — this launcher holds NO construction logic: it calls
+``engine.make(name, graph, sweep=S, backend="dist", mesh=mesh)`` and drives
+the returned Engine.  ``--sweep S`` (mgpmh) batches S site updates per
+launch — one psum per sweep instead of two per update (see
+runtime/dist_gibbs.py).  Sampler state (chains, caches, rng, running
+marginals) is a pytree checkpointed/restored exactly like model params —
+restart resumes the chain bit-exactly.
 """
 from __future__ import annotations
 
@@ -17,120 +20,62 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from ..configs.registry import GIBBS_CONFIGS
-from ..core.factor_graph import make_ising_graph, make_potts_graph
-from ..core.estimators import recommended_capacity
-from ..runtime import dist_gibbs as DG
+from ..core import engine as engine_lib
 from ..checkpoint import checkpoint as ckpt
-from .mesh import make_auto_mesh
+from .mesh import make_auto_mesh, compat_shard_map
 
-try:
-    from jax import shard_map as _shard_map            # jax >= 0.8
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False)
-except (ImportError, TypeError):
-    from jax.experimental.shard_map import shard_map as _sm
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_rep=False)
-
-
-def build_graph(name: str):
-    c = GIBBS_CONFIGS[name]
-    if c["kind"] == "ising":
-        return make_ising_graph(c["grid"], c["beta"])
-    return make_potts_graph(c["grid"], c["beta"], c["D"])
+# legacy alias (pre-engine consumers imported the compat wrapper from here)
+shard_map = compat_shard_map
 
 
 def run(config: str, engine: str, steps: int, chains: int,
         ckpt_dir: str = "", log_every: int = 2000, mp_shards: int = 0,
         seed: int = 0, sweep: int = 0):
-    g = build_graph(config)
+    wl = engine_lib.make_workload(config)
+    g = wl.graph
     n_dev = len(jax.devices())
     mp = mp_shards or 1
     dp = n_dev // mp
     mesh = make_auto_mesh((dp, mp), ("data", "model"))
-    # pad n to a multiple of mp for column sharding
-    assert g.n % mp == 0, (g.n, mp)
-    gs = DG.ShardedMatchGraph.from_graph(g, mp)
+    eng = engine_lib.make(engine, g, sweep=max(sweep, 1), backend="dist",
+                          mesh=mesh)
+    upd_per_step = eng.updates_per_call
 
-    lam1 = float(4 * g.L ** 2)
-    cap1 = recommended_capacity(max(lam1 / mp, 1.0)) + 8
-    lam2 = float(min(2 * g.psi ** 2, 16384.0))
-    cap2 = recommended_capacity(max(lam2 / mp, 1.0)) + 8
-    upd_per_step = max(sweep, 1)
-    if sweep > 1 and engine != "mgpmh":
-        raise ValueError(f"--sweep only supports the mgpmh engine, got "
-                         f"{engine}")
-    if engine == "gibbs":
-        step = DG.make_dist_gibbs_step(gs)
-    elif engine == "mgpmh":
-        step = DG.make_dist_mgpmh_sweep(gs, lam1, cap1, sweep) if sweep > 1 \
-            else DG.make_dist_mgpmh_step(gs, lam1, cap1)
-    elif engine == "doublemin":
-        step = DG.make_dist_double_min_step(gs, lam1, cap1, lam2, cap2)
-    else:
-        raise ValueError(engine)
-
-    shard_specs = {"W_cols": P("model", None, None),
-                   "row_prob": P("model", None, None),
-                   "row_alias": P("model", None, None),
-                   "row_sum": P("model", None),
-                   "pair_a": P("model", None), "pair_b": P("model", None),
-                   "pair_prob": P("model", None),
-                   "pair_alias": P("model", None), "psi_loc": P("model")}
-    st_specs = DG.DistState(x=P("data", None), cache=P("data"),
-                            key=P("data"), accepts=P("data"),
-                            marg=P("data", "model", None), count=P())
-    smapped = shard_map(lambda st, sh: step(st, sh), mesh,
-                        (st_specs, shard_specs), st_specs)
-    sh = {k: getattr(gs, k) for k in shard_specs}
-
-    st = DG.DistState(
-        x=jnp.zeros((chains, g.n), jnp.int32),
-        cache=jnp.zeros((chains,), jnp.float32),
-        key=jax.random.split(jax.random.PRNGKey(seed), dp),
-        accepts=jnp.zeros((chains,), jnp.int32),
-        marg=jnp.zeros((chains, g.n, g.D), jnp.float32),
-        count=jnp.int32(0))
+    st = eng.init(jax.random.PRNGKey(seed), chains)
     start = 0
     if ckpt_dir and (last := ckpt.latest_step(ckpt_dir)) is not None:
         st = ckpt.restore(ckpt_dir, last, st)
         start = last
         print(f"[gibbs] resumed at step {start}")
 
-    with mesh:
-        jstep = jax.jit(smapped, donate_argnums=(0,))
-        t0 = time.time()
-        for s in range(start, steps):
-            st = jstep(st, sh)
-            if (s + 1) % log_every == 0 or s == steps - 1:
-                marg = np.asarray(st.marg).sum(0) / (float(st.count) * chains)
-                err = float(np.sqrt(((marg - 1 / g.D) ** 2).sum(-1)).mean())
-                # count counts accumulated samples (sweeps accumulate once
-                # per S site updates); acc is per site update either way
-                acc = float(np.asarray(st.accepts).mean()) \
-                    / (float(st.count) * upd_per_step)
-                rate = ((s + 1 - start) * chains * upd_per_step
-                        / (time.time() - t0))
-                print(f"[gibbs] step {s+1:7d} marg_err={err:.4f} "
-                      f"acc={acc:.3f} {rate/1e3:.1f}k updates/s", flush=True)
-                if ckpt_dir:
-                    ckpt.save(ckpt_dir, s + 1, st)
+    t0 = time.time()
+    for s in range(start, steps):
+        st = eng.sweep(st)
+        if (s + 1) % log_every == 0 or s == steps - 1:
+            marg = np.asarray(st.marg).sum(0) / (float(st.count) * chains)
+            err = float(np.sqrt(((marg - 1 / g.D) ** 2).sum(-1)).mean())
+            # count counts accumulated samples (sweeps accumulate once
+            # per S site updates); acc is per site update either way
+            acc = float(np.asarray(st.accepts).mean()) \
+                / (float(st.count) * upd_per_step)
+            rate = ((s + 1 - start) * chains * upd_per_step
+                    / (time.time() - t0))
+            print(f"[gibbs] step {s+1:7d} marg_err={err:.4f} "
+                  f"acc={acc:.3f} {rate/1e3:.1f}k updates/s", flush=True)
+            if ckpt_dir:
+                ckpt.save(ckpt_dir, s + 1, st)
     return st
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default="potts-20x20",
-                    choices=sorted(GIBBS_CONFIGS))
+                    choices=list(engine_lib.workload_names()))
     ap.add_argument("--engine", default="mgpmh",
-                    choices=["gibbs", "mgpmh", "doublemin"])
+                    choices=[n for n in engine_lib.names()
+                             if "dist" in engine_lib.backends(n)])
     ap.add_argument("--steps", type=int, default=20_000)
     ap.add_argument("--chains", type=int, default=64)
     ap.add_argument("--mp-shards", type=int, default=0)

@@ -10,9 +10,23 @@ from __future__ import annotations
 import jax
 
 __all__ = ["make_production_mesh", "make_auto_mesh", "auto_axis_types",
-           "dp_axes", "MP_AXIS"]
+           "compat_shard_map", "dp_axes", "MP_AXIS"]
 
 MP_AXIS = "model"
+
+
+def compat_shard_map(f, mesh, in_specs, out_specs):
+    """Version-compatible shard_map: ``jax.shard_map`` (jax >= 0.8, with
+    ``check_vma=False``) or the experimental fallback (``check_rep=False``).
+    """
+    try:
+        from jax import shard_map as _sm                   # jax >= 0.8
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+    except (ImportError, TypeError):
+        from jax.experimental.shard_map import shard_map as _sm
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
 
 
 def auto_axis_types(n_axes: int) -> dict:

@@ -1,4 +1,13 @@
-"""Distributed minibatch Gibbs engine (the paper's workload at scale).
+"""Distributed minibatch Gibbs: the ``backend="dist"`` implementation layer
+of the unified Engine API (``core/engine.py``).
+
+Consumers never call the ``make_dist_*`` factories directly anymore —
+``engine.make(name, graph, backend="dist", mesh=...)`` shards the graph,
+wraps the step in shard_map with the canonical specs (`shard_specs` /
+`state_specs`), and returns an Engine whose ``sweep(state)`` hides the
+collective plumbing.  This module owns the sharded graph layout, the
+per-shard estimator math, and the step/sweep bodies that run *inside*
+shard_map.
 
 Parallelization (see DESIGN.md §3):
 * chains sharded over the data axes ("pod", "data") — embarrassing;
@@ -57,14 +66,16 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from ..core.factor_graph import MatchGraph, build_alias_table
+from ..core.factor_graph import (MatchGraph, build_alias_table,
+                                 make_lattice_ising, lattice_colors)
 from ..kernels.ops import bucket_energy
 
 __all__ = ["ShardedMatchGraph", "DistState", "make_dist_gibbs_step",
            "make_dist_mgpmh_step", "make_dist_mgpmh_sweep",
            "make_chromatic_gibbs_step", "make_lattice_ising",
-           "dist_init_state"]
+           "lattice_colors", "dist_init_state", "shard_specs", "state_specs"]
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +176,26 @@ def dist_init_state(n_chains_loc: int, n: int, n_loc: int, D: int,
         accepts=jnp.zeros((n_chains_loc,), jnp.int32),
         marg=jnp.zeros((n_chains_loc, n_loc, D), jnp.float32),
         count=jnp.int32(0))
+
+
+def shard_specs(mp_axis: str = "model"):
+    """Canonical shard_map in_specs for the ShardedMatchGraph arrays (the
+    leading shard axis of every array maps to the model axis)."""
+    return {"W_cols": P(mp_axis, None, None),
+            "row_prob": P(mp_axis, None, None),
+            "row_alias": P(mp_axis, None, None),
+            "row_sum": P(mp_axis, None),
+            "pair_a": P(mp_axis, None), "pair_b": P(mp_axis, None),
+            "pair_prob": P(mp_axis, None), "pair_alias": P(mp_axis, None),
+            "psi_loc": P(mp_axis)}
+
+
+def state_specs(dp_axes="data", mp_axis: str = "model") -> DistState:
+    """Canonical shard_map specs for DistState: chains over the data axes,
+    marginals column-sharded over the model axis, x replicated."""
+    return DistState(x=P(dp_axes, None), cache=P(dp_axes), key=P(dp_axes),
+                     accepts=P(dp_axes), marg=P(dp_axes, mp_axis, None),
+                     count=P())
 
 
 # ---------------------------------------------------------------------------
@@ -453,29 +484,13 @@ def make_dist_double_min_step(gs: ShardedMatchGraph, lam1: float,
 
 
 # ---------------------------------------------------------------------------
-# Chromatic block Gibbs (beyond-paper, sparse graphs)
+# Chromatic block Gibbs (beyond-paper, sparse graphs).  The lattice builders
+# (`make_lattice_ising`, `lattice_colors`) live in core/factor_graph.py and
+# are re-exported here for compatibility.  The engine-integrated path is
+# ``engine.make("gibbs", g, schedule=ChromaticBlocks(colors))``, which routes
+# color-class blocks through the fused sweep kernel; this dense step is its
+# exact-parity reference.
 # ---------------------------------------------------------------------------
-
-def make_lattice_ising(grid: int, beta: float = 0.4) -> MatchGraph:
-    """Nearest-neighbor Ising on a grid (sparse, 2-colorable): the workload
-    where chromatic scheduling applies."""
-    n = grid * grid
-    W = np.zeros((n, n))
-    for r in range(grid):
-        for c in range(grid):
-            i = r * grid + c
-            for (dr, dc) in ((0, 1), (1, 0)):
-                rr, cc = r + dr, c + dc
-                if rr < grid and cc < grid:
-                    j = rr * grid + cc
-                    W[i, j] = W[j, i] = 2.0 * beta   # ising match weight
-    return MatchGraph.from_interactions(W, match_weight_scale=1.0, D=2)
-
-
-def lattice_colors(grid: int) -> np.ndarray:
-    r, c = np.divmod(np.arange(grid * grid), grid)
-    return ((r + c) % 2).astype(np.int32)
-
 
 def make_chromatic_gibbs_step(g: MatchGraph, colors: np.ndarray):
     """Update every variable of one color class simultaneously — exact for

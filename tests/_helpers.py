@@ -1,0 +1,41 @@
+"""Shared test helpers: exact enumerable marginals and the scan-based
+empirical-marginal loop used by the sweep/engine distributional tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.factor_graph import TabularPairwiseGraph
+
+__all__ = ["exact_marginals", "empirical_sweep_marginals"]
+
+
+def exact_marginals(g):
+    """Per-variable marginals of the exact stationary distribution of an
+    enumerable MatchGraph.  Returns (n, D)."""
+    tg = TabularPairwiseGraph.from_match_graph(g)
+    states = tg.all_states()
+    pi = tg.pi()
+    marg = np.zeros((g.n, g.D))
+    for p, s in zip(pi, states):
+        for i, v in enumerate(s):
+            marg[i, v] += p
+    return marg
+
+
+def empirical_sweep_marginals(sweep, g, st, n_calls):
+    """Empirical marginals from ``n_calls`` applications of a batched
+    ``sweep(state) -> state`` starting at the batched state ``st``
+    (one snapshot per call, averaged over chains)."""
+    C = st.x.shape[0]
+
+    @jax.jit
+    def run(st):
+        def body(carry, _):
+            s, m = carry
+            s = sweep(s)
+            m = m + jax.nn.one_hot(s.x, g.D, dtype=jnp.float32)
+            return (s, m), None
+        m0 = jnp.zeros((C, g.n, g.D), jnp.float32)
+        (s, m), _ = jax.lax.scan(body, (st, m0), None, length=n_calls)
+        return m.sum(0) / (n_calls * C)
+    return np.asarray(run(st))

@@ -1,0 +1,213 @@
+"""Unified Engine API validation.
+
+Four layers:
+  * registry round-trip — every engine name x supported backend constructs,
+    inits, and steps with the right shapes/metadata;
+  * chromatic-on-fused parity — the ChromaticBlocks schedule through the
+    fused sweep kernel matches the dense `make_chromatic_gibbs_step` path
+    EXACTLY (bit-identical states) on the 2-colorable lattice Ising;
+  * newly-swept samplers — MIN-Gibbs and DoubleMIN sweep engines (cached
+    eps/xi recursion threaded through the sweep loop) agree distributionally
+    with their single-site references (both are validated against the same
+    exact enumerable marginals; the references in test_samplers.py);
+  * contract enforcement — run_marginal_experiment accepts only Engines;
+    the old sweep factories survive as warning shims.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (engine, make_potts_graph, make_lattice_ising,
+                        lattice_colors, run_marginal_experiment, ChainState)
+from repro.core.engine import ChromaticBlocks, UniformSites
+from repro.core import samplers as S
+from repro.runtime.dist_gibbs import make_chromatic_gibbs_step
+from _helpers import exact_marginals, empirical_sweep_marginals
+
+
+def _empirical_marginals(eng, n_calls, n_chains=16, seed=0):
+    st = eng.init(jax.random.PRNGKey(seed), n_chains, start="random")
+    return empirical_sweep_marginals(eng.sweep, eng.graph, st, n_calls)
+
+
+# ---------------------------------------------------------------------------
+# registry round-trip
+# ---------------------------------------------------------------------------
+
+def test_registry_roundtrip_every_name_and_backend():
+    """Every registered engine x backend constructs and steps; metadata is
+    explicit (no attribute sniffing anywhere)."""
+    g = make_potts_graph(grid=2, beta=0.8, D=3)
+    key = jax.random.PRNGKey(0)
+    C, sweep_len = 4, 3
+    assert set(engine.names()) == {"gibbs", "min-gibbs", "local-gibbs",
+                                   "mgpmh", "doublemin"}
+    for name in engine.names():
+        for backend in engine.backends(name):
+            if backend == "dist":
+                continue                     # covered by the dist test below
+            eng = engine.make(name, g, sweep=sweep_len, backend=backend)
+            assert eng.name == name and eng.backend == backend
+            assert eng.updates_per_call == sweep_len
+            assert eng.marginal_samples_per_call == 1
+            assert isinstance(eng.schedule, UniformSites)
+            st = eng.init(key, C)
+            st2 = eng.sweep(st)
+            assert st2.x.shape == (C, g.n) and st2.x.dtype == jnp.int32
+            assert bool(jnp.all((st2.x >= 0) & (st2.x < g.D)))
+            d = eng.describe()
+            assert d["engine"] == name and d["backend"] == backend
+
+
+def test_registry_dist_backend_roundtrip():
+    """The dist backend (1x1 mesh) constructs and steps for every engine
+    that supports it."""
+    from repro.launch.mesh import make_auto_mesh
+    g = make_potts_graph(grid=2, beta=0.8, D=3)
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    dist_names = [n for n in engine.names()
+                  if "dist" in engine.backends(n)]
+    assert set(dist_names) == {"gibbs", "mgpmh", "doublemin"}
+    for name in dist_names:
+        eng = engine.make(name, g, backend="dist", mesh=mesh)
+        assert eng.backend == "dist"
+        st = eng.init(key, 4)
+        st = eng.sweep(st)
+        assert st.x.shape == (4, g.n)
+        assert int(st.count) == 1
+    # the mgpmh sweep variant (one psum per sweep) also round-trips
+    eng = engine.make("mgpmh", g, backend="dist", mesh=mesh, sweep=4)
+    st = eng.sweep(eng.init(key, 4))
+    assert eng.updates_per_call == 4 and st.x.shape == (4, g.n)
+
+
+def test_make_errors():
+    g = make_potts_graph(grid=2, beta=0.8, D=3)
+    with pytest.raises(KeyError):
+        engine.make("nope", g)
+    with pytest.raises(ValueError):
+        engine.make("min-gibbs", g, backend="pallas")   # unsupported backend
+    with pytest.raises(ValueError):
+        engine.make("gibbs", g, backend="dist")         # dist needs mesh
+    with pytest.raises(ValueError):
+        engine.make("gibbs", g, sweep=2, schedule=UniformSites(2))
+    with pytest.raises(TypeError):
+        engine.make("gibbs", g, lam=3.0)                # unknown param
+    with pytest.raises(ValueError):
+        engine.make("mgpmh", g,
+                    schedule=ChromaticBlocks([0, 1] * (g.n // 2)))
+
+
+# ---------------------------------------------------------------------------
+# chromatic-on-fused parity (exact)
+# ---------------------------------------------------------------------------
+
+def test_chromatic_blocks_matches_dense_step_exactly():
+    """ChromaticBlocks through the fused sweep kernel is bit-identical to
+    the dense chromatic step when both consume the engine's key protocol."""
+    grid = 4
+    g = make_lattice_ising(grid, beta=0.45)
+    colors = lattice_colors(grid)
+    eng = engine.make("gibbs", g, schedule=ChromaticBlocks(colors),
+                      backend="jnp")
+    assert eng.updates_per_call == g.n
+    dense = make_chromatic_gibbs_step(g, colors)
+
+    st = eng.init(jax.random.PRNGKey(7), 8, start="random")
+    x_ref = st.x
+    for _ in range(5):                      # several chained sweeps
+        knew, master = S._master_key(st.key)
+        keys = jax.random.split(master, 2)
+        for c in range(2):
+            x_ref = dense(x_ref, keys[c], c)
+        st = eng.sweep(st)
+        np.testing.assert_array_equal(np.asarray(st.x), np.asarray(x_ref))
+
+
+def test_chromatic_blocks_marginals():
+    """The chromatic engine is a correct chain: exact marginals on the
+    enumerable 3x3 lattice."""
+    g = make_lattice_ising(3, beta=0.45)
+    eng = engine.make("gibbs", g, schedule=ChromaticBlocks(lattice_colors(3)),
+                      backend="jnp")
+    emp = _empirical_marginals(eng, 4000, n_chains=16)
+    assert np.abs(emp - exact_marginals(g)).max() < 0.03
+
+
+def test_chromatic_rejects_improper_coloring():
+    g = make_lattice_ising(3, beta=0.45)
+    bad = np.zeros(g.n, np.int32)            # everything one color
+    with pytest.raises(ValueError):
+        engine.make("gibbs", g, schedule=ChromaticBlocks(bad), backend="jnp")
+
+
+# ---------------------------------------------------------------------------
+# newly-swept samplers: distributional agreement
+# ---------------------------------------------------------------------------
+
+def test_min_gibbs_sweep_marginals():
+    """The MIN-Gibbs sweep engine (cached-eps recursion in the sweep carry)
+    matches the exact marginals the single-site reference is validated
+    against (test_samplers.py::test_min_gibbs_unbiased_marginals)."""
+    g = make_potts_graph(grid=2, beta=0.6, D=3)
+    lam = float(2 * g.psi ** 2)
+    eng = engine.make("min-gibbs", g, sweep=8, lam=lam)
+    emp = _empirical_marginals(eng, 8000)
+    assert np.abs(emp - exact_marginals(g)).max() < 0.03
+
+
+def test_double_min_sweep_marginals():
+    """The DoubleMIN sweep engine (cached-xi recursion in the sweep carry)
+    matches the exact marginals the single-site reference is validated
+    against (test_samplers.py::test_double_min_marginals)."""
+    g = make_potts_graph(grid=2, beta=0.6, D=3)
+    eng = engine.make("doublemin", g, sweep=8)
+    emp = _empirical_marginals(eng, 8000)
+    assert np.abs(emp - exact_marginals(g)).max() < 0.04
+
+
+# ---------------------------------------------------------------------------
+# contract enforcement + shims + workloads
+# ---------------------------------------------------------------------------
+
+def test_runner_accepts_only_engines():
+    g = make_potts_graph(grid=2, beta=0.8, D=3)
+    eng = engine.make("mgpmh", g, sweep=4, backend="jnp")
+    st = eng.init(jax.random.PRNGKey(0), 4)
+    with pytest.raises(TypeError):
+        run_marginal_experiment(eng.sweep_fn, st, n_iters=400, n_snapshots=1)
+    tr = run_marginal_experiment(eng, st, n_iters=800, n_snapshots=2)
+    iters = np.asarray(tr.iters)
+    assert iters[-1] == 800 and iters[0] == 400   # site updates, not calls
+    assert isinstance(tr.final, ChainState)
+
+
+def test_deprecated_sweep_factories_warn_and_work():
+    g = make_potts_graph(grid=2, beta=0.8, D=3)
+    with pytest.warns(DeprecationWarning):
+        sweep = S.make_gibbs_sweep(g, 4, impl="jnp")
+    assert sweep.updates_per_call == 4 and sweep.batched
+    st = engine.make("gibbs", g, backend="jnp").init(jax.random.PRNGKey(0), 4)
+    assert sweep(st).x.shape == st.x.shape
+    with pytest.warns(DeprecationWarning):
+        sweep = S.make_mgpmh_sweep(g, 20.0, 64, 4, impl="jnp")
+    assert sweep.updates_per_call == 4
+
+
+def test_workload_registry():
+    names = engine.workload_names()
+    assert "lattice-ising-64x64" in names and "potts-20x20" in names
+    wl = engine.make_workload("lattice-ising-64x64")
+    assert wl.graph.D == 2 and wl.colors is not None
+    assert wl.colors.shape == (wl.graph.n,)
+    # a chromatic engine is one line away from the named workload
+    eng = engine.make("gibbs", wl.graph,
+                      schedule=ChromaticBlocks(wl.colors), backend="jnp")
+    assert eng.updates_per_call == wl.graph.n
+    with pytest.raises(KeyError):
+        engine.make_workload("nope")
+    # deprecated alias still importable
+    from repro.configs.registry import GIBBS_CONFIGS
+    assert GIBBS_CONFIGS is engine.WORKLOADS

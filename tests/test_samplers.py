@@ -103,10 +103,12 @@ def test_double_min_marginals():
 
 
 def test_marginal_experiment_decreases():
-    """The paper's Fig-1/2 diagnostic decreases for vanilla Gibbs."""
+    """The paper's Fig-1/2 diagnostic decreases for vanilla Gibbs (driven
+    through the Engine API — the only contract the runner accepts)."""
+    from repro.core import engine
     g = make_potts_graph(grid=4, beta=1.0, D=4)
-    st = init_chains(jax.random.PRNGKey(0), g, 4, S.init_state)
-    tr = run_marginal_experiment(S.make_gibbs_step(g), st,
-                                 n_iters=4000, n_snapshots=4, D=4)
+    eng = engine.make("gibbs", g, backend="jnp")
+    st = eng.init(jax.random.PRNGKey(0), 4)
+    tr = run_marginal_experiment(eng, st, n_iters=4000, n_snapshots=4)
     err = np.asarray(tr.error)
     assert err[-1] < err[0]

@@ -20,10 +20,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (make_potts_graph, make_gibbs_sweep, make_mgpmh_sweep,
-                        init_chains, init_state, run_marginal_experiment,
-                        ChainState)
-from repro.core.factor_graph import TabularPairwiseGraph, build_alias_table
+from repro.core import (engine, make_potts_graph, init_chains, init_state,
+                        run_marginal_experiment, ChainState)
+from repro.core.factor_graph import build_alias_table
 from repro.kernels.ops import mgpmh_sweep, gibbs_sweep
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -86,37 +85,19 @@ def test_gibbs_sweep_kernel_parity(C, S, D, n):
 # distributional agreement on enumerable graphs
 # ---------------------------------------------------------------------------
 
-def _exact_marginals(g):
-    tg = TabularPairwiseGraph.from_match_graph(g)
-    states = tg.all_states()
-    pi = tg.pi()
-    marg = np.zeros((g.n, g.D))
-    for p, s in zip(pi, states):
-        for i, v in enumerate(s):
-            marg[i, v] += p
-    return marg
+from _helpers import exact_marginals as _exact_marginals
+from _helpers import empirical_sweep_marginals
 
 
 def _empirical_sweep_marginals(sweep, g, n_sweeps, n_chains=16, seed=0):
     st = init_chains(jax.random.PRNGKey(seed), g, n_chains,
                      lambda k, gg: init_state(k, gg, start="random"))
-
-    @jax.jit
-    def run(st):
-        def body(carry, _):
-            s, m = carry
-            s = sweep(s)
-            m = m + jax.nn.one_hot(s.x, g.D, dtype=jnp.float32)
-            return (s, m), None
-        m0 = jnp.zeros((n_chains, g.n, g.D), jnp.float32)
-        (s, m), _ = jax.lax.scan(body, (st, m0), None, length=n_sweeps)
-        return m.sum(0) / (n_sweeps * n_chains)
-    return np.asarray(run(st))
+    return empirical_sweep_marginals(sweep, g, st, n_sweeps)
 
 
 def test_gibbs_sweep_marginals():
     g = make_potts_graph(grid=2, beta=0.8, D=3)
-    sweep = make_gibbs_sweep(g, 8, impl="jnp")
+    sweep = engine.make("gibbs", g, sweep=8, backend="jnp").sweep_fn
     emp = _empirical_sweep_marginals(sweep, g, 8000)
     assert np.abs(emp - _exact_marginals(g)).max() < 0.03
 
@@ -128,7 +109,8 @@ def test_mgpmh_sweep_marginals():
     g = make_potts_graph(grid=2, beta=0.8, D=3)
     lam = float(4 * g.L ** 2)
     cap = int(lam + 6 * lam ** 0.5 + 16)
-    sweep = make_mgpmh_sweep(g, lam, cap, 8, impl="jnp")
+    sweep = engine.make("mgpmh", g, sweep=8, backend="jnp", lam=lam,
+                        capacity=cap).sweep_fn
     emp = _empirical_sweep_marginals(sweep, g, 8000)
     assert np.abs(emp - _exact_marginals(g)).max() < 0.03
 
@@ -139,7 +121,8 @@ def test_mgpmh_sweep_kernel_impl_marginals():
     g = make_potts_graph(grid=2, beta=0.8, D=3)
     lam = float(4 * g.L ** 2)
     cap = int(lam + 6 * lam ** 0.5 + 16)
-    sweep = make_mgpmh_sweep(g, lam, cap, 8, impl="pallas")
+    sweep = engine.make("mgpmh", g, sweep=8, backend="pallas", lam=lam,
+                        capacity=cap).sweep_fn
     emp = _empirical_sweep_marginals(sweep, g, 600, n_chains=32)
     assert np.abs(emp - _exact_marginals(g)).max() < 0.08
 
@@ -149,14 +132,15 @@ def test_mgpmh_sweep_kernel_impl_marginals():
 # ---------------------------------------------------------------------------
 
 def test_run_marginal_experiment_with_sweep():
-    """The runner consumes batched sweeps; iters counts site updates and
+    """The runner consumes sweep engines; iters counts site updates and
     the error trajectory decreases."""
     g = make_potts_graph(grid=4, beta=1.0, D=4)
     lam = float(4 * g.L ** 2)
     cap = int(lam + 6 * lam ** 0.5 + 16)
-    sweep = make_mgpmh_sweep(g, lam, cap, 16, impl="jnp")
+    eng = engine.make("mgpmh", g, sweep=16, backend="jnp", lam=lam,
+                      capacity=cap)
     st = init_chains(jax.random.PRNGKey(0), g, 4, init_state)
-    tr = run_marginal_experiment(sweep, st, n_iters=8000, n_snapshots=4, D=4)
+    tr = run_marginal_experiment(eng, st, n_iters=8000, n_snapshots=4, D=4)
     iters = np.asarray(tr.iters)
     assert iters[-1] == 8000 and iters[0] == 2000  # site updates, not calls
     err = np.asarray(tr.error)
@@ -183,13 +167,8 @@ def test_dist_mgpmh_sweep_matches_reference():
         mesh = make_auto_mesh((2,4), ("data","model"))
         gs = DG.ShardedMatchGraph.from_graph(g, 4)
         step = DG.make_dist_mgpmh_sweep(gs, lam, cap, 4)
-        shard_specs = {"W_cols": P("model",None,None), "row_prob": P("model",None,None),
-                       "row_alias": P("model",None,None), "row_sum": P("model",None),
-                       "pair_a": P("model",None), "pair_b": P("model",None),
-                       "pair_prob": P("model",None), "pair_alias": P("model",None),
-                       "psi_loc": P("model")}
-        st_specs = DG.DistState(x=P("data",None), cache=P("data"), key=P("data"),
-                                accepts=P("data"), marg=P("data","model",None), count=P())
+        shard_specs = DG.shard_specs()
+        st_specs = DG.state_specs()
         smapped = shard_map(lambda st, sh: step(st, sh), mesh=mesh,
                             in_specs=(st_specs, shard_specs), out_specs=st_specs,
                             check_rep=False)

@@ -9,8 +9,7 @@ from repro.configs.registry import get_arch
 from repro.launch.train import train
 from repro.launch.serve import generate
 from repro.models import transformer as T
-from repro.core import (make_potts_graph, make_mgpmh_step, init_chains,
-                        init_state, run_marginal_experiment)
+from repro.core import engine, make_potts_graph, run_marginal_experiment
 
 
 def test_train_loop_loss_decreases(tmp_path):
@@ -54,11 +53,9 @@ def test_paper_experiment_pipeline():
     """The Fig-2b pipeline end to end on a scaled-down Potts model: MGPMH
     marginal error decreases and acceptance is high with lam = 4 L^2."""
     g = make_potts_graph(grid=4, beta=2.0, D=5)
-    lam = float(4 * g.L ** 2)
-    cap = int(lam + 6 * lam ** 0.5 + 16)
-    step = make_mgpmh_step(g, lam=lam, capacity=cap)
-    st = init_chains(jax.random.PRNGKey(0), g, 4, init_state)
-    tr = run_marginal_experiment(step, st, n_iters=8000, n_snapshots=4, D=5)
+    eng = engine.make("mgpmh", g, sweep=8, backend="jnp")
+    st = eng.init(jax.random.PRNGKey(0), 4)
+    tr = run_marginal_experiment(eng, st, n_iters=8000, n_snapshots=4)
     err = np.asarray(tr.error)
     assert err[-1] < err[0]
     acc_rate = float(np.mean(np.asarray(tr.final.accepts))) / 8000
