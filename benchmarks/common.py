@@ -47,7 +47,14 @@ def timed_steps(eng, state, n_iters: int, n_chains: int,
 
 # Machine-readable perf trajectory: every row() call also appends a record
 # here; ``run.py --json PATH`` dumps them as BENCH_kernel.json-style
-# entries {name, us_per_call, derived, engine, backend, schedule, ...}.
+# entries {name, us_per_call, derived, engine, backend, schedule, ...}
+# wrapped as {"schema_version": SCHEMA_VERSION, "records": [...]}.
+#
+# Schema history:
+#   1 — bare list of {name, us_per_call, derived, engine identity, metrics}
+#   2 — versioned wrapper; telemetry'd rows add statistical-efficiency
+#       fields (mean_acceptance, ess_per_sec, max_split_rhat, ...)
+SCHEMA_VERSION = 2
 RECORDS: list = []
 
 

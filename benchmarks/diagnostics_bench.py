@@ -1,0 +1,133 @@
+"""Diagnostics + adaptive-scan benchmarks: statistical efficiency, not just
+sites/sec.
+
+Rows (all JSON records carry the telemetry summary fields — mean
+acceptance, ESS/sec, max split-R-hat — so BENCH_*.json tracks whether the
+sampler is *mixing*, not only how fast it burns updates):
+
+  * ``diag/telemetry_overhead`` — fused jnp MGPMH sweep with vs without the
+    streaming telemetry carry (acceptance criterion: < 10% overhead);
+  * ``diag/uniform_pairs1024`` / ``diag/adaptive_pairs1024`` — site updates
+    to a fixed worst-site TV-to-exact-marginals target on the large
+    registered heterogeneous-pairs workload, UniformSites vs AdaptiveScan
+    (the large-graph counterpart of the tier-1 efficiency assertion);
+  * ``diag/autotune_lambda`` — rounds and landing point of the minibatch
+    auto-tuner on the paper's Potts model.
+
+``smoke=True`` (the CI path, ``benchmarks/run.py --json --smoke``) shrinks
+everything to a CPU-minutes budget on the small pairs workload.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import engine, make_potts_graph, run_marginal_experiment
+from repro.core.engine import AdaptiveScan
+from repro import diagnostics as diag
+from .common import row
+
+
+def _timed_run(eng, st, n_iters, n_snapshots, reps=1, **kw):
+    tr = run_marginal_experiment(eng, st, n_iters=n_iters,
+                                 n_snapshots=n_snapshots, **kw)
+    jax.block_until_ready(tr.error)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        tr = run_marginal_experiment(eng, st, n_iters=n_iters,
+                                     n_snapshots=n_snapshots, **kw)
+        jax.block_until_ready(tr.error)
+        best = min(best, time.perf_counter() - t0)
+    return tr, best
+
+
+def _telemetry_overhead(smoke: bool):
+    g = make_potts_graph(8 if smoke else 20, 4.6, 10)
+    C, S = (16, 16) if smoke else (64, 64)
+    calls = 16 if smoke else 48
+    eng = engine.make("mgpmh", g, sweep=S, backend="jnp")
+    st = eng.init(jax.random.PRNGKey(0), C)
+    _, base = _timed_run(eng, st, S * calls, 4, reps=3)
+    tr, timed = _timed_run(eng, st, S * calls, 4, reps=3, telemetry=True)
+    overhead = timed / base - 1.0
+    s = diag.summarize(tr.telemetry, eng.exact_accept, elapsed_sec=timed)
+    us = timed * 1e6 / (S * calls * C)
+    row(f"diag/telemetry_overhead_C{C}_S{S}", us,
+        f"overhead={100 * overhead:.1f}% acc={s['mean_acceptance']:.3f} "
+        f"rhat={s['max_split_rhat']:.3f}",
+        overhead_pct=round(100 * overhead, 1),
+        mean_acceptance=round(s["mean_acceptance"], 4),
+        ess_per_sec=round(s.get("ess_per_sec", 0.0), 1),
+        max_split_rhat=round(s["max_split_rhat"], 4), **eng.describe())
+
+
+def _updates_to_target(eng, st, n_iters, n_snapshots, ref, target):
+    tr, dt = _timed_run(eng, st, n_iters, n_snapshots, ref_marginals=ref,
+                        site_reduce="max", telemetry=True)
+    err = np.asarray(tr.error)
+    iters = np.asarray(tr.iters)
+    hit = err < target
+    first = int(iters[np.argmax(hit)]) if hit.any() else None
+    return first, tr, dt
+
+
+def _adaptive_vs_uniform(smoke: bool):
+    wl = engine.make_workload("hetero-pairs-24" if smoke
+                              else "hetero-pairs-1024")
+    g = wl.graph
+    ref = np.full((g.n, g.D), 0.5)       # exact by relabeling symmetry
+    if smoke:
+        S, C, n_snapshots, calls, target = 16, 16, 120, 8, 0.12
+    else:
+        S, C, n_snapshots, calls, target = 256, 32, 96, 8, 0.25
+    n_iters = S * calls * n_snapshots
+    key = jax.random.PRNGKey(0)
+    results = {}
+    for label, eng in (
+            ("uniform", engine.make("gibbs", g, sweep=S, backend="jnp")),
+            ("adaptive", engine.make(
+                "gibbs", g, backend="jnp",
+                schedule=AdaptiveScan(sweep_len=S, refresh_every=4,
+                                      uniform_mix=0.15)))):
+        st = eng.init(key, C)
+        first, tr, dt = _updates_to_target(eng, st, n_iters, n_snapshots,
+                                           ref, target)
+        s = diag.summarize(tr.telemetry, eng.exact_accept, elapsed_sec=dt)
+        results[label] = first
+        us = dt * 1e6 / (n_iters * C)
+        row(f"diag/{label}_{wl.name}", us,
+            f"updates_to_tv{target}={first} "
+            f"rhat={s['max_split_rhat']:.3f}",
+            updates_to_target=first, tv_target=target,
+            mean_acceptance=round(s["mean_acceptance"], 4),
+            ess_per_sec=round(s.get("ess_per_sec", 0.0), 1),
+            max_split_rhat=round(s["max_split_rhat"], 4), **eng.describe())
+    fu, fa = results["uniform"], results["adaptive"]
+    if fu and fa:
+        row(f"diag/adaptive_speedup_{wl.name}", 0.0,
+            f"update_ratio={fa / fu:.3f} (<=0.7 is the tier-1 criterion)",
+            update_ratio=round(fa / fu, 3))
+
+
+def _autotune(smoke: bool):
+    g = make_potts_graph(4 if smoke else 8, 4.6, 4)
+    t0 = time.perf_counter()
+    eng, hist = diag.autotune_lambda(
+        "mgpmh", g, target=(0.90, 0.96), lam0=2.0, sweep=8,
+        n_chains=8 if smoke else 16, pilot_calls=16 if smoke else 32)
+    dt = time.perf_counter() - t0
+    row("diag/autotune_lambda", dt * 1e6,
+        f"rounds={len(hist)} lam={hist[-1]['lam']:.1f} "
+        f"acc={hist[-1]['acceptance']:.3f}",
+        rounds=len(hist), lam=round(hist[-1]["lam"], 2),
+        mean_acceptance=round(hist[-1]["acceptance"], 4), **eng.describe())
+
+
+def run(paper_scale: bool = False, smoke: bool = False):
+    del paper_scale                      # scales are telemetry-, not paper-bound
+    _telemetry_overhead(smoke)
+    _adaptive_vs_uniform(smoke)
+    _autotune(smoke)

@@ -4,9 +4,13 @@ Gibbs benchmarks to the paper's exact 20x20 / 10^6-iteration setting.
 ``--json PATH`` additionally writes every row as a BENCH_kernel.json-style
 record (name, us_per_call, derived, engine identity fields
 engine/backend/schedule/updates_per_call, plus metric fields like
-sites_per_sec) so the perf trajectory is machine-readable and attributable
-across PRs."""
+sites_per_sec and — on telemetry'd rows — mean_acceptance / ess_per_sec /
+max_split_rhat) wrapped as ``{"schema_version": N, "records": [...]}`` so
+the perf trajectory is machine-readable and attributable across PRs.
+``--smoke`` runs only the diagnostics module at CI-smoke scale (CPU
+minutes): the convergence-telemetry record CI uploads as an artifact."""
 import argparse
+import inspect
 import json
 
 
@@ -14,25 +18,37 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,fig1,fig2,kernel,roofline,sweep")
+                    help="comma list: table1,fig1,fig2,kernel,roofline,"
+                         "sweep,diag")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all rows as JSON records to PATH")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: diagnostics module only, tiny scales")
     args = ap.parse_args()
     from . import (table1_cost, fig1_min_gibbs, fig2_variants, kernel_bench,
-                   roofline, sweep_bench, common)
+                   roofline, sweep_bench, diagnostics_bench, common)
     mods = {"table1": table1_cost, "fig1": fig1_min_gibbs,
             "fig2": fig2_variants, "kernel": kernel_bench,
-            "roofline": roofline, "sweep": sweep_bench}
-    only = args.only.split(",") if args.only else list(mods)
+            "roofline": roofline, "sweep": sweep_bench,
+            "diag": diagnostics_bench}
+    if args.smoke:
+        only = ["diag"]
+    else:
+        only = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")
     try:
         for key in only:
-            mods[key].run(paper_scale=args.paper_scale)
+            fn = mods[key].run
+            kwargs = dict(paper_scale=args.paper_scale)
+            if "smoke" in inspect.signature(fn).parameters:
+                kwargs["smoke"] = args.smoke
+            fn(**kwargs)
     finally:
         # dump whatever was collected even if a later module failed
         if args.json:
             with open(args.json, "w") as f:
-                json.dump(common.RECORDS, f, indent=1)
+                json.dump({"schema_version": common.SCHEMA_VERSION,
+                           "records": common.RECORDS}, f, indent=1)
             print(f"# wrote {len(common.RECORDS)} records to {args.json}",
                   flush=True)
 

@@ -1,0 +1,59 @@
+"""Convergence telemetry + adaptive scan in ~40 lines.
+
+A heterogeneous pair-Ising model (registered workload ``hetero-pairs-24``):
+every exact marginal is uniform, but strongly coupled pairs mix orders of
+magnitude more slowly than weak ones.  A uniform random scan spends most
+updates on sites that are already decorrelated; the AdaptiveScan schedule
+reads the streaming telemetry (per-site flip rates) and reallocates updates
+toward the sticky sites — same stationary distribution, far fewer updates
+to a given worst-site TV error.
+
+  PYTHONPATH=src python examples/adaptive_scan.py
+"""
+import jax
+import numpy as np
+
+from repro.core import engine, run_marginal_experiment, AdaptiveScan
+from repro import diagnostics as diag
+
+wl = engine.make_workload("hetero-pairs-24")
+g = wl.graph
+ref = np.full((g.n, g.D), 0.5)      # exact marginals (relabeling symmetry)
+S, C, TARGET = 16, 16, 0.12
+n_iters, n_snapshots = 8 * S * 120, 120
+key = jax.random.PRNGKey(0)
+
+
+def updates_to_target(eng):
+    trace = run_marginal_experiment(
+        eng, eng.init(key, C), n_iters=n_iters, n_snapshots=n_snapshots,
+        ref_marginals=ref, site_reduce="max", telemetry=True)
+    err, iters = np.asarray(trace.error), np.asarray(trace.iters)
+    first = iters[np.argmax(err < TARGET)] if (err < TARGET).any() else None
+    return first, diag.summarize(trace.telemetry, eng.exact_accept)
+
+
+uniform = engine.make("gibbs", g, sweep=S)
+adaptive = engine.make(
+    "gibbs", g,
+    schedule=AdaptiveScan(sweep_len=S, refresh_every=4, uniform_mix=0.15))
+
+fu, su = updates_to_target(uniform)
+fa, sa = updates_to_target(adaptive)
+print(f"worst-site TV < {TARGET}:")
+print(f"  uniform scan : {fu} site updates  "
+      f"(max split-Rhat {su['max_split_rhat']:.3f})")
+print(f"  adaptive scan: {fa} site updates  "
+      f"(max split-Rhat {sa['max_split_rhat']:.3f})")
+if fu and fa:
+    print(f"  update ratio : {fa / fu:.2f}  (tier-1 asserts <= 0.7)")
+else:
+    print(f"  target not reached within {n_iters} updates — raise n_iters")
+
+# The same telemetry drives the minibatch auto-tuner: pick lambda so MGPMH
+# acceptance lands in a band instead of hand-tuning the paper recipe.
+eng, hist = diag.autotune_lambda("mgpmh", engine.make_workload(
+    "potts-20x20").graph, target=(0.90, 0.96), lam0=4.0, pilot_calls=16)
+print("lambda auto-tuner:",
+      " -> ".join(f"lam={h['lam']:.0f}@{h['acceptance']:.2f}"
+                  for h in hist))

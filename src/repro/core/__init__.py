@@ -17,7 +17,8 @@ Public API:
 from .factor_graph import (MatchGraph, TabularPairwiseGraph,
                            gaussian_kernel_interactions, make_ising_graph,
                            make_potts_graph, make_lattice_ising,
-                           lattice_colors, build_alias_table, alias_draw)
+                           lattice_colors, make_pair_ising, pair_colors,
+                           build_alias_table, alias_draw)
 from .estimators import (lemma2_lambda, recommended_capacity,
                          capacity_overflow_prob, draw_global_minibatch,
                          draw_local_minibatch, min_gibbs_estimate)
@@ -28,7 +29,7 @@ from .samplers import (ChainState, init_state, make_gibbs_step,
                        init_min_gibbs_cache, init_double_min_cache)
 from . import engine
 from .engine import (Engine, Schedule, UniformSites, ChromaticBlocks,
-                     Workload, WORKLOADS, make_workload)
+                     AdaptiveScan, Workload, WORKLOADS, make_workload)
 from .chains import (MarginalTrace, init_chains, run_marginal_experiment,
                      marginal_error)
 from . import spectral

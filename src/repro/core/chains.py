@@ -10,7 +10,7 @@ Engine` — the sole execution contract; bare step functions (and the old
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +25,12 @@ __all__ = ["MarginalTrace", "init_chains", "run_marginal_experiment",
 
 class MarginalTrace(NamedTuple):
     iters: jax.Array   # (S,) iteration counts at snapshot points
-    error: jax.Array   # (S,) mean-over-chains marginal l2 error
+    error: jax.Array   # (S,) mean-over-chains marginal error (l2 to the
+    #                    uniform marginal, or mean TV to ``ref_marginals``)
     final: ChainState  # vmapped final state (C, ...)
+    marg: Any = None   # (C, n, D) final one-hot sums (marginal estimate =
+    #                    marg / (iters[-1] / updates_per_call))
+    telemetry: Any = None  # Telemetry carry when telemetry=True
 
 
 def init_chains(key: jax.Array, graph: MatchGraph, n_chains: int,
@@ -50,9 +54,10 @@ def marginal_error(marg_sum: jax.Array, count: jax.Array) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("engine", "n_iters",
-                                             "n_snapshots", "D"))
-def _run(engine: Engine, state: ChainState, *, n_iters: int,
-         n_snapshots: int, D: int) -> MarginalTrace:
+                                             "n_snapshots", "D",
+                                             "site_reduce"))
+def _run(engine: Engine, state: ChainState, tel, ref, *, n_iters: int,
+         n_snapshots: int, D: int, site_reduce: str) -> MarginalTrace:
     updates = engine.updates_per_call
     calls = n_iters // (n_snapshots * updates)   # sweep calls per snapshot
     if calls == 0:
@@ -72,27 +77,41 @@ def _run(engine: Engine, state: ChainState, *, n_iters: int,
     marg0 = jnp.zeros((C, n, D), jnp.float32)
 
     def inner(carry, _):
-        st, ms = carry
-        st = engine.sweep(st)
+        st, ms, t = carry
+        if t is None:
+            st = engine.sweep(st)
+        else:
+            st, t = engine.sweep(st, t)
         ms = ms + jax.nn.one_hot(st.x, D, dtype=jnp.float32)
-        return (st, ms), None
+        return (st, ms, t), None
+
+    def snapshot_error(ms, cnt):
+        if ref is None:
+            return marginal_error(ms, cnt).mean()          # l2 to uniform
+        tv = 0.5 * jnp.abs(ms / cnt - ref).sum(-1)         # (C, n) TV
+        per_site = tv.mean(axis=0)                         # mean over chains
+        return per_site.max() if site_reduce == "max" else per_site.mean()
 
     def outer(carry, k):
-        st, ms = carry
-        (st, ms), _ = jax.lax.scan(inner, (st, ms), None, length=calls)
+        st, ms, t = carry
+        (st, ms, t), _ = jax.lax.scan(inner, (st, ms, t), None,
+                                      length=calls)
         cnt = (k + 1.0) * calls                  # samples accumulated
-        err = marginal_error(ms, cnt).mean()     # mean over chains
-        return (st, ms), err
+        return (st, ms, t), snapshot_error(ms, cnt)
 
-    (state, _), errs = jax.lax.scan(outer, (state, marg0),
-                                    jnp.arange(n_snapshots))
+    (state, marg, tel), errs = jax.lax.scan(outer, (state, marg0, tel),
+                                            jnp.arange(n_snapshots))
     iters = (jnp.arange(n_snapshots) + 1) * calls * updates
-    return MarginalTrace(iters=iters, error=errs, final=state)
+    return MarginalTrace(iters=iters, error=errs, final=state, marg=marg,
+                         telemetry=tel)
 
 
 def run_marginal_experiment(engine: Engine, state: ChainState, *,
                             n_iters: int, n_snapshots: int,
-                            D: int | None = None) -> MarginalTrace:
+                            D: int | None = None,
+                            telemetry: bool = False,
+                            ref_marginals=None,
+                            site_reduce: str = "mean") -> MarginalTrace:
     """Run ``n_iters`` site updates over C chains, collecting the
     marginal-error trajectory at ``n_snapshots`` evenly spaced points.
 
@@ -109,6 +128,18 @@ def run_marginal_experiment(engine: Engine, state: ChainState, *,
     returned ``iters`` reports the updates that actually ran.  Accumulation
     is float32 (exact for < 2^24 samples).  ``D`` defaults to the engine's
     graph domain size.
+
+    ``telemetry=True`` threads a streaming
+    :class:`~repro.diagnostics.telemetry.Telemetry` carry through the run
+    (split-halved at the middle snapshot, so split-R-hat is exact) and
+    returns it in ``trace.telemetry`` — summarize with
+    ``repro.diagnostics.summarize(trace.telemetry, engine.exact_accept)``.
+    ``ref_marginals`` ((n, D), e.g. from
+    ``repro.diagnostics.exact_marginals``) switches ``error`` from the
+    paper's l2-to-uniform proxy to the total-variation distance to the
+    exact marginals; ``site_reduce`` picks the site aggregation of that TV
+    trajectory — "mean" (default) or "max" (worst marginal, the
+    convergence-to-target criterion heterogeneous workloads need).
     """
     if not isinstance(engine, Engine):
         raise TypeError(
@@ -117,4 +148,15 @@ def run_marginal_experiment(engine: Engine, state: ChainState, *,
             f"repro.core.engine.make(name, graph, sweep=S, backend=...)")
     if D is None:
         D = engine.graph.D
-    return _run(engine, state, n_iters=n_iters, n_snapshots=n_snapshots, D=D)
+    tel = None
+    if telemetry:
+        calls = n_iters // (n_snapshots * engine.updates_per_call)
+        tel = engine.init_telemetry(state,
+                                    half_at=(n_snapshots * calls) // 2)
+    if site_reduce not in ("mean", "max"):
+        raise ValueError(f"site_reduce must be 'mean' or 'max', got "
+                         f"{site_reduce!r}")
+    ref = None if ref_marginals is None else jnp.asarray(ref_marginals,
+                                                         jnp.float32)
+    return _run(engine, state, tel, ref, n_iters=n_iters,
+                n_snapshots=n_snapshots, D=D, site_reduce=site_reduce)

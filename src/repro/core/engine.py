@@ -45,13 +45,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from .factor_graph import (MatchGraph, make_ising_graph, make_potts_graph,
-                           make_lattice_ising, lattice_colors)
+                           make_lattice_ising, lattice_colors,
+                           make_pair_ising, pair_colors)
 from .estimators import (recommended_capacity, draw_global_minibatch,
                          min_gibbs_estimate)
 from . import samplers as S
 
 __all__ = [
-    "Engine", "Schedule", "UniformSites", "ChromaticBlocks",
+    "Engine", "Schedule", "UniformSites", "ChromaticBlocks", "AdaptiveScan",
     "make", "names", "backends", "register",
     "Workload", "WORKLOADS", "make_workload", "workload_names",
 ]
@@ -110,6 +111,43 @@ class ChromaticBlocks(Schedule):
         return f"chromatic-blocks(k={self.n_colors}, n={len(self.colors)})"
 
 
+@dataclasses.dataclass(frozen=True)
+class AdaptiveScan(Schedule):
+    """``sweep_len`` fused updates per call at sites drawn from a *learned*
+    non-uniform distribution (gibbs / mgpmh engines).
+
+    The selection table is driven by the streaming per-site telemetry the
+    sweep itself collects (``repro.diagnostics``): sites that rarely change
+    value per update ("sticky" — slow-mixing under the conditional) are
+    upweighted in proportion to their estimated persistence, equalizing
+    *independent* samples per site instead of raw updates.  The cumulative
+    table is refreshed in-graph every ``refresh_every`` sweeps (no host
+    sync; between refreshes the hot path is the same fused sweep at given
+    sites), mixed with ``uniform_mix`` of the uniform distribution so every
+    site keeps positive probability — each inter-refresh segment is a valid
+    random-scan chain with the target stationary distribution.
+
+    ``smoothing`` regularizes the inverse-flip-rate weight (sites with few
+    observations stay near uniform).  Construction lives in
+    ``repro.diagnostics.adaptive``; ``engine.make`` routes there.
+    """
+    sweep_len: int = 16
+    refresh_every: int = 8
+    uniform_mix: float = 0.25
+    smoothing: float = 0.05
+
+    def __post_init__(self):
+        if self.sweep_len < 1 or self.refresh_every < 1:
+            raise ValueError("sweep_len and refresh_every must be >= 1")
+        if not (0.0 < self.uniform_mix <= 1.0):
+            raise ValueError("uniform_mix must be in (0, 1] (a zero floor "
+                             "can starve sites and break ergodicity)")
+
+    def describe(self) -> str:
+        return (f"adaptive-scan(S={self.sweep_len}, K={self.refresh_every}, "
+                f"mix={self.uniform_mix})")
+
+
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
@@ -125,6 +163,9 @@ class Engine:
                                   are amortized over the whole sweep).
     ``backend``                   'jnp' | 'pallas' | 'dist' (resolved, never
                                   'auto').
+    ``exact_accept``              True for Gibbs-type engines whose every
+                                  update is accepted by construction (MH
+                                  acceptance == 1 identically).
     Hash/eq are identity so an Engine can be a jit-static argument.
     """
     name: str
@@ -136,20 +177,53 @@ class Engine:
     params: Dict[str, Any] = dataclasses.field(repr=False)
     init_fn: Callable = dataclasses.field(repr=False)
     sweep_fn: Callable = dataclasses.field(repr=False)
+    # instrumented sweep variant: ``(state) -> (state, SweepStats)`` with
+    # exact per-site counters; None where the backend can't surface them
+    # (dist, local-gibbs) — telemetry then falls back to state diffs.
+    sweep_stats_fn: Optional[Callable] = dataclasses.field(
+        default=None, repr=False)
+    exact_accept: bool = False
 
     def init(self, key: jax.Array, n_chains: int, **kwargs):
         """Batched initial state for ``n_chains`` chains (cached-estimator
         algorithms get their eps/xi cache initialized here)."""
         return self.init_fn(key, n_chains, **kwargs)
 
-    def sweep(self, state):
+    def init_telemetry(self, state, half_at: Optional[int] = None):
+        """Zeroed :class:`~repro.diagnostics.telemetry.Telemetry` sized for
+        ``state`` (pass ``half_at=total_snapshots // 2`` for split-R-hat)."""
+        from ..diagnostics.telemetry import telemetry_init
+        return telemetry_init(state.x, half_at=half_at)
+
+    def sweep(self, state, telemetry=None):
         """Advance every chain by ``updates_per_call`` site updates.
+
+        With ``telemetry=`` (a :class:`~repro.diagnostics.telemetry.
+        Telemetry` carry from :meth:`init_telemetry`) the call returns
+        ``(state, telemetry)``: the streaming convergence statistics are
+        updated from the instrumented sweep where available and from state
+        diffs otherwise — device-resident, no host sync, safe inside scan.
 
         The 'dist' backend DONATES the input state (its buffers are dead
         after the call — rebind, don't reuse: ``st = eng.sweep(st)``); the
         jnp/pallas backends leave the input intact.
         """
-        return self.sweep_fn(state)
+        if telemetry is None:
+            return self.sweep_fn(state)
+        from ..diagnostics.telemetry import telemetry_update
+        old_x = state.x
+        old_acc = getattr(state, "accepts", None)
+        if self.backend == "dist":        # sweep donates the input buffers
+            old_x = jnp.copy(old_x)
+            old_acc = None if old_acc is None else jnp.copy(old_acc)
+        if self.sweep_stats_fn is not None:
+            new, stats = self.sweep_stats_fn(state)
+        else:
+            new, stats = self.sweep_fn(state), None
+        delta = None if old_acc is None else new.accepts - old_acc
+        telemetry = telemetry_update(telemetry, old_x, new.x,
+                                     self.updates_per_call, delta, stats)
+        return new, telemetry
 
     def describe(self) -> Dict[str, Any]:
         """Machine-readable identity (benchmarks attach this to records)."""
@@ -194,9 +268,12 @@ def make(name: str, graph: MatchGraph, *, sweep: Optional[int] = None,
     """Build an :class:`Engine` by registry name.
 
     ``sweep=S`` is shorthand for ``schedule=UniformSites(S)``; pass a
-    :class:`Schedule` for anything else.  ``backend`` is 'auto' | 'pallas'
-    | 'jnp' | 'dist' ('dist' needs ``mesh=``).  Algorithm parameters (lam,
-    capacity, ...) are keyword ``params`` with paper-recipe defaults.
+    :class:`Schedule` for anything else — :class:`ChromaticBlocks` (gibbs)
+    or :class:`AdaptiveScan` (gibbs/mgpmh, telemetry-driven non-uniform
+    site selection; state carries its own diagnostics).  ``backend`` is
+    'auto' | 'pallas' | 'jnp' | 'dist' ('dist' needs ``mesh=``).  Algorithm
+    parameters (lam, capacity, ...) are keyword ``params`` with
+    paper-recipe defaults.
     """
     if name not in _BUILDERS:
         raise KeyError(f"unknown engine {name!r}; available: {list(names())}")
@@ -239,19 +316,23 @@ def _chain_init(graph: MatchGraph, cache_init: Optional[Callable] = None):
 def _uniform_or_chromatic(graph, schedule, backend, uniform_builder):
     """Dispatch the gibbs-family schedule: UniformSites -> fused sweep of
     ``sweep_len``; ChromaticBlocks -> color-class blocks through the fused
-    kernel."""
+    kernel.  ``uniform_builder(sweep_len, collect_stats)`` builds the plain
+    and instrumented variants; returns (sweep_fn, stats_fn, upd)."""
     if isinstance(schedule, ChromaticBlocks):
-        sweep_fn = S._build_chromatic_gibbs_sweep(
-            graph, schedule.colors_array, impl=backend)
-        return sweep_fn, graph.n
-    return uniform_builder(schedule.sweep_len), schedule.sweep_len
+        build = lambda cs: S._build_chromatic_gibbs_sweep(
+            graph, schedule.colors_array, impl=backend, collect_stats=cs)
+        return build(False), build(True), graph.n
+    sl = schedule.sweep_len
+    return (uniform_builder(sl, False), uniform_builder(sl, True), sl)
 
 
-def _engine(name, backend, schedule, upd, graph, params, init_fn, sweep_fn):
+def _engine(name, backend, schedule, upd, graph, params, init_fn, sweep_fn,
+            stats_fn=None, exact_accept=False):
     return Engine(name=name, backend=backend, schedule=schedule,
                   updates_per_call=upd, marginal_samples_per_call=1,
                   graph=graph, params=params, init_fn=init_fn,
-                  sweep_fn=sweep_fn)
+                  sweep_fn=sweep_fn, sweep_stats_fn=stats_fn,
+                  exact_accept=exact_accept)
 
 
 def _reject_unknown(name, params):
@@ -269,11 +350,20 @@ def _gibbs_builder(graph, *, schedule, backend, mesh, **params):
     _reject_unknown("gibbs", params)
     if backend == "dist":
         return _dist_engine("gibbs", graph, schedule, mesh, {})
-    sweep_fn, upd = _uniform_or_chromatic(
+    if isinstance(schedule, AdaptiveScan):
+        from ..diagnostics.adaptive import make_adaptive_engine
+        return make_adaptive_engine(
+            "gibbs", graph, schedule, backend,
+            core=S._build_gibbs_sweep(graph, schedule.sweep_len,
+                                      impl=backend, collect_stats=True),
+            chain_init=_chain_init(graph), params={}, exact_accept=True)
+    sweep_fn, stats_fn, upd = _uniform_or_chromatic(
         graph, schedule, backend,
-        lambda sl: S._build_gibbs_sweep(graph, sl, impl=backend))
+        lambda sl, cs: S._build_gibbs_sweep(graph, sl, impl=backend,
+                                            collect_stats=cs))
     return _engine("gibbs", backend, schedule, upd, graph, {},
-                   _chain_init(graph), sweep_fn)
+                   _chain_init(graph), sweep_fn, stats_fn=stats_fn,
+                   exact_accept=True)
 
 
 @register("min-gibbs", backends=("jnp",))
@@ -289,11 +379,13 @@ def _min_gibbs_builder(graph, *, schedule, backend, mesh, lam=None,
     capacity = recommended_capacity(lam) if capacity is None else capacity
     cache_init = lambda k, st: S.init_min_gibbs_cache(k, graph, st, lam,
                                                       capacity)
+    build = lambda cs: S._build_min_gibbs_sweep(
+        graph, lam, capacity, schedule.sweep_len, collect_stats=cs)
     return _engine(
         "min-gibbs", backend, schedule, schedule.sweep_len, graph,
         dict(lam=lam, capacity=capacity),
-        _chain_init(graph, cache_init),
-        S._build_min_gibbs_sweep(graph, lam, capacity, schedule.sweep_len))
+        _chain_init(graph, cache_init), build(False), stats_fn=build(True),
+        exact_accept=True)
 
 
 @register("local-gibbs", backends=("jnp",))
@@ -306,24 +398,36 @@ def _local_gibbs_builder(graph, *, schedule, backend, mesh, batch_size=None,
     return _engine(
         "local-gibbs", backend, schedule, schedule.sweep_len, graph,
         dict(batch_size=batch_size), _chain_init(graph),
-        S._build_step_sweep(step, schedule.sweep_len))
+        S._build_step_sweep(step, schedule.sweep_len), exact_accept=True)
 
 
 @register("mgpmh", backends=("jnp", "pallas", "dist"))
 def _mgpmh_builder(graph, *, schedule, backend, mesh, lam=None,
                    capacity=None, **params):
     _reject_unknown("mgpmh", params)
-    _require_uniform("mgpmh", schedule)
     lam = float(4.0 * graph.L ** 2) if lam is None else float(lam)
     if backend == "dist":
+        _require_uniform("mgpmh", schedule)
         return _dist_engine("mgpmh", graph, schedule, mesh,
                             dict(lam=lam, capacity=capacity))
     capacity = recommended_capacity(lam) if capacity is None else capacity
+    if isinstance(schedule, AdaptiveScan):
+        from ..diagnostics.adaptive import make_adaptive_engine
+        return make_adaptive_engine(
+            "mgpmh", graph, schedule, backend,
+            core=S._build_mgpmh_sweep(graph, lam, capacity,
+                                      schedule.sweep_len, impl=backend,
+                                      collect_stats=True),
+            chain_init=_chain_init(graph),
+            params=dict(lam=lam, capacity=capacity))
+    _require_uniform("mgpmh", schedule)
+    build = lambda cs: S._build_mgpmh_sweep(
+        graph, lam, capacity, schedule.sweep_len, impl=backend,
+        collect_stats=cs)
     return _engine(
         "mgpmh", backend, schedule, schedule.sweep_len, graph,
         dict(lam=lam, capacity=capacity), _chain_init(graph),
-        S._build_mgpmh_sweep(graph, lam, capacity, schedule.sweep_len,
-                             impl=backend))
+        build(False), stats_fn=build(True))
 
 
 @register("doublemin", backends=("jnp", "dist"))
@@ -345,12 +449,13 @@ def _doublemin_builder(graph, *, schedule, backend, mesh, lam1=None,
     capacity2 = recommended_capacity(lam2) if capacity2 is None else capacity2
     cache_init = lambda k, st: S.init_double_min_cache(k, graph, st, lam2,
                                                        capacity2)
+    build = lambda cs: S._build_double_min_sweep(
+        graph, lam1, capacity1, lam2, capacity2, schedule.sweep_len,
+        collect_stats=cs)
     return _engine(
         "doublemin", backend, schedule, schedule.sweep_len, graph,
         dict(lam1=lam1, capacity1=capacity1, lam2=lam2, capacity2=capacity2),
-        _chain_init(graph, cache_init),
-        S._build_double_min_sweep(graph, lam1, capacity1, lam2, capacity2,
-                                  schedule.sweep_len))
+        _chain_init(graph, cache_init), build(False), stats_fn=build(True))
 
 
 def _require_uniform(name, schedule):
@@ -448,7 +553,7 @@ def _dist_engine(name: str, graph: MatchGraph, schedule: Schedule, mesh,
             count=jnp.int32(0))
 
     return _engine(name, "dist", schedule, sweep_len, graph, resolved,
-                   init_fn, sweep_fn)
+                   init_fn, sweep_fn, exact_accept=(name == "gibbs"))
 
 
 # ---------------------------------------------------------------------------
@@ -463,6 +568,12 @@ WORKLOADS: Dict[str, Dict[str, Any]] = {
     # sparse nearest-neighbor lattice: the first-class chromatic workload
     # (2-colorable; Workload.colors feeds ChromaticBlocks)
     "lattice-ising-64x64": dict(kind="lattice", grid=64, beta=0.4, D=2),
+    # heterogeneous pair-Ising: uniform exact marginals, strongly bimodal
+    # site mixing times — the AdaptiveScan diagnostics workloads
+    "hetero-pairs-24":   dict(kind="pairs", n_strong=2, n_weak=10,
+                              w_strong=3.5, w_weak=0.25),
+    "hetero-pairs-1024": dict(kind="pairs", n_strong=64, n_weak=448,
+                              w_strong=3.5, w_weak=0.25),
 }
 
 
@@ -492,4 +603,9 @@ def make_workload(name: str) -> Workload:
     if c["kind"] == "lattice":
         return Workload(name, make_lattice_ising(c["grid"], c["beta"]),
                         colors=lattice_colors(c["grid"]))
+    if c["kind"] == "pairs":
+        n_pairs = c["n_strong"] + c["n_weak"]
+        return Workload(name, make_pair_ising(c["n_strong"], c["n_weak"],
+                                              c["w_strong"], c["w_weak"]),
+                        colors=pair_colors(n_pairs))
     raise ValueError(f"unknown workload kind {c['kind']!r}")

@@ -42,6 +42,8 @@ __all__ = [
     "make_potts_graph",
     "make_lattice_ising",
     "lattice_colors",
+    "make_pair_ising",
+    "pair_colors",
 ]
 
 
@@ -268,6 +270,31 @@ def lattice_colors(grid: int) -> np.ndarray:
     """Checkerboard 2-coloring of the ``grid x grid`` lattice."""
     r, c = np.divmod(np.arange(grid * grid), grid)
     return ((r + c) % 2).astype(np.int32)
+
+
+def make_pair_ising(n_strong: int, n_weak: int, w_strong: float = 3.5,
+                    w_weak: float = 0.25) -> MatchGraph:
+    """Heterogeneous pair-Ising: ``n_strong + n_weak`` independent 2-site
+    Ising pairs (sites 2p, 2p+1 coupled with match weight ``w_strong`` for
+    the first ``n_strong`` pairs, ``w_weak`` after).
+
+    The diagnostics workload: every marginal is exactly uniform (value
+    relabeling is an energy-preserving bijection), but strongly coupled
+    pairs flip orders of magnitude more slowly than weak ones — a uniform
+    random scan wastes most of its updates on already-decorrelated sites,
+    which is precisely the asymmetry ``AdaptiveScan`` exploits.  Pairs are
+    2-colorable (``pair_colors``)."""
+    n = 2 * (n_strong + n_weak)
+    W = np.zeros((n, n))
+    for p in range(n_strong + n_weak):
+        w = w_strong if p < n_strong else w_weak
+        W[2 * p, 2 * p + 1] = W[2 * p + 1, 2 * p] = w
+    return MatchGraph.from_interactions(W, match_weight_scale=1.0, D=2)
+
+
+def pair_colors(n_pairs: int) -> np.ndarray:
+    """Proper 2-coloring of ``make_pair_ising`` (even/odd site of a pair)."""
+    return (np.arange(2 * n_pairs) % 2).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------

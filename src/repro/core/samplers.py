@@ -46,6 +46,9 @@ from .factor_graph import MatchGraph, alias_draw
 from .estimators import (draw_global_minibatch, draw_local_minibatch,
                          min_gibbs_estimate)
 from ..kernels import ops as kernel_ops
+# telemetry.py is pure jnp (no repro.core imports); the diagnostics package
+# __init__ loads only it eagerly, so this import cannot cycle back here
+from ..diagnostics.telemetry import SweepStats
 
 __all__ = [
     "ChainState",
@@ -298,34 +301,58 @@ def _check_impl(impl: str):
                          f"the 'auto' policy), got {impl!r}")
 
 
+def _site_hits(i: jax.Array, n: int) -> jax.Array:
+    """(C, S) site-index draws -> (n,) float32 visit counts (all chains)."""
+    return jnp.zeros((n,), jnp.float32).at[i.reshape(-1)].add(1.0)
+
+
+# Sweep builders below take two optional extensions to the plain
+# ``sweep(state) -> state`` contract:
+#   * ``collect_stats=True`` (build time): the sweep additionally returns a
+#     :class:`SweepStats` with per-site proposal/acceptance counters — the
+#     instrumented variant Engine.sweep uses when threading telemetry;
+#   * ``sites=`` (call time, gibbs/mgpmh only): a (C, sweep_len) site-index
+#     array overriding the builder's i.i.d.-uniform draw — the hook the
+#     AdaptiveScan schedule drives with its non-uniform table.  The
+#     default-path PRNG streams are unchanged either way.
+
+
 def _build_gibbs_sweep(graph: MatchGraph, sweep_len: int, *,
-                       impl: str):
+                       impl: str, collect_stats: bool = False):
     """``sweep_len`` sequential vanilla-Gibbs updates per call, one fused
     kernel launch (or jnp oracle) for the whole batch of chains.
 
-    Returns a *batched* ``sweep(state) -> state`` over a vmapped-layout
-    ChainState (x of shape (C, n)); see the module docstring.
+    Returns a *batched* ``sweep(state, sites=None) -> state`` over a
+    vmapped-layout ChainState (x of shape (C, n)); see the module docstring.
     impl: 'pallas' | 'jnp' — resolved by the caller (engine.make owns the
     'auto' policy).
     """
     _check_impl(impl)
     n, D = graph.n, graph.D
 
-    def sweep(state: ChainState) -> ChainState:
+    def sweep(state: ChainState, sites=None):
         ki, kg, knew = _batch_keys(state.key, 3)
-        i = jax.vmap(lambda k: jax.random.randint(
-            k, (sweep_len,), 0, n))(ki)                        # (C, S)
+        if sites is None:
+            i = jax.vmap(lambda k: jax.random.randint(
+                k, (sweep_len,), 0, n))(ki)                    # (C, S)
+        else:
+            i = sites
         gumbel = jax.vmap(lambda k: jax.random.gumbel(
             k, (sweep_len, D)))(kg)                            # (C, S, D)
         x = kernel_ops.gibbs_sweep(state.x, graph.W, i, gumbel, D=D,
                                    impl=impl)
-        return state._replace(x=x, key=knew)
+        new = state._replace(x=x, key=knew)
+        if not collect_stats:
+            return new
+        hits = _site_hits(i, n)       # exact accept: every update counts
+        return new, SweepStats(site_prop=hits, site_acc=hits)
 
     return sweep
 
 
 def _build_mgpmh_sweep(graph: MatchGraph, lam: float, capacity: int,
-                       sweep_len: int, *, impl: str):
+                       sweep_len: int, *, impl: str,
+                       collect_stats: bool = False):
     """``sweep_len`` sequential MGPMH updates (Algorithm 4 per sub-step)
     per call, one fused launch for the whole batch of chains.
 
@@ -347,14 +374,18 @@ def _build_mgpmh_sweep(graph: MatchGraph, lam: float, capacity: int,
     """
     _check_impl(impl)
     if impl == "jnp":
-        return _make_mgpmh_sweep_jnp(graph, lam, capacity, sweep_len)
+        return _make_mgpmh_sweep_jnp(graph, lam, capacity, sweep_len,
+                                     collect_stats=collect_stats)
     n, D = graph.n, graph.D
     scale = float(graph.L / lam)
 
-    def sweep(state: ChainState) -> ChainState:
+    def sweep(state: ChainState, sites=None):
         ki, kb, k1, k2, kg, ka, knew = _batch_keys(state.key, 7)
-        i = jax.vmap(lambda k: jax.random.randint(
-            k, (sweep_len,), 0, n))(ki)                        # (C, S)
+        if sites is None:
+            i = jax.vmap(lambda k: jax.random.randint(
+                k, (sweep_len,), 0, n))(ki)                    # (C, S)
+        else:
+            i = sites
         lam_i = lam * graph.row_sum[i] / graph.L               # (C, S)
         B = jax.vmap(lambda k, l: jax.random.poisson(
             k, l, dtype=jnp.int32))(kb, lam_i)
@@ -370,13 +401,20 @@ def _build_mgpmh_sweep(graph: MatchGraph, lam: float, capacity: int,
         x, acc = kernel_ops.mgpmh_sweep(
             state.x, graph.W, graph.row_prob, graph.row_alias, i, B,
             u_idx, u_alias, gumbel, logu, D=D, scale=scale, impl=impl)
-        return state._replace(x=x, key=knew, accepts=state.accepts + acc)
+        new = state._replace(x=x, key=knew, accepts=state.accepts + acc)
+        if not collect_stats:
+            return new
+        # acceptance stays inside the kernel: per-site acceptances are
+        # reported as accepted *moves* (value changes) — a lower bound the
+        # jnp schedule sharpens to exact counts
+        moves = jnp.sum(state.x != x, axis=0, dtype=jnp.float32)
+        return new, SweepStats(site_prop=_site_hits(i, n), site_acc=moves)
 
     return sweep
 
 
 def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
-                          sweep_len: int):
+                          sweep_len: int, *, collect_stats: bool = False):
     """CPU/GPU-tuned fused jnp schedule of the MGPMH sweep chain.
 
     Same chain as the Pallas kernel, reorganized for a cache-hierarchy
@@ -396,12 +434,13 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
     packed = jnp.stack([graph.row_prob,
                         graph.row_alias.astype(jnp.float32)], axis=-1)
 
-    def sweep(state: ChainState) -> ChainState:
+    def sweep(state: ChainState, sites=None):
         C = state.x.shape[0]
         rows = jnp.arange(C)
         knew, master = _master_key(state.key)
         ki, kb, k1, kg, ka = jax.random.split(master, 5)
-        i = jax.random.randint(ki, (C, S), 0, n)
+        i = (jax.random.randint(ki, (C, S), 0, n) if sites is None
+             else sites)
         lam_i = lam * graph.row_sum[i] / graph.L
         B = jnp.minimum(jax.random.poisson(kb, lam_i, dtype=jnp.int32), K)
         un = jax.random.uniform(k1, (C, S, K)) * n
@@ -417,7 +456,7 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
         xp = jnp.pad(state.x, ((0, 0), (0, 1)), constant_values=D)
 
         def substep(carry, s):
-            xp, acc = carry
+            xp, acc, sa = carry
             i_s = i[:, s]
             vals = jnp.take_along_axis(xp, j[:, s, :], axis=1)  # (C, K)
             eps = scale * _bucket_counts(vals, D)               # (C, D)
@@ -434,12 +473,18 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
             accept = logu[:, s] < log_a
             new_v = jnp.where(accept, v, xi)
             xp = xp.at[rows, i_s].set(new_v)
-            return (xp, acc + accept.astype(jnp.int32)), None
+            if collect_stats:
+                sa = sa.at[i_s].add(accept.astype(jnp.float32))
+            return (xp, acc + accept.astype(jnp.int32), sa), None
 
-        (xp, acc), _ = jax.lax.scan(
-            substep, (xp, jnp.zeros((C,), jnp.int32)), jnp.arange(S))
-        return state._replace(x=xp[:, :n], key=knew,
-                              accepts=state.accepts + acc)
+        sa0 = jnp.zeros((n if collect_stats else 0,), jnp.float32)
+        (xp, acc, sa), _ = jax.lax.scan(
+            substep, (xp, jnp.zeros((C,), jnp.int32), sa0), jnp.arange(S))
+        new = state._replace(x=xp[:, :n], key=knew,
+                             accepts=state.accepts + acc)
+        if not collect_stats:
+            return new
+        return new, SweepStats(site_prop=_site_hits(i, n), site_acc=sa)
 
     return sweep
 
@@ -452,7 +497,7 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
 # ---------------------------------------------------------------------------
 
 def _build_min_gibbs_sweep(graph: MatchGraph, lam: float, capacity: int,
-                           sweep_len: int):
+                           sweep_len: int, *, collect_stats: bool = False):
     """``sweep_len`` sequential MIN-Gibbs updates per call (jnp schedule).
 
     All randomness — sites, per-candidate Poisson totals, factor ids from
@@ -466,12 +511,13 @@ def _build_min_gibbs_sweep(graph: MatchGraph, lam: float, capacity: int,
     F = int(graph.pair_a.shape[0])
     lscale = float(np.log1p(graph.psi / lam))
 
-    def sweep(state: ChainState) -> ChainState:
+    def sweep(state: ChainState, sites=None):
         C = state.x.shape[0]
         rows = jnp.arange(C)
         knew, master = _master_key(state.key)
         ki, kb, kf, kg = jax.random.split(master, 4)
-        i = jax.random.randint(ki, (C, S), 0, n)
+        i = (jax.random.randint(ki, (C, S), 0, n) if sites is None
+             else sites)
         # D independent global minibatches per sub-step, one per candidate.
         B = jnp.minimum(jax.random.poisson(kb, lam, (C, S, D),
                                            dtype=jnp.int32), K)
@@ -501,7 +547,11 @@ def _build_min_gibbs_sweep(graph: MatchGraph, lam: float, capacity: int,
 
         (x, cache), _ = jax.lax.scan(substep, (state.x, state.cache),
                                      jnp.arange(S))
-        return state._replace(x=x, cache=cache, key=knew)
+        new = state._replace(x=x, cache=cache, key=knew)
+        if not collect_stats:
+            return new
+        hits = _site_hits(i, n)       # Gibbs-type: every update accepted
+        return new, SweepStats(site_prop=hits, site_acc=hits)
 
     return sweep
 
@@ -513,7 +563,8 @@ def _build_min_gibbs_sweep(graph: MatchGraph, lam: float, capacity: int,
 # ---------------------------------------------------------------------------
 
 def _build_double_min_sweep(graph: MatchGraph, lam1: float, capacity1: int,
-                            lam2: float, capacity2: int, sweep_len: int):
+                            lam2: float, capacity2: int, sweep_len: int, *,
+                            collect_stats: bool = False):
     """``sweep_len`` sequential DoubleMIN updates per call (jnp schedule):
     MGPMH proposal (packed alias gathers, bucket-count energies) + a second
     global bias-adjusted minibatch in the acceptance test.  Distributionally
@@ -528,12 +579,13 @@ def _build_double_min_sweep(graph: MatchGraph, lam1: float, capacity1: int,
     packed = jnp.stack([graph.row_prob,
                         graph.row_alias.astype(jnp.float32)], axis=-1)
 
-    def sweep(state: ChainState) -> ChainState:
+    def sweep(state: ChainState, sites=None):
         C = state.x.shape[0]
         rows = jnp.arange(C)
         knew, master = _master_key(state.key)
         ki, kb1, k1, kg, kb2, kf, ka = jax.random.split(master, 7)
-        i = jax.random.randint(ki, (C, S), 0, n)
+        i = (jax.random.randint(ki, (C, S), 0, n) if sites is None
+             else sites)
         # proposal minibatch over A[i] (as in the MGPMH jnp schedule)
         lam_i = lam1 * graph.row_sum[i] / graph.L
         B1 = jnp.minimum(jax.random.poisson(kb1, lam_i, dtype=jnp.int32), K1)
@@ -555,7 +607,7 @@ def _build_double_min_sweep(graph: MatchGraph, lam1: float, capacity1: int,
         xp0 = jnp.pad(state.x, ((0, 0), (0, 1)), constant_values=D)
 
         def substep(carry, s):
-            xp, cache, acc = carry
+            xp, cache, acc, sa = carry
             i_s = i[:, s]
             vals = jnp.take_along_axis(xp, j[:, s, :], axis=1)   # (C, K1)
             eps = scale1 * _bucket_counts(vals, D)               # (C, D)
@@ -574,13 +626,19 @@ def _build_double_min_sweep(graph: MatchGraph, lam1: float, capacity1: int,
             accept = logu[:, s] < log_a
             xp = xp.at[rows, i_s].set(jnp.where(accept, v, xi))
             cache = jnp.where(accept, xi_y, cache)
-            return (xp, cache, acc + accept.astype(jnp.int32)), None
+            if collect_stats:
+                sa = sa.at[i_s].add(accept.astype(jnp.float32))
+            return (xp, cache, acc + accept.astype(jnp.int32), sa), None
 
-        (xp, cache, acc), _ = jax.lax.scan(
-            substep, (xp0, state.cache, jnp.zeros((C,), jnp.int32)),
+        sa0 = jnp.zeros((n if collect_stats else 0,), jnp.float32)
+        (xp, cache, acc, sa), _ = jax.lax.scan(
+            substep, (xp0, state.cache, jnp.zeros((C,), jnp.int32), sa0),
             jnp.arange(S))
-        return state._replace(x=xp[:, :n], cache=cache, key=knew,
-                              accepts=state.accepts + acc)
+        new = state._replace(x=xp[:, :n], cache=cache, key=knew,
+                             accepts=state.accepts + acc)
+        if not collect_stats:
+            return new
+        return new, SweepStats(site_prop=_site_hits(i, n), site_acc=sa)
 
     return sweep
 
@@ -590,7 +648,7 @@ def _build_double_min_sweep(graph: MatchGraph, lam1: float, capacity1: int,
 # ---------------------------------------------------------------------------
 
 def _build_chromatic_gibbs_sweep(graph: MatchGraph, colors, *,
-                                 impl: str):
+                                 impl: str, collect_stats: bool = False):
     """One full chromatic Gibbs sweep per call: every color class updated as
     a block through the fused sweep kernel (``kernel_ops.gibbs_sweep``).
 
@@ -620,7 +678,7 @@ def _build_chromatic_gibbs_sweep(graph: MatchGraph, colors, *,
                 f"colors is not a proper coloring: class {c} shares factors")
     classes = [jnp.asarray(s, jnp.int32) for s in classes]
 
-    def sweep(state: ChainState) -> ChainState:
+    def sweep(state: ChainState):
         C = state.x.shape[0]
         knew, master = _master_key(state.key)
         keys = jax.random.split(master, n_colors)
@@ -631,7 +689,13 @@ def _build_chromatic_gibbs_sweep(graph: MatchGraph, colors, *,
             i_sites = jnp.broadcast_to(sites[None, :], (C, sites.shape[0]))
             x = kernel_ops.gibbs_sweep(x, graph.W, i_sites, gumbel, D=D,
                                        impl=impl)
-        return state._replace(x=x, key=knew)
+        new = state._replace(x=x, key=knew)
+        if not collect_stats:
+            return new
+        # one full sweep: every site updated exactly once per chain, all
+        # updates exact block Gibbs (acceptance == 1)
+        hits = jnp.full((n,), jnp.float32(1.0)) * C
+        return new, SweepStats(site_prop=hits, site_acc=hits)
 
     return sweep
 

@@ -1,0 +1,45 @@
+"""Convergence telemetry + adaptive-scan control.
+
+Three layers:
+  * :mod:`.telemetry` — the jit-compatible streaming ``Telemetry`` carry
+    ``Engine.sweep`` threads (Welford moments, split-R-hat / ESS inputs,
+    per-site acceptance counters) and its host-side summaries;
+  * :mod:`.adaptive` — the ``AdaptiveScan`` engine machinery (telemetry ->
+    non-uniform site-selection tables, refreshed in-graph) and the lambda
+    auto-tuner;
+  * :mod:`.exact` — exact references on enumerable graphs (TV distance to
+    exact marginals, spectral gaps via ``core/spectral.py``).
+
+Only :mod:`.telemetry` (pure jnp, no ``repro.core`` imports) loads eagerly;
+``adaptive`` / ``exact`` resolve lazily so ``repro.core`` modules can import
+the telemetry types without an import cycle.
+"""
+from .telemetry import (Telemetry, SweepStats, telemetry_init,
+                        telemetry_update, split_rhat, ess_per_site,
+                        acceptance_rate, summarize)
+
+__all__ = [
+    "Telemetry", "SweepStats", "telemetry_init", "telemetry_update",
+    "split_rhat", "ess_per_site", "acceptance_rate", "summarize",
+    # lazy (see __getattr__): adaptive control + exact references
+    "AdaptiveScan", "AdaptiveState", "make_adaptive_engine",
+    "run_with_telemetry", "autotune_lambda",
+    "exact_marginals", "tv_to_exact", "exact_gibbs_gap",
+    "empirical_spectral_gap",
+]
+
+_LAZY = {
+    "AdaptiveScan": "adaptive", "AdaptiveState": "adaptive",
+    "make_adaptive_engine": "adaptive", "run_with_telemetry": "adaptive",
+    "autotune_lambda": "adaptive",
+    "exact_marginals": "exact", "tv_to_exact": "exact",
+    "exact_gibbs_gap": "exact", "empirical_spectral_gap": "exact",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,210 @@
+"""Adaptive-scan control: telemetry-driven non-uniform site selection and
+the minibatch-size (lambda) auto-tuner.
+
+Smolyakov et al.'s adaptive-scan Gibbs observation (PAPERS.md) is that a
+random-scan sampler wastes updates on sites that are already effectively
+independent between snapshots; selection probabilities driven by online
+statistics equalize *information* per update instead.  This module turns
+the streaming :class:`~repro.diagnostics.telemetry.Telemetry` the Engine
+already collects into exactly that control loop:
+
+  * :class:`AdaptiveState` wraps the sampler's ChainState with the
+    telemetry carry, a cumulative site-selection table, and a call counter;
+  * :func:`make_adaptive_engine` builds an :class:`~repro.core.engine.
+    Engine` whose sweep draws its sites from the carried table (inverse-CDF
+    via ``searchsorted`` — unlike a Vose alias table the cumulative table
+    is (re)constructible *in-graph*, so the refresh every ``refresh_every``
+    sweeps is a ``lax.cond`` on device, never a host sync, and the whole
+    loop still fuses under ``lax.scan``);
+  * :func:`autotune_lambda` is the complementary control knob from Zhang &
+    De Sa's Poisson-minibatching: pilot-run the engine with telemetry and
+    geometrically adjust the minibatch rate lambda until the measured MH
+    acceptance lands in a target band (lambda is compiled into the fused
+    sweep, so tuning rebuilds the engine between pilot runs — a handful of
+    small compiles, done once before the long run).
+
+Weighting rule: per-site flip rate r_i = flips_i / hits_i estimates the
+per-update move probability; w_i = 1 / (r_i + smoothing) is the estimated
+number of updates per independent move, and the selection probability is
+``uniform_mix / n + (1 - uniform_mix) * w_i / sum(w)``.  Between refreshes
+the site distribution is fixed, so each segment is an ordinary (valid)
+random-scan chain; the uniform floor keeps every site visited and the
+snapshot-based marginal estimator consistent.
+"""
+from __future__ import annotations
+
+import functools
+import math
+import warnings
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.engine import Engine, AdaptiveScan
+from ..core import samplers as S
+from .telemetry import (Telemetry, telemetry_init, telemetry_update,
+                        acceptance_rate)
+
+__all__ = ["AdaptiveScan", "AdaptiveState", "make_adaptive_engine",
+           "run_with_telemetry", "autotune_lambda"]
+
+
+class AdaptiveState(NamedTuple):
+    """Sampler state + control state of an adaptive-scan engine.
+
+    ``inner`` is the wrapped engine state (ChainState layout); ``cdf`` the
+    cumulative site-selection table the next sweeps draw from; ``tel`` the
+    streaming telemetry feeding the next refresh; ``calls`` the sweep-call
+    counter.  ``x`` / ``accepts`` forward to ``inner`` so every consumer of
+    the batched-state contract (the marginal runner, Engine.sweep's generic
+    telemetry path) works unchanged.
+    """
+    inner: Any
+    cdf: jax.Array       # (n,) float32 cumulative selection probabilities
+    tel: Telemetry
+    calls: jax.Array     # () int32
+
+    @property
+    def x(self):
+        return self.inner.x
+
+    @property
+    def accepts(self):
+        return self.inner.accepts
+
+
+def _refresh_cdf(tel: Telemetry, n: int, uniform_mix: float,
+                 smoothing: float) -> jax.Array:
+    """New cumulative table from the streaming per-site statistics."""
+    rate = tel.site_flips / jnp.maximum(tel.site_prop, 1.0)
+    w = 1.0 / (rate + smoothing)
+    p = uniform_mix / n + (1.0 - uniform_mix) * w / jnp.sum(w)
+    return jnp.cumsum(p)
+
+
+def make_adaptive_engine(name: str, graph, schedule: AdaptiveScan,
+                         backend: str, *, core, chain_init,
+                         params: Dict[str, Any],
+                         exact_accept: bool = False) -> Engine:
+    """Assemble the AdaptiveScan :class:`Engine` for a gibbs-family sampler.
+
+    ``core`` is the instrumented fused sweep ``(state, sites) -> (state,
+    SweepStats)`` from the samplers layer (``collect_stats=True``); the
+    adaptive wrapper draws the sites, threads telemetry, and refreshes the
+    table in-graph.  Called by ``engine.make`` — not user-facing.
+    """
+    n = graph.n
+    sweep_len, K = schedule.sweep_len, schedule.refresh_every
+    mix, r0 = schedule.uniform_mix, schedule.smoothing
+
+    def init_fn(key: jax.Array, n_chains: int, **kwargs) -> AdaptiveState:
+        st = chain_init(key, n_chains, **kwargs)
+        return AdaptiveState(
+            inner=st, cdf=jnp.cumsum(jnp.full((n,), 1.0 / n, jnp.float32)),
+            tel=telemetry_init(st.x), calls=jnp.int32(0))
+
+    def sweep_fn(ast: AdaptiveState) -> AdaptiveState:
+        st = ast.inner
+        C = st.x.shape[0]
+        # advance the chain keys once for the site draw; the core sweep
+        # advances them again for its own streams (independent splits)
+        knew, master = S._master_key(st.key)
+        u = jax.random.uniform(jax.random.fold_in(master, 0x5c4e),
+                               (C, sweep_len))
+        i = jnp.minimum(jnp.searchsorted(ast.cdf, u, side="right"),
+                        n - 1).astype(jnp.int32)
+        new, stats = core(st._replace(key=knew), sites=i)
+        delta = new.accepts - st.accepts
+        tel = telemetry_update(ast.tel, st.x, new.x, sweep_len, delta, stats)
+        calls = ast.calls + 1
+        cdf = jax.lax.cond(calls % K == 0,
+                           lambda t: _refresh_cdf(t, n, mix, r0),
+                           lambda t: ast.cdf, tel)
+        return AdaptiveState(inner=new, cdf=cdf, tel=tel, calls=calls)
+
+    return Engine(
+        name=name, backend=backend, schedule=schedule,
+        updates_per_call=sweep_len, marginal_samples_per_call=1,
+        graph=graph, params=params, init_fn=init_fn, sweep_fn=sweep_fn,
+        sweep_stats_fn=None, exact_accept=exact_accept)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry-driven pilot runs + the lambda auto-tuner
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("engine", "n_calls"))
+def _scan_with_telemetry(engine: Engine, state, tel, n_calls: int):
+    def body(carry, _):
+        st, t = carry
+        st, t = engine.sweep(st, t)
+        return (st, t), None
+    (state, tel), _ = jax.lax.scan(body, (state, tel), None, length=n_calls)
+    return state, tel
+
+
+def run_with_telemetry(engine: Engine, state, telemetry, n_calls: int):
+    """``n_calls`` jitted sweep calls threading the telemetry carry.
+    Returns ``(state, telemetry)``.  (One fused scan; engine is static.)"""
+    return _scan_with_telemetry(engine, state, telemetry, n_calls)
+
+
+def autotune_lambda(name: str, graph, *, target: Tuple[float, float] = (0.5, 0.9),
+                    sweep: int = 16, n_chains: int = 16,
+                    pilot_calls: int = 32, max_rounds: int = 10,
+                    lam0: Optional[float] = None, backend: str = "jnp",
+                    seed: int = 0, **params) -> Tuple[Engine, List[dict]]:
+    """Auto-tune the minibatch rate lambda of an MH minibatch engine
+    (mgpmh / doublemin) until pilot-run mean acceptance lands in ``target``.
+
+    Larger lambda means bigger minibatches, tighter energy estimates and
+    higher acceptance (Thm 4: rate >= exp(-L^2/lambda) for MGPMH) at more
+    FLOPs per update; the tuner searches lambda geometrically (doubling /
+    halving, bisecting in log space once both sides of the band have been
+    seen).  Each round rebuilds the engine (lambda is fused into the sweep)
+    and runs ``pilot_calls`` telemetry'd sweeps over ``n_chains`` chains.
+
+    Returns ``(engine, history)``: the tuned Engine plus one
+    ``{"lam": ..., "acceptance": ...}`` record per round.  Raises for
+    engines with no MH acceptance to tune.
+    """
+    from ..core import engine as engine_lib
+    lo, hi = target
+    if not (0.0 < lo < hi <= 1.0):
+        raise ValueError(f"target must satisfy 0 < lo < hi <= 1, got {target}")
+    lam_key = "lam1" if name == "doublemin" else "lam"
+    lam = lam0
+    lam_lo = lam_hi = None          # bracket: too-low / too-high lambdas
+    history: List[dict] = []
+    eng = None
+    for _ in range(max_rounds):
+        kw = dict(params)
+        if lam is not None:
+            kw[lam_key] = lam
+        eng = engine_lib.make(name, graph, sweep=sweep, backend=backend,
+                              **kw)
+        if eng.exact_accept:
+            raise ValueError(f"engine {name!r} accepts every update by "
+                             f"construction; there is no acceptance to tune")
+        lam = float(eng.params[lam_key])
+        st = eng.init(jax.random.PRNGKey(seed), n_chains)
+        tel = eng.init_telemetry(st)
+        st, tel = run_with_telemetry(eng, st, tel, pilot_calls)
+        acc = acceptance_rate(tel)
+        history.append({"lam": lam, "acceptance": acc})
+        if lo <= acc <= hi:
+            break
+        if acc < lo:
+            lam_lo = lam
+            lam = lam * 2.0 if lam_hi is None else math.sqrt(lam * lam_hi)
+        else:
+            lam_hi = lam
+            lam = lam / 2.0 if lam_lo is None else math.sqrt(lam * lam_lo)
+    else:
+        warnings.warn(
+            f"autotune_lambda: acceptance {history[-1]['acceptance']:.3f} "
+            f"(lam={history[-1]['lam']:.3g}) never landed in {target} "
+            f"within {max_rounds} rounds; returning the last pilot engine",
+            RuntimeWarning, stacklevel=2)
+    return eng, history

@@ -1,0 +1,94 @@
+"""Exact references for convergence diagnostics on small graphs.
+
+Where the state space is enumerable this module grounds the streaming
+telemetry in exact quantities: total-variation distance of estimated
+marginals to the *true* per-site marginals (not the uniform proxy the
+paper's figures use), and the sampler's spectral gap — exact via the
+transition-matrix validators of ``core/spectral.py``, or estimated from
+telemetry autocorrelations on graphs too large to enumerate.
+
+Everything here is host-side numpy (exactness over speed); use it to
+validate a sampler configuration at small scale before launching the large
+run whose only feedback is the streaming telemetry itself.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..core.factor_graph import MatchGraph, TabularPairwiseGraph
+from ..core import spectral
+from .telemetry import Telemetry, _lag1_stats
+
+__all__ = ["exact_marginals", "tv_to_exact", "exact_gibbs_gap",
+           "empirical_spectral_gap"]
+
+
+def exact_marginals(graph: MatchGraph, max_states: int = 1 << 22
+                    ) -> np.ndarray:
+    """Per-site marginals of the exact stationary distribution ((n, D)).
+
+    Enumerates the D^n state space through
+    :class:`~repro.core.factor_graph.TabularPairwiseGraph`; refuses graphs
+    beyond ``max_states`` states.
+    """
+    n_states = float(graph.D) ** graph.n
+    if n_states > max_states:
+        raise ValueError(
+            f"state space D^n = {graph.D}^{graph.n} exceeds {max_states}; "
+            f"exact marginals need an enumerable graph")
+    tg = TabularPairwiseGraph.from_match_graph(graph)
+    states = tg.all_states()
+    pi = tg.pi()
+    marg = np.zeros((graph.n, graph.D))
+    for i in range(graph.n):
+        marg[i] = np.bincount(states[:, i], weights=pi, minlength=graph.D)
+    return marg
+
+
+def tv_to_exact(marginals: np.ndarray, exact: np.ndarray) -> np.ndarray:
+    """Per-site total-variation distance ``0.5 * sum_d |p - p*|``.
+
+    ``marginals``: (..., n, D) estimated marginals (normalized; e.g.
+    ``trace.marg / trace.iters[-1] * updates_per_call`` — or the per-call
+    count the runner used); returns (..., n).
+    """
+    marginals = np.asarray(marginals, np.float64)
+    exact = np.asarray(exact, np.float64)
+    return 0.5 * np.abs(marginals - exact).sum(axis=-1)
+
+
+def exact_gibbs_gap(graph: MatchGraph) -> float:
+    """Exact spectral gap of single-site random-scan Gibbs on ``graph``
+    (reuses the transition-matrix validator in ``core/spectral.py``)."""
+    tg = TabularPairwiseGraph.from_match_graph(graph)
+    T, pi, _ = spectral.gibbs_transition_matrix(tg)
+    return spectral.spectral_gap(T, pi)
+
+
+def empirical_spectral_gap(tel: Telemetry) -> float:
+    """Spectral-gap estimate (per site update) from streaming telemetry.
+
+    The slowest site's lag-1 *snapshot* autocorrelation rho satisfies
+    rho ~ (1 - gamma)^u for a chain with gap gamma and u site updates per
+    snapshot, so gamma ~ 1 - rho^(1/u).  A crude slowest-mode estimate —
+    compare against :func:`exact_gibbs_gap` on enumerable graphs; expect
+    order-of-magnitude agreement, not digits.  Returns NaN with too little
+    data.
+    """
+    stats = _lag1_stats(tel)
+    if stats is None:
+        return float("nan")
+    cnt, cn, var, cov1 = stats
+    if cnt <= 2.0 or cn <= 1.0:
+        return float("nan")
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rho = np.where(var > 0.0, cov1 / np.maximum(var, 1e-300), np.nan)
+    rho = rho[np.isfinite(rho)]
+    if rho.size == 0:
+        return float("nan")
+    rho_max = float(np.clip(rho.max(), 1e-6, 1.0 - 1e-6))
+    # site updates per snapshot, per chain
+    u = float(np.asarray(tel.updates)) / cnt
+    return 1.0 - rho_max ** (1.0 / u)

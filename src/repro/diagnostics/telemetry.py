@@ -1,0 +1,277 @@
+"""Streaming convergence telemetry: a jit-compatible, device-resident carry
+threaded through ``Engine.sweep``.
+
+The repo's benchmarks measure sites/sec; nothing so far measured whether the
+chain those sites belong to is *mixing*.  :class:`Telemetry` closes that gap
+with streaming statistics that cost O(C*n) elementwise work per sweep call
+(amortized over ``updates_per_call`` site updates — <10% of the fused jnp
+path, see ``benchmarks/diagnostics_bench.py``) and never synchronize to the
+host inside the sweep loop:
+
+  * **Welford running moments** of every site value, per chain — one
+    accumulator over the whole run plus one over the second half, so
+    *split*-R-hat can be recovered exactly at summary time (the first-half
+    moments follow from Chan's combine formula run backwards);
+  * **lag-1 cross-products** at snapshot granularity, giving a cheap
+    autocorrelation-based ESS estimate (initial-sequence estimator
+    truncated at lag 1);
+  * **per-site counters**: proposals/updates (``site_prop``), MH acceptances
+    (``site_acc``, exact on the instrumented jnp sweep paths), and
+    value changes (``site_flips``, from state diffs — exact on every
+    backend) — the online statistics the ``AdaptiveScan`` controller feeds
+    on;
+  * **per-chain MH acceptance** totals (from the sampler's own counters).
+
+Everything in this module is pure jnp over plain arrays — no imports from
+``repro.core`` — so the Engine layer can depend on it without cycles.
+Summaries (:func:`split_rhat`, :func:`ess_per_site`, :func:`summarize`) are
+host-side numpy: call them *after* the run, not inside it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Telemetry", "SweepStats", "telemetry_init", "telemetry_update",
+    "split_rhat", "ess_per_site", "acceptance_rate", "summarize",
+]
+
+
+class SweepStats(NamedTuple):
+    """Per-call site counters emitted from *inside* an instrumented sweep.
+
+    ``site_prop[i]``: proposals (site updates attempted) at site i this call;
+    ``site_acc[i]``:  MH acceptances at site i (== site_prop for exact-accept
+    samplers; on the Pallas MGPMH path, which keeps acceptance inside the
+    kernel, this counts accepted *moves* — a documented lower bound).
+    """
+    site_prop: jax.Array   # (n,) float32
+    site_acc: jax.Array    # (n,) float32
+
+
+class Telemetry(NamedTuple):
+    """Device-resident streaming convergence statistics.
+
+    All fields are float32 (exact counting below 2^24).  ``half_at`` marks
+    the snapshot index at which the second-half Welford accumulator starts;
+    ``jnp.inf`` (the standalone default) disables the split and summaries
+    fall back to the plain multi-chain R-hat.
+    """
+    samples: jax.Array     # () snapshots accumulated
+    updates: jax.Array     # () site updates accumulated
+    half_at: jax.Array     # () first snapshot index of the second half
+    mean: jax.Array        # (C, n) Welford mean of the site value (full run)
+    m2: jax.Array          # (C, n) Welford M2 (full run)
+    samples_h: jax.Array   # () snapshots in the second half
+    mean_h: jax.Array      # (C, n) second-half Welford mean
+    m2_h: jax.Array        # (C, n) second-half Welford M2
+    prev: jax.Array        # (C, n) previous snapshot (for lag-1 products)
+    cross: jax.Array       # (C, n) sum of consecutive-snapshot products
+    cross_n: jax.Array     # () pairs accumulated into ``cross``
+    accepts: jax.Array     # (C,) MH acceptances accumulated
+    site_prop: jax.Array   # (n,) per-site proposals (instrumented paths)
+    site_acc: jax.Array    # (n,) per-site MH acceptances (instrumented)
+    site_flips: jax.Array  # (n,) per-site value changes (state diffs)
+
+
+def telemetry_init(x: jax.Array, half_at: Optional[float] = None) -> Telemetry:
+    """Zeroed telemetry for a batched state ``x`` of shape (C, n).
+
+    ``half_at``: snapshot index where the second-half accumulator starts
+    (pass ``total_snapshots // 2`` for a proper split-R-hat; the marginal
+    runner does this).  Default ``None`` disables the split.
+    """
+    C, n = x.shape
+    z = jnp.zeros((C, n), jnp.float32)
+    return Telemetry(
+        samples=jnp.float32(0.0), updates=jnp.float32(0.0),
+        half_at=jnp.float32(jnp.inf if half_at is None else half_at),
+        mean=z, m2=z, samples_h=jnp.float32(0.0), mean_h=z, m2_h=z,
+        prev=z, cross=z, cross_n=jnp.float32(0.0),
+        accepts=jnp.zeros((C,), jnp.float32),
+        site_prop=jnp.zeros((n,), jnp.float32),
+        site_acc=jnp.zeros((n,), jnp.float32),
+        site_flips=jnp.zeros((n,), jnp.float32))
+
+
+def telemetry_update(tel: Telemetry, old_x: jax.Array, new_x: jax.Array,
+                     updates: int, accept_delta: Optional[jax.Array] = None,
+                     stats: Optional[SweepStats] = None) -> Telemetry:
+    """One streaming update from a sweep call that advanced ``old_x`` to
+    ``new_x`` (both (C, n) int) in ``updates`` site updates per chain.
+
+    Pure jnp, O(C*n) elementwise — safe inside ``lax.scan``.  ``accept_delta``
+    is the per-chain MH-acceptance increment ((C,), optional);``stats`` is the
+    instrumented sweep's per-site counters (optional).
+    """
+    xf = new_x.astype(jnp.float32)
+    k = tel.samples + 1.0
+    d = xf - tel.mean
+    mean = tel.mean + d / k
+    m2 = tel.m2 + d * (xf - mean)
+
+    # second-half accumulator (split-R-hat): masked Welford step
+    in2 = (tel.samples >= tel.half_at).astype(jnp.float32)
+    kh = tel.samples_h + in2
+    dh = xf - tel.mean_h
+    mean_h = tel.mean_h + in2 * dh / jnp.maximum(kh, 1.0)
+    m2_h = tel.m2_h + in2 * dh * (xf - mean_h)
+
+    # lag-1 cross-products (valid from the second snapshot on)
+    has_prev = (tel.samples >= 1.0).astype(jnp.float32)
+    cross = tel.cross + has_prev * tel.prev * xf
+    cross_n = tel.cross_n + has_prev
+
+    flips = tel.site_flips + jnp.sum(old_x != new_x, axis=0,
+                                     dtype=jnp.float32)
+    accepts = tel.accepts if accept_delta is None else (
+        tel.accepts + accept_delta.astype(jnp.float32))
+    site_prop, site_acc = tel.site_prop, tel.site_acc
+    if stats is not None:
+        site_prop = site_prop + stats.site_prop
+        site_acc = site_acc + stats.site_acc
+    return Telemetry(
+        samples=k, updates=tel.updates + float(updates), half_at=tel.half_at,
+        mean=mean, m2=m2, samples_h=kh, mean_h=mean_h, m2_h=m2_h,
+        prev=xf, cross=cross, cross_n=cross_n, accepts=accepts,
+        site_prop=site_prop, site_acc=site_acc, site_flips=flips)
+
+
+# ---------------------------------------------------------------------------
+# Host-side summaries (numpy; call after the run)
+# ---------------------------------------------------------------------------
+
+def _halves(tel: Telemetry):
+    """(count, mean, m2) for each half, per (chain, site).
+
+    The second half is accumulated directly; the first half is the full-run
+    accumulator minus the second, via Chan's pairwise-combine formula
+    inverted:  M2_a = M2 - M2_b - (n_a n_b / n) (mean_a - mean_b)^2.
+    Exact (float32 rounding aside) — no sample storage needed.
+    """
+    n = float(np.asarray(tel.samples))
+    n_b = float(np.asarray(tel.samples_h))
+    n_a = n - n_b
+    mean = np.asarray(tel.mean, np.float64)
+    m2 = np.asarray(tel.m2, np.float64)
+    mean_b = np.asarray(tel.mean_h, np.float64)
+    m2_b = np.asarray(tel.m2_h, np.float64)
+    if n_b <= 1.0 or n_a <= 1.0:
+        return None
+    mean_a = (n * mean - n_b * mean_b) / n_a
+    m2_a = m2 - m2_b - (n_a * n_b / n) * (mean_a - mean_b) ** 2
+    m2_a = np.maximum(m2_a, 0.0)
+    return (n_a, mean_a, m2_a), (n_b, mean_b, m2_b)
+
+
+def split_rhat(tel: Telemetry) -> np.ndarray:
+    """Per-site split-R-hat over the 2C half-chains ((n,) float64).
+
+    Falls back to the plain multi-chain R-hat (C whole chains) when the
+    split accumulator holds fewer than two snapshots.  Sites whose
+    within-chain variance is zero everywhere report 1.0 (no evidence of
+    disagreement — typically an unvisited or frozen site; check
+    ``site_prop`` / ``site_flips`` before trusting it).
+    """
+    halves = _halves(tel)
+    if halves is None:
+        cnt = float(np.asarray(tel.samples))
+        if cnt <= 1.0:
+            return np.ones(tel.mean.shape[1])
+        means = np.asarray(tel.mean, np.float64)          # (C, n)
+        variances = np.asarray(tel.m2, np.float64) / (cnt - 1.0)
+    else:
+        (n_a, mean_a, m2_a), (n_b, mean_b, m2_b) = halves
+        cnt = min(n_a, n_b)
+        means = np.concatenate([mean_a, mean_b], axis=0)  # (2C, n)
+        variances = np.concatenate([m2_a / max(n_a - 1.0, 1.0),
+                                    m2_b / max(n_b - 1.0, 1.0)], axis=0)
+    W = variances.mean(axis=0)                            # within-chain
+    B = cnt * means.var(axis=0, ddof=1)                   # between-chain
+    var_plus = (cnt - 1.0) / cnt * W + B / cnt
+    with np.errstate(divide="ignore", invalid="ignore"):
+        r = np.sqrt(var_plus / W)
+    return np.where(W > 0.0, r, 1.0)
+
+
+def _lag1_stats(tel: Telemetry):
+    """(count, pairs, per-(chain,site) variance, lag-1 autocovariance) as
+    float64 numpy, or None with fewer than two snapshots / one lag-1 pair.
+
+    The autocovariance is E[x_t x_{t-1}] - mean^2 with the full-run mean —
+    the slight bias vanishes as the run grows.  Shared by the ESS estimate
+    here and the spectral-gap estimate in ``diagnostics.exact``.
+    """
+    cnt = float(np.asarray(tel.samples))
+    cn = float(np.asarray(tel.cross_n))
+    if cnt <= 1.0 or cn <= 0.0:
+        return None
+    mean = np.asarray(tel.mean, np.float64)
+    var = np.asarray(tel.m2, np.float64) / (cnt - 1.0)
+    cov1 = np.asarray(tel.cross, np.float64) / cn - mean ** 2
+    return cnt, cn, var, cov1
+
+
+def ess_per_site(tel: Telemetry) -> np.ndarray:
+    """Per-site effective sample size summed over chains ((n,) float64).
+
+    Lag-1 initial-sequence estimate: ESS = C * N * (1 - rho1) / (1 + rho1)
+    with rho1 the chain-averaged lag-1 snapshot autocorrelation.  Sites with
+    zero variance (never moved) report 0.
+    """
+    C, n = tel.mean.shape
+    stats = _lag1_stats(tel)
+    if stats is None:
+        return np.zeros(n)
+    cnt, _, var, cov1 = stats
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rho = np.clip(cov1 / var, -0.999, 0.999)
+    rho = np.where(var > 0.0, rho, 1.0)
+    ess = cnt * (1.0 - rho) / (1.0 + rho)                 # per chain, (C, n)
+    return np.where(var > 0.0, ess, 0.0).sum(axis=0)
+
+
+def acceptance_rate(tel: Telemetry, exact_accept: bool = False) -> float:
+    """Mean MH acceptance per site update (1.0 for exact-accept samplers)."""
+    if exact_accept:
+        return 1.0
+    upd = float(np.asarray(tel.updates))
+    if upd <= 0.0:
+        return float("nan")
+    return float(np.asarray(tel.accepts).mean() / upd)
+
+
+def summarize(tel: Telemetry, exact_accept: bool = False,
+              elapsed_sec: Optional[float] = None) -> dict:
+    """Machine-readable summary (the fields benchmark JSON records carry).
+
+    ``elapsed_sec`` (optional wall time) adds ``ess_per_sec``.
+    """
+    r = split_rhat(tel)
+    ess = ess_per_site(tel)
+    prop = np.asarray(tel.site_prop, np.float64)
+    out = {
+        "samples": int(np.asarray(tel.samples)),
+        "updates": int(np.asarray(tel.updates)),
+        "mean_acceptance": acceptance_rate(tel, exact_accept),
+        "max_split_rhat": float(r.max()),
+        "mean_split_rhat": float(r.mean()),
+        "ess_mean_site": float(ess.mean()),
+        "ess_min_site": float(ess.min()),
+        "flip_rate": float(np.asarray(tel.site_flips).sum()
+                           / max(float(np.asarray(tel.updates))
+                                 * tel.mean.shape[0], 1.0)),
+    }
+    if prop.sum() > 0.0:                  # instrumented per-site counters
+        acc = np.asarray(tel.site_acc, np.float64)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            per_site = np.where(prop > 0, acc / np.maximum(prop, 1.0), np.nan)
+        out["site_acceptance_min"] = float(np.nanmin(per_site))
+        out["site_hit_cv"] = float(prop.std() / max(prop.mean(), 1e-12))
+    if elapsed_sec is not None and elapsed_sec > 0.0:
+        out["ess_per_sec"] = float(ess.mean() / elapsed_sec)
+    return out

@@ -1,18 +1,23 @@
-"""Distributed Gibbs-engine launcher: the paper's workload end to end on
-whatever mesh is present (devices × model shards), with checkpointed
-sampler state and marginal-error reporting.
+"""Gibbs-engine launcher: the paper's workload end to end on whatever mesh
+is present (devices x model shards), with checkpointed sampler state,
+marginal-error reporting, and streaming convergence telemetry.
 
   PYTHONPATH=src python -m repro.launch.gibbs --config potts-20x20 \
       --engine mgpmh --steps 20000 --chains 64 [--ckpt-dir /tmp/gc]
+  PYTHONPATH=src python -m repro.launch.gibbs --config hetero-pairs-1024 \
+      --engine gibbs --backend jnp --adaptive --telemetry --sweep 64
 
 Engines and workloads come straight from the registries in
 ``repro.core.engine`` — this launcher holds NO construction logic: it calls
-``engine.make(name, graph, sweep=S, backend="dist", mesh=mesh)`` and drives
-the returned Engine.  ``--sweep S`` (mgpmh) batches S site updates per
-launch — one psum per sweep instead of two per update (see
-runtime/dist_gibbs.py).  Sampler state (chains, caches, rng, running
-marginals) is a pytree checkpointed/restored exactly like model params —
-restart resumes the chain bit-exactly.
+``engine.make(...)`` and drives the returned Engine.  ``--backend dist``
+(the default) shards the graph over the mesh (one psum per sweep, see
+runtime/dist_gibbs.py); ``--backend jnp|pallas|auto`` runs the fused
+single-host schedules, where ``--adaptive`` switches to the telemetry-driven
+``AdaptiveScan`` site-selection schedule (gibbs/mgpmh).  ``--telemetry``
+threads the streaming diagnostics carry through the run and logs mean
+acceptance / max split-R-hat / ESS alongside throughput.  Sampler state
+(chains, caches, rng, running marginals) is a pytree checkpointed/restored
+exactly like model params — restart resumes the chain bit-exactly.
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core import engine as engine_lib
@@ -30,42 +36,85 @@ from .mesh import make_auto_mesh, compat_shard_map
 shard_map = compat_shard_map
 
 
-def run(config: str, engine: str, steps: int, chains: int,
-        ckpt_dir: str = "", log_every: int = 2000, mp_shards: int = 0,
-        seed: int = 0, sweep: int = 0):
+def _build_engine(config: str, engine: str, sweep: int, mp_shards: int,
+                  backend: str, adaptive: bool):
     wl = engine_lib.make_workload(config)
     g = wl.graph
-    n_dev = len(jax.devices())
-    mp = mp_shards or 1
-    dp = n_dev // mp
-    mesh = make_auto_mesh((dp, mp), ("data", "model"))
-    eng = engine_lib.make(engine, g, sweep=max(sweep, 1), backend="dist",
-                          mesh=mesh)
+    if backend == "dist":
+        if adaptive:
+            raise ValueError("--adaptive requires a non-dist backend "
+                             "(the selection table is chain-local)")
+        n_dev = len(jax.devices())
+        mp = mp_shards or 1
+        dp = n_dev // mp
+        mesh = make_auto_mesh((dp, mp), ("data", "model"))
+        return engine_lib.make(engine, g, sweep=max(sweep, 1),
+                               backend="dist", mesh=mesh), g
+    if adaptive:
+        schedule = engine_lib.AdaptiveScan(sweep_len=max(sweep, 1))
+        return engine_lib.make(engine, g, schedule=schedule,
+                               backend=backend), g
+    return engine_lib.make(engine, g, sweep=max(sweep, 1),
+                           backend=backend), g
+
+
+def run(config: str, engine: str, steps: int, chains: int,
+        ckpt_dir: str = "", log_every: int = 2000, mp_shards: int = 0,
+        seed: int = 0, sweep: int = 0, backend: str = "dist",
+        adaptive: bool = False, telemetry: bool = False):
+    from .. import diagnostics as diag
+
+    eng, g = _build_engine(config, engine, sweep, mp_shards, backend,
+                           adaptive)
     upd_per_step = eng.updates_per_call
+    dist = eng.backend == "dist"
 
     st = eng.init(jax.random.PRNGKey(seed), chains)
+    tel = eng.init_telemetry(st) if telemetry else None
+    # non-dist engines carry no running marginals — accumulate here and
+    # checkpoint (st, marg) together so resume keeps the full-run estimate
+    # (dist keeps marg/count inside its own state)
+    marg = None if dist else jnp.zeros((chains, g.n, g.D), jnp.float32)
     start = 0
     if ckpt_dir and (last := ckpt.latest_step(ckpt_dir)) is not None:
-        st = ckpt.restore(ckpt_dir, last, st)
+        if dist:
+            st = ckpt.restore(ckpt_dir, last, st)
+        else:
+            st, marg = ckpt.restore(ckpt_dir, last, (st, marg))
         start = last
         print(f"[gibbs] resumed at step {start}")
 
     t0 = time.time()
     for s in range(start, steps):
-        st = eng.sweep(st)
+        if tel is None:
+            st = eng.sweep(st)
+        else:
+            st, tel = eng.sweep(st, tel)
+        if not dist:
+            marg = marg + jax.nn.one_hot(st.x, g.D, dtype=jnp.float32)
         if (s + 1) % log_every == 0 or s == steps - 1:
-            marg = np.asarray(st.marg).sum(0) / (float(st.count) * chains)
-            err = float(np.sqrt(((marg - 1 / g.D) ** 2).sum(-1)).mean())
+            # samples accumulated since step 0 (marg and accepts are both
+            # cumulative across restarts on every backend)
+            cnt = float(st.count) if dist else float(s + 1)
+            m = np.asarray(st.marg if dist else marg).sum(0) / (cnt * chains)
+            err = float(np.sqrt(((m - 1 / g.D) ** 2).sum(-1)).mean())
             # count counts accumulated samples (sweeps accumulate once
             # per S site updates); acc is per site update either way
-            acc = float(np.asarray(st.accepts).mean()) \
-                / (float(st.count) * upd_per_step)
+            # (identically 1 for Gibbs-type engines, which keep no counter)
+            acc = 1.0 if eng.exact_accept else (
+                float(np.asarray(st.accepts).mean()) / (cnt * upd_per_step))
             rate = ((s + 1 - start) * chains * upd_per_step
                     / (time.time() - t0))
-            print(f"[gibbs] step {s+1:7d} marg_err={err:.4f} "
-                  f"acc={acc:.3f} {rate/1e3:.1f}k updates/s", flush=True)
+            line = (f"[gibbs] step {s+1:7d} marg_err={err:.4f} "
+                    f"acc={acc:.3f} {rate/1e3:.1f}k updates/s")
+            if tel is not None:
+                ts = diag.summarize(tel, eng.exact_accept,
+                                    elapsed_sec=time.time() - t0)
+                line += (f" rhat={ts['max_split_rhat']:.3f} "
+                         f"ess/s={ts.get('ess_per_sec', 0.0):.1f}")
+            print(line, flush=True)
             if ckpt_dir:
-                ckpt.save(ckpt_dir, s + 1, st)
+                ckpt.save(ckpt_dir, s + 1, st if dist else (st, marg))
     return st
 
 
@@ -74,18 +123,39 @@ def main():
     ap.add_argument("--config", default="potts-20x20",
                     choices=list(engine_lib.workload_names()))
     ap.add_argument("--engine", default="mgpmh",
-                    choices=[n for n in engine_lib.names()
-                             if "dist" in engine_lib.backends(n)])
+                    choices=list(engine_lib.names()))
+    ap.add_argument("--backend", default="dist",
+                    choices=["dist", "jnp", "pallas", "auto"])
     ap.add_argument("--steps", type=int, default=20_000)
     ap.add_argument("--chains", type=int, default=64)
     ap.add_argument("--mp-shards", type=int, default=0)
     ap.add_argument("--sweep", type=int, default=0,
-                    help="site updates per launch (mgpmh only): one fused "
-                         "psum per sweep instead of two per update")
+                    help="site updates per launch: fused sweep (one psum "
+                         "per sweep on the dist backend)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="AdaptiveScan schedule (gibbs/mgpmh, non-dist): "
+                         "telemetry-driven non-uniform site selection")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="thread streaming convergence telemetry and log "
+                         "acceptance / split-R-hat / ESS per second")
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
+    # reject impossible combinations with a usage message, not a traceback
+    supported = engine_lib.backends(args.engine)
+    if args.backend != "auto" and args.backend not in supported:
+        ap.error(f"engine {args.engine!r} supports backends {supported}, "
+                 f"not {args.backend!r} (jnp-only engines need "
+                 f"--backend jnp)")
+    if args.adaptive and args.backend == "dist":
+        ap.error("--adaptive requires a non-dist backend "
+                 "(the selection table is chain-local)")
+    if args.adaptive and args.engine not in ("gibbs", "mgpmh"):
+        ap.error(f"--adaptive supports the gibbs/mgpmh engines, "
+                 f"not {args.engine!r}")
     run(args.config, args.engine, args.steps, args.chains,
-        ckpt_dir=args.ckpt_dir, mp_shards=args.mp_shards, sweep=args.sweep)
+        ckpt_dir=args.ckpt_dir, mp_shards=args.mp_shards, sweep=args.sweep,
+        backend=args.backend, adaptive=args.adaptive,
+        telemetry=args.telemetry)
 
 
 if __name__ == "__main__":

@@ -11,15 +11,10 @@ __all__ = ["exact_marginals", "empirical_sweep_marginals"]
 
 def exact_marginals(g):
     """Per-variable marginals of the exact stationary distribution of an
-    enumerable MatchGraph.  Returns (n, D)."""
-    tg = TabularPairwiseGraph.from_match_graph(g)
-    states = tg.all_states()
-    pi = tg.pi()
-    marg = np.zeros((g.n, g.D))
-    for p, s in zip(pi, states):
-        for i, v in enumerate(s):
-            marg[i, v] += p
-    return marg
+    enumerable MatchGraph.  Returns (n, D).  (Delegates to the diagnostics
+    exact-reference module — one implementation, shared with production.)"""
+    from repro.diagnostics.exact import exact_marginals as _em
+    return _em(g)
 
 
 def empirical_sweep_marginals(sweep, g, st, n_calls):
