@@ -54,8 +54,26 @@ def timed_steps(eng, state, n_iters: int, n_chains: int,
 #   1 — bare list of {name, us_per_call, derived, engine identity, metrics}
 #   2 — versioned wrapper; telemetry'd rows add statistical-efficiency
 #       fields (mean_acceptance, ess_per_sec, max_split_rhat, ...)
-SCHEMA_VERSION = 2
+#   3 — sweep rows add ``peak_bytes``: the compiled executable's peak
+#       temp+output allocation from XLA's memory_analysis — the field that
+#       makes draw-stream elimination (chunked jnp streams, in-kernel
+#       PRNG) visible in BENCH records, not just sites/sec
+SCHEMA_VERSION = 3
 RECORDS: list = []
+
+
+def peak_bytes(fn, *args):
+    """Peak device allocation (temp + output bytes) of the compiled
+    ``fn(*args)`` via ``jit(fn).lower(*args).compile().memory_analysis()``.
+    Returns None where the backend doesn't report (memory_analysis is
+    populated on CPU and TPU; some backends return None)."""
+    try:
+        m = jax.jit(fn).lower(*args).compile().memory_analysis()
+        if m is None:
+            return None
+        return int(m.temp_size_in_bytes) + int(m.output_size_in_bytes)
+    except Exception:
+        return None
 
 
 def row(name: str, us: float, derived: str, **extra):

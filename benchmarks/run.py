@@ -7,8 +7,9 @@ engine/backend/schedule/updates_per_call, plus metric fields like
 sites_per_sec and — on telemetry'd rows — mean_acceptance / ess_per_sec /
 max_split_rhat) wrapped as ``{"schema_version": N, "records": [...]}`` so
 the perf trajectory is machine-readable and attributable across PRs.
-``--smoke`` runs only the diagnostics module at CI-smoke scale (CPU
-minutes): the convergence-telemetry record CI uploads as an artifact."""
+``--smoke`` runs the diagnostics module plus the newly-swept kernel rows
+at CI-smoke scale (CPU minutes): the convergence-telemetry + peak-bytes
+record CI uploads as an artifact."""
 import argparse
 import inspect
 import json
@@ -23,7 +24,8 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all rows as JSON records to PATH")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: diagnostics module only, tiny scales")
+                    help="CI smoke: diagnostics + newly-swept kernel rows, "
+                         "tiny scales")
     args = ap.parse_args()
     from . import (table1_cost, fig1_min_gibbs, fig2_variants, kernel_bench,
                    roofline, sweep_bench, diagnostics_bench, common)
@@ -32,7 +34,7 @@ def main() -> None:
             "roofline": roofline, "sweep": sweep_bench,
             "diag": diagnostics_bench}
     if args.smoke:
-        only = ["diag"]
+        only = ["diag", "sweep"]
     else:
         only = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")

@@ -13,12 +13,16 @@ Two single-site baselines bracket the comparison:
     per-update compute + snapshot accumulation.
 
 All rows are registry engines (``engine.make``); records carry the
-engine/backend/schedule identity.  On CPU the sweep path is the fused jnp
-schedule; the Pallas kernel runs interpret-mode on CPU (correctness, not
-speed — a small row tracks it) and is the TPU path.  The newly-swept
-MIN-Gibbs and DoubleMIN engines get their own rows (smaller shapes: their
-upfront draw buffers scale with lam), plus a chromatic-blocks row on the
-sparse lattice Ising.
+engine/backend/schedule identity, and fused-sweep rows carry ``peak_bytes``
+(schema v3: XLA memory_analysis of the compiled sweep, the field that
+makes draw-stream elimination visible).  On CPU the sweep path is the
+fused jnp schedule; the Pallas kernels run interpret-mode on CPU
+(correctness, not speed — small rows track all four) and are the TPU
+path.  MIN-Gibbs and DoubleMIN get jnp rows (chunked per-sub-step draw
+streams, S-independent footprint) and Pallas rows (on TPU also the
+in-kernel-PRNG variant with no draw streams in HBM at all), plus a
+chromatic-blocks row on the sparse lattice Ising.  ``smoke=True`` is the
+CI subset (tiny shapes, peak_bytes populated).
 """
 from __future__ import annotations
 
@@ -30,7 +34,7 @@ import jax.numpy as jnp
 from repro.core import (engine, make_potts_graph, make_lattice_ising,
                         lattice_colors, run_marginal_experiment)
 from repro.launch.mesh import make_auto_mesh
-from .common import row
+from .common import row, peak_bytes
 
 
 def _tmin(f, *args, reps=3):
@@ -66,7 +70,16 @@ def _engine_single_site_us(g, C, n_calls):
     return dt * 1e6 / (n_calls * C), eng
 
 
-def run(paper_scale: bool = False):
+def _sweep_peak_bytes(eng, st):
+    """peak_bytes of one engine sweep call (schema-v3 field: makes the
+    draw-stream elimination visible in BENCH records)."""
+    return peak_bytes(eng.sweep_fn, st)
+
+
+def run(paper_scale: bool = False, smoke: bool = False):
+    if smoke:
+        _run_smoke()
+        return
     C, S = 256, 64
     g = make_potts_graph(20, 4.6, 10)          # the paper's Potts model
     key = jax.random.PRNGKey(0)
@@ -97,7 +110,8 @@ def run(paper_scale: bool = False):
         f"{us_scan / us_sweep:.2f}x",
         sites_per_sec=round(sps),
         speedup_vs_engine=round(us_engine / us_sweep, 2),
-        speedup_vs_scan=round(us_scan / us_sweep, 2), **engS.describe())
+        speedup_vs_scan=round(us_scan / us_sweep, 2),
+        peak_bytes=_sweep_peak_bytes(engS, st), **engS.describe())
 
     _run_newly_swept_rows(g, paper_scale)
     _run_chromatic_row(paper_scale)
@@ -120,9 +134,10 @@ def run(paper_scale: bool = False):
 
 
 def _run_newly_swept_rows(g, paper_scale):
-    """MIN-Gibbs and DoubleMIN on the sweep path (PR 2 coverage): modest
-    (C, S) and capped lam — their upfront draw buffers are O(C*S*D*lam)
-    resp. O(C*S*lam2) — so the row tracks schedule overhead, not paging."""
+    """MIN-Gibbs and DoubleMIN on the sweep path: jnp rows (chunked
+    per-sub-step draw streams — ``peak_bytes`` records the S-independent
+    footprint) plus small interpret-mode rows for their fused Pallas
+    kernels (correctness path; the TPU MXU is the perf target)."""
     key = jax.random.PRNGKey(2)
     C, S = 64, 8
     n_sweep = (16 if not paper_scale else 128) * S
@@ -134,7 +149,8 @@ def _run_newly_swept_rows(g, paper_scale):
     sps = n_sweep * C / dt
     row(f"sweep/fused_min_gibbs_C{C}_S{S}", dt * 1e6 / (n_sweep * C),
         f"sites_per_sec={sps:.0f} lam={eng_m.params['lam']:.0f}",
-        sites_per_sec=round(sps), **eng_m.describe())
+        sites_per_sec=round(sps), peak_bytes=_sweep_peak_bytes(eng_m, st),
+        **eng_m.describe())
 
     eng_d = engine.make("doublemin", g, sweep=S,
                         lam2=min(float(g.psi ** 2), 4096.0))
@@ -143,7 +159,48 @@ def _run_newly_swept_rows(g, paper_scale):
     sps = n_sweep * C / dt
     row(f"sweep/fused_doublemin_C{C}_S{S}", dt * 1e6 / (n_sweep * C),
         f"sites_per_sec={sps:.0f} lam2={eng_d.params['lam2']:.0f}",
-        sites_per_sec=round(sps), **eng_d.describe())
+        sites_per_sec=round(sps), peak_bytes=_sweep_peak_bytes(eng_d, st),
+        **eng_d.describe())
+
+    if jax.default_backend() != "tpu":
+        _run_new_kernel_interp_rows(g)
+
+
+def _run_new_kernel_interp_rows(g, C=8, S=4, lam_cap=256.0):
+    """Interpret-mode rows for the new fused MIN-Gibbs / DoubleMIN Pallas
+    kernels: tiny shapes (the interpreter is the correctness path)."""
+    key = jax.random.PRNGKey(4)
+    for name, params in (("min-gibbs", dict(lam=lam_cap)),
+                         ("doublemin", dict(lam1=64.0, lam2=lam_cap))):
+        eng = engine.make(name, g, sweep=S, backend="pallas", **params)
+        st = eng.init(key, C)
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.sweep(st).x)
+        dt = time.perf_counter() - t0
+        row(f"sweep/pallas_interp_{name}_C{C}_S{S}", dt * 1e6 / (S * C),
+            "interpret-mode incl. compile (correctness path)",
+            peak_bytes=_sweep_peak_bytes(eng, st), **eng.describe())
+
+
+def _run_smoke():
+    """CI-smoke subset: the newly-swept kernels at tiny scale, with
+    ``peak_bytes`` populated for the jnp and pallas rows (the artifact the
+    diagnostics smoke uploads alongside the telemetry record)."""
+    g = make_potts_graph(4, 2.0, 4)
+    key = jax.random.PRNGKey(2)
+    C, S = 16, 4
+    n_sweep = 8 * S
+    for name, params in (("min-gibbs", dict(lam=64.0)),
+                         ("doublemin", dict(lam1=32.0, lam2=64.0))):
+        eng = engine.make(name, g, sweep=S, backend="jnp", **params)
+        st = eng.init(key, C)
+        dt = _time_experiment(eng, st, n_sweep)
+        sps = n_sweep * C / dt
+        row(f"sweep/smoke_{name}_C{C}_S{S}", dt * 1e6 / (n_sweep * C),
+            f"sites_per_sec={sps:.0f}", sites_per_sec=round(sps),
+            peak_bytes=_sweep_peak_bytes(eng, st), **eng.describe())
+    if jax.default_backend() != "tpu":   # interpret-mode label is CPU-only
+        _run_new_kernel_interp_rows(g, C=4, S=2, lam_cap=64.0)
 
 
 def _run_chromatic_row(paper_scale):
@@ -197,3 +254,26 @@ def _run_tpu_kernel_rows(g, C, S):
     row(f"sweep/pallas_tpu_rng_C{C}_S{S}", dt * 1e6 / (S * C),
         f"sites_per_sec={S * C / dt:.0f} (compiled, in-kernel PRNG)",
         sites_per_sec=round(S * C / dt))
+
+    # in-kernel-PRNG MIN-Gibbs: the O(C·S·D·lam) draw streams never exist
+    # in HBM — only the (C, S, D) Poisson totals are host inputs
+    from repro.kernels.fused_sweep import min_gibbs_sweep_pallas_rng
+    from repro.kernels import ops as kops
+    from repro.core.samplers import _node_alias_table
+    import numpy as _np
+    eng_m = engine.make("min-gibbs", g, sweep=S, lam=1024.0)
+    lam_m, cap_m = eng_m.params["lam"], eng_m.params["capacity"]
+    Kp_m = up(cap_m, 128)
+    lscale = float(_np.log1p(g.psi / lam_m))
+    npb, nab = _node_alias_table(g)
+    Bm = jnp.minimum(jax.random.poisson(
+        jax.random.PRNGKey(5), lam_m, (Cp, S, D), dtype=jnp.int32), cap_m)
+    fn_m = jax.jit(lambda x, seed: min_gibbs_sweep_pallas_rng(
+        x, kops._pad_node_table(npb, n, Np), kops._pad_node_table(nab, n, Np),
+        pad_sq(g.row_prob), pad_sq(g.row_alias), i, kops._pad3(Bm, Cp, Dp),
+        kops._pad_cache(jnp.zeros((Cp,)), Cp, Dp), seed,
+        n=n, D=D, S=S, Kp=Kp_m, Dp=Dp, lscale=lscale))
+    dt = _tmin(lambda s: fn_m(x, s), jnp.array([7], jnp.int32))
+    row(f"sweep/pallas_tpu_rng_min_gibbs_C{C}_S{S}", dt * 1e6 / (S * C),
+        f"sites_per_sec={S * C / dt:.0f} (compiled, in-kernel PRNG, "
+        f"lam={lam_m:.0f})", sites_per_sec=round(S * C / dt))

@@ -114,7 +114,9 @@ class ChromaticBlocks(Schedule):
 @dataclasses.dataclass(frozen=True)
 class AdaptiveScan(Schedule):
     """``sweep_len`` fused updates per call at sites drawn from a *learned*
-    non-uniform distribution (gibbs / mgpmh engines).
+    non-uniform distribution (gibbs / mgpmh / min-gibbs / doublemin
+    engines — the cached-estimator samplers thread their eps/xi augmented
+    state through the adaptive wrapper unchanged).
 
     The selection table is driven by the streaming per-site telemetry the
     sweep itself collects (``repro.diagnostics``): sites that rarely change
@@ -189,11 +191,13 @@ class Engine:
         algorithms get their eps/xi cache initialized here)."""
         return self.init_fn(key, n_chains, **kwargs)
 
-    def init_telemetry(self, state, half_at: Optional[int] = None):
+    def init_telemetry(self, state, half_at: Optional[int] = None,
+                       lags: int = 8):
         """Zeroed :class:`~repro.diagnostics.telemetry.Telemetry` sized for
-        ``state`` (pass ``half_at=total_snapshots // 2`` for split-R-hat)."""
+        ``state`` (pass ``half_at=total_snapshots // 2`` for split-R-hat;
+        ``lags`` sets the depth of the ESS autocovariance ring)."""
         from ..diagnostics.telemetry import telemetry_init
-        return telemetry_init(state.x, half_at=half_at)
+        return telemetry_init(state.x, half_at=half_at, lags=lags)
 
     def sweep(self, state, telemetry=None):
         """Advance every chain by ``updates_per_call`` site updates.
@@ -269,8 +273,9 @@ def make(name: str, graph: MatchGraph, *, sweep: Optional[int] = None,
 
     ``sweep=S`` is shorthand for ``schedule=UniformSites(S)``; pass a
     :class:`Schedule` for anything else — :class:`ChromaticBlocks` (gibbs)
-    or :class:`AdaptiveScan` (gibbs/mgpmh, telemetry-driven non-uniform
-    site selection; state carries its own diagnostics).  ``backend`` is
+    or :class:`AdaptiveScan` (gibbs/mgpmh/min-gibbs/doublemin,
+    telemetry-driven non-uniform site selection; state carries its own
+    diagnostics).  ``backend`` is
     'auto' | 'pallas' | 'jnp' | 'dist' ('dist' needs ``mesh=``).  Algorithm
     parameters (lam, capacity, ...) are keyword ``params`` with
     paper-recipe defaults.
@@ -366,21 +371,29 @@ def _gibbs_builder(graph, *, schedule, backend, mesh, **params):
                    exact_accept=True)
 
 
-@register("min-gibbs", backends=("jnp",))
+@register("min-gibbs", backends=("jnp", "pallas"))
 def _min_gibbs_builder(graph, *, schedule, backend, mesh, lam=None,
                        capacity=None, **params):
     _reject_unknown("min-gibbs", params)
-    _require_uniform("min-gibbs", schedule)
-    # paper recipe 2 Psi^2, capped: the sweep's upfront draw buffers are
-    # O(C*S*D*capacity) and capacity ~ lam, so an uncapped default OOMs on
-    # the large registered workloads; pass lam= explicitly to exceed it
+    # paper recipe 2 Psi^2, capped: the sweep's per-sub-step draw buffers
+    # are O(C*D*capacity) and capacity ~ lam, so an uncapped default still
+    # OOMs on the large registered workloads; pass lam= explicitly to
+    # exceed it (on TPU the in-kernel-PRNG kernel lifts the ceiling)
     lam = float(min(2.0 * graph.psi ** 2, 16384.0)) if lam is None \
         else float(lam)
     capacity = recommended_capacity(lam) if capacity is None else capacity
     cache_init = lambda k, st: S.init_min_gibbs_cache(k, graph, st, lam,
                                                       capacity)
     build = lambda cs: S._build_min_gibbs_sweep(
-        graph, lam, capacity, schedule.sweep_len, collect_stats=cs)
+        graph, lam, capacity, schedule.sweep_len, impl=backend,
+        collect_stats=cs)
+    if isinstance(schedule, AdaptiveScan):
+        from ..diagnostics.adaptive import make_adaptive_engine
+        return make_adaptive_engine(
+            "min-gibbs", graph, schedule, backend, core=build(True),
+            chain_init=_chain_init(graph, cache_init),
+            params=dict(lam=lam, capacity=capacity), exact_accept=True)
+    _require_uniform("min-gibbs", schedule)
     return _engine(
         "min-gibbs", backend, schedule, schedule.sweep_len, graph,
         dict(lam=lam, capacity=capacity),
@@ -430,11 +443,10 @@ def _mgpmh_builder(graph, *, schedule, backend, mesh, lam=None,
         build(False), stats_fn=build(True))
 
 
-@register("doublemin", backends=("jnp", "dist"))
+@register("doublemin", backends=("jnp", "pallas", "dist"))
 def _doublemin_builder(graph, *, schedule, backend, mesh, lam1=None,
                        capacity1=None, lam2=None, capacity2=None, **params):
     _reject_unknown("doublemin", params)
-    _require_uniform("doublemin", schedule)
     lam1 = float(4.0 * graph.L ** 2) if lam1 is None else float(lam1)
     # second-batch default: 2 Psi^2, capped so the (C, capacity2) factor-draw
     # buffer stays bounded on large graphs (matching accuracy is then
@@ -442,6 +454,7 @@ def _doublemin_builder(graph, *, schedule, backend, mesh, lam1=None,
     lam2 = float(min(2.0 * graph.psi ** 2, 16384.0)) if lam2 is None \
         else float(lam2)
     if backend == "dist":
+        _require_uniform("doublemin", schedule)
         return _dist_engine("doublemin", graph, schedule, mesh,
                             dict(lam1=lam1, capacity1=capacity1,
                                  lam2=lam2, capacity2=capacity2))
@@ -451,10 +464,17 @@ def _doublemin_builder(graph, *, schedule, backend, mesh, lam1=None,
                                                        capacity2)
     build = lambda cs: S._build_double_min_sweep(
         graph, lam1, capacity1, lam2, capacity2, schedule.sweep_len,
-        collect_stats=cs)
+        impl=backend, collect_stats=cs)
+    params_d = dict(lam1=lam1, capacity1=capacity1, lam2=lam2,
+                    capacity2=capacity2)
+    if isinstance(schedule, AdaptiveScan):
+        from ..diagnostics.adaptive import make_adaptive_engine
+        return make_adaptive_engine(
+            "doublemin", graph, schedule, backend, core=build(True),
+            chain_init=_chain_init(graph, cache_init), params=params_d)
+    _require_uniform("doublemin", schedule)
     return _engine(
-        "doublemin", backend, schedule, schedule.sweep_len, graph,
-        dict(lam1=lam1, capacity1=capacity1, lam2=lam2, capacity2=capacity2),
+        "doublemin", backend, schedule, schedule.sweep_len, graph, params_d,
         _chain_init(graph, cache_init), build(False), stats_fn=build(True))
 
 

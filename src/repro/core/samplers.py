@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .factor_graph import MatchGraph, alias_draw
+from .factor_graph import MatchGraph, alias_draw, build_alias_table
 from .estimators import (draw_global_minibatch, draw_local_minibatch,
                          min_gibbs_estimate)
 from ..kernels import ops as kernel_ops
@@ -311,7 +311,7 @@ def _site_hits(i: jax.Array, n: int) -> jax.Array:
 #   * ``collect_stats=True`` (build time): the sweep additionally returns a
 #     :class:`SweepStats` with per-site proposal/acceptance counters — the
 #     instrumented variant Engine.sweep uses when threading telemetry;
-#   * ``sites=`` (call time, gibbs/mgpmh only): a (C, sweep_len) site-index
+#   * ``sites=`` (call time): a (C, sweep_len) site-index
 #     array overriding the builder's i.i.d.-uniform draw — the hook the
 #     AdaptiveScan schedule drives with its non-uniform table.  The
 #     default-path PRNG streams are unchanged either way.
@@ -497,16 +497,31 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
 # ---------------------------------------------------------------------------
 
 def _build_min_gibbs_sweep(graph: MatchGraph, lam: float, capacity: int,
-                           sweep_len: int, *, collect_stats: bool = False):
-    """``sweep_len`` sequential MIN-Gibbs updates per call (jnp schedule).
+                           sweep_len: int, *, impl: str,
+                           collect_stats: bool = False):
+    """``sweep_len`` sequential MIN-Gibbs updates per call, one fused launch
+    per call.
 
-    All randomness — sites, per-candidate Poisson totals, factor ids from
-    the global alias table (one-uniform trick), Gumbel noise — is drawn up
-    front; the x-dependent matches/candidate-substitution pipeline runs in
-    one scan.  Distributionally identical to ``sweep_len`` steps of
+    impl: 'pallas' — the fused Pallas kernel (kernels/fused_sweep.py;
+          per-draw uniforms drawn host-side for the bit-exact-vs-oracle
+          correctness path, in-kernel on the TPU ``*_rng`` bench path);
+          'jnp'    — a fused jnp schedule with *chunked* draw streams: the
+          per-candidate factor draws are generated inside the scan body
+          (one sub-step at a time, from per-sub-step folded keys), so peak
+          temp memory is O(C·D·lam) — independent of ``sweep_len`` — not
+          the O(C·S·D·lam) of an upfront batch (asserted via XLA's
+          memory_analysis in tests/test_sweep.py).
+    Resolved by the caller (engine.make owns the 'auto' policy).  The two
+    impls consume different (equally valid) PRNG streams; each is
+    distributionally identical to ``sweep_len`` steps of
     ``make_min_gibbs_step`` (Thm 1/2 apply unchanged).  The cache must be
     initialized with ``init_min_gibbs_cache`` (engine.init does this).
     """
+    _check_impl(impl)
+    if impl == "pallas":
+        return _build_min_gibbs_sweep_pallas(graph, lam, capacity,
+                                             sweep_len,
+                                             collect_stats=collect_stats)
     n, D, S, K = graph.n, graph.D, sweep_len, capacity
     F = int(graph.pair_a.shape[0])
     lscale = float(np.log1p(graph.psi / lam))
@@ -518,25 +533,27 @@ def _build_min_gibbs_sweep(graph: MatchGraph, lam: float, capacity: int,
         ki, kb, kf, kg = jax.random.split(master, 4)
         i = (jax.random.randint(ki, (C, S), 0, n) if sites is None
              else sites)
-        # D independent global minibatches per sub-step, one per candidate.
+        # D independent global minibatches per sub-step, one per candidate;
+        # only the O(C·S·D) Poisson totals are drawn upfront — the O(lam)-
+        # sized factor-draw buffers are generated inside the scan body.
         B = jnp.minimum(jax.random.poisson(kb, lam, (C, S, D),
                                            dtype=jnp.int32), K)
-        f = _alias_gather(graph.pair_prob, graph.pair_alias, kf,
-                          (C, S, D, K), F)
-        a, b = graph.pair_a[f], graph.pair_b[f]             # (C, S, D, K)
-        mask = jnp.arange(K)[None, None, :] < B[..., None]  # (C, S, D, K)
         gumbel = jax.random.gumbel(kg, (C, S, D))
         u_cand = jnp.arange(D, dtype=jnp.int32)[None, :, None]   # (1, D, 1)
+        k_mask = jnp.arange(K)[None, None, :]                    # (1, 1, K)
 
         def substep(carry, s):
             x, cache = carry
             i_s = i[:, s]
-            a_s, b_s = a[:, s], b[:, s]                     # (C, D, K)
+            f = _alias_gather(graph.pair_prob, graph.pair_alias,
+                              jax.random.fold_in(kf, s), (C, D, K), F)
+            a_s, b_s = graph.pair_a[f], graph.pair_b[f]     # (C, D, K)
             xa = x[rows[:, None, None], a_s]
             xb = x[rows[:, None, None], b_s]
             xa = jnp.where(a_s == i_s[:, None, None], u_cand, xa)
             xb = jnp.where(b_s == i_s[:, None, None], u_cand, xb)
-            matches = jnp.sum((xa == xb) & mask[:, s], axis=-1)
+            mask = k_mask < B[:, s, :, None]                # (C, D, K)
+            matches = jnp.sum((xa == xb) & mask, axis=-1)
             eps = lscale * matches.astype(jnp.float32)      # (C, D)
             xi = x[rows, i_s]
             eps = eps.at[rows, xi].set(cache)   # Alg 2: eps_{x(i)} <- cache
@@ -556,6 +573,52 @@ def _build_min_gibbs_sweep(graph: MatchGraph, lam: float, capacity: int,
     return sweep
 
 
+def _node_alias_table(graph: MatchGraph):
+    """Alias table over sites with p_a = L_a / 2Psi — stage one of the
+    two-stage global factor draw the Pallas kernels use (stage two is the
+    per-row table; the product is exactly M_phi / Psi, see kernels/ref.py).
+    """
+    prob, alias = build_alias_table(np.asarray(graph.row_sum))
+    return jnp.asarray(prob), jnp.asarray(alias)
+
+
+def _build_min_gibbs_sweep_pallas(graph: MatchGraph, lam: float,
+                                  capacity: int, sweep_len: int, *,
+                                  collect_stats: bool = False):
+    """Pallas schedule of the MIN-Gibbs sweep chain: host-drawn uniform
+    streams feed ``kernel_ops.min_gibbs_sweep`` (bit-exact vs the jnp
+    oracle — the interpret-mode correctness path); on TPU the
+    ``min_gibbs_sweep_pallas_rng`` bench variant generates the same streams
+    in-kernel so they never exist in HBM."""
+    n, D, S, K = graph.n, graph.D, sweep_len, capacity
+    lscale = float(np.log1p(graph.psi / lam))
+    node_prob, node_alias = _node_alias_table(graph)
+
+    def sweep(state: ChainState, sites=None):
+        ki, kb, k1, k2, k3, k4, kg, knew = _batch_keys(state.key, 8)
+        if sites is None:
+            i = jax.vmap(lambda k: jax.random.randint(
+                k, (S,), 0, n))(ki)                        # (C, S)
+        else:
+            i = sites
+        B = jnp.minimum(jax.vmap(lambda k: jax.random.poisson(
+            k, lam, (S, D), dtype=jnp.int32))(kb), K)
+        draw = lambda ks: jax.vmap(lambda k: jax.random.uniform(
+            k, (S, D, K)))(ks)
+        gumbel = jax.vmap(lambda k: jax.random.gumbel(k, (S, D)))(kg)
+        x, cache = kernel_ops.min_gibbs_sweep(
+            state.x, node_prob, node_alias, graph.row_prob, graph.row_alias,
+            i, B, draw(k1), draw(k2), draw(k3), draw(k4), gumbel,
+            state.cache, D=D, lscale=lscale, impl="pallas")
+        new = state._replace(x=x, cache=cache, key=knew)
+        if not collect_stats:
+            return new
+        hits = _site_hits(i, n)       # Gibbs-type: every update accepted
+        return new, SweepStats(site_prop=hits, site_acc=hits)
+
+    return sweep
+
+
 # ---------------------------------------------------------------------------
 # DoubleMIN-Gibbs sweep (Algorithm 5, batched): the cached second-minibatch
 # estimate xi_x rides the scan carry, updated on every acceptance (Thm 5's
@@ -564,13 +627,26 @@ def _build_min_gibbs_sweep(graph: MatchGraph, lam: float, capacity: int,
 
 def _build_double_min_sweep(graph: MatchGraph, lam1: float, capacity1: int,
                             lam2: float, capacity2: int, sweep_len: int, *,
-                            collect_stats: bool = False):
-    """``sweep_len`` sequential DoubleMIN updates per call (jnp schedule):
-    MGPMH proposal (packed alias gathers, bucket-count energies) + a second
-    global bias-adjusted minibatch in the acceptance test.  Distributionally
-    identical to ``sweep_len`` steps of ``make_double_min_step``; the cache
-    must be initialized with ``init_double_min_cache`` (engine.init does
-    this)."""
+                            impl: str, collect_stats: bool = False):
+    """``sweep_len`` sequential DoubleMIN updates per call: MGPMH proposal
+    + a second global bias-adjusted minibatch in the acceptance test.
+
+    impl: 'pallas' — the fused Pallas kernel (host-drawn streams for the
+          bit-exact-vs-oracle path; ``double_min_sweep_pallas_rng`` on TPU
+          keeps them out of HBM entirely);
+          'jnp'    — the fused jnp schedule (packed alias gathers,
+          bucket-count energies) with *chunked* draw streams: the proposal
+          and second-batch draws are generated inside the scan body from
+          per-sub-step folded keys, so peak temp memory is
+          O(C·(lam1 + lam2)) — independent of ``sweep_len``.
+    Resolved by the caller.  Distributionally identical to ``sweep_len``
+    steps of ``make_double_min_step``; the cache must be initialized with
+    ``init_double_min_cache`` (engine.init does this)."""
+    _check_impl(impl)
+    if impl == "pallas":
+        return _build_double_min_sweep_pallas(
+            graph, lam1, capacity1, lam2, capacity2, sweep_len,
+            collect_stats=collect_stats)
     n, D, S = graph.n, graph.D, sweep_len
     K1, K2 = capacity1, capacity2
     F = int(graph.pair_a.shape[0])
@@ -586,41 +662,44 @@ def _build_double_min_sweep(graph: MatchGraph, lam1: float, capacity1: int,
         ki, kb1, k1, kg, kb2, kf, ka = jax.random.split(master, 7)
         i = (jax.random.randint(ki, (C, S), 0, n) if sites is None
              else sites)
-        # proposal minibatch over A[i] (as in the MGPMH jnp schedule)
+        # only the O(C·S) streams are drawn upfront; the O(lam)-sized draw
+        # buffers are generated one sub-step at a time inside the scan
         lam_i = lam1 * graph.row_sum[i] / graph.L
         B1 = jnp.minimum(jax.random.poisson(kb1, lam_i, dtype=jnp.int32), K1)
-        un = jax.random.uniform(k1, (C, S, K1)) * n
-        idx = jnp.minimum(un.astype(jnp.int32), n - 1)
-        pk = packed[i[..., None], idx]
-        j = jnp.where(un - idx < pk[..., 0], idx,
-                      pk[..., 1].astype(jnp.int32))
-        j = jnp.where(jnp.arange(K1)[None, None, :] < B1[..., None], j, n)
         gumbel = jax.random.gumbel(kg, (C, S, D))
-        # second (global, eq.-2) minibatch for the acceptance test
         B2 = jnp.minimum(jax.random.poisson(kb2, lam2, (C, S),
                                             dtype=jnp.int32), K2)
-        f = _alias_gather(graph.pair_prob, graph.pair_alias, kf,
-                          (C, S, K2), F)
-        a, b = graph.pair_a[f], graph.pair_b[f]             # (C, S, K2)
-        mask2 = jnp.arange(K2)[None, None, :] < B2[..., None]
         logu = jnp.log(jax.random.uniform(ka, (C, S)))
         xp0 = jnp.pad(state.x, ((0, 0), (0, 1)), constant_values=D)
 
         def substep(carry, s):
             xp, cache, acc, sa = carry
             i_s = i[:, s]
-            vals = jnp.take_along_axis(xp, j[:, s, :], axis=1)   # (C, K1)
+            # proposal minibatch over A[i_s] (as in the MGPMH jnp schedule)
+            un = jax.random.uniform(jax.random.fold_in(k1, s),
+                                    (C, K1)) * n
+            idx = jnp.minimum(un.astype(jnp.int32), n - 1)
+            pk = packed[i_s[:, None], idx]                       # (C, K1, 2)
+            j = jnp.where(un - idx < pk[..., 0], idx,
+                          pk[..., 1].astype(jnp.int32))
+            # sentinel n for draws past B1: they gather the pad column
+            # (value D) and land in no bucket
+            j = jnp.where(jnp.arange(K1)[None, :] < B1[:, s, None], j, n)
+            vals = jnp.take_along_axis(xp, j, axis=1)            # (C, K1)
             eps = scale1 * _bucket_counts(vals, D)               # (C, D)
             v = jnp.argmax(eps + gumbel[:, s, :],
                            axis=-1).astype(jnp.int32)
             xi = xp[rows, i_s]
             # xi_y = eq.-(2) estimate at y = x[i_s <- v]
-            a_s, b_s = a[:, s], b[:, s]
+            f = _alias_gather(graph.pair_prob, graph.pair_alias,
+                              jax.random.fold_in(kf, s), (C, K2), F)
+            a_s, b_s = graph.pair_a[f], graph.pair_b[f]          # (C, K2)
             ya = xp[rows[:, None], a_s]
             yb = xp[rows[:, None], b_s]
             ya = jnp.where(a_s == i_s[:, None], v[:, None], ya)
             yb = jnp.where(b_s == i_s[:, None], v[:, None], yb)
-            matches = jnp.sum((ya == yb) & mask2[:, s], axis=-1)
+            mask2 = jnp.arange(K2)[None, :] < B2[:, s, None]
+            matches = jnp.sum((ya == yb) & mask2, axis=-1)
             xi_y = lscale2 * matches.astype(jnp.float32)
             log_a = (xi_y - cache) + (eps[rows, xi] - eps[rows, v])
             accept = logu[:, s] < log_a
@@ -639,6 +718,57 @@ def _build_double_min_sweep(graph: MatchGraph, lam1: float, capacity1: int,
         if not collect_stats:
             return new
         return new, SweepStats(site_prop=_site_hits(i, n), site_acc=sa)
+
+    return sweep
+
+
+def _build_double_min_sweep_pallas(graph: MatchGraph, lam1: float,
+                                   capacity1: int, lam2: float,
+                                   capacity2: int, sweep_len: int, *,
+                                   collect_stats: bool = False):
+    """Pallas schedule of the DoubleMIN sweep chain (host-drawn streams
+    feeding ``kernel_ops.double_min_sweep``; bit-exact vs the jnp oracle in
+    interpret mode)."""
+    n, D, S = graph.n, graph.D, sweep_len
+    K1, K2 = capacity1, capacity2
+    scale1 = float(graph.L / lam1)
+    lscale2 = float(np.log1p(graph.psi / lam2))
+    node_prob, node_alias = _node_alias_table(graph)
+
+    def sweep(state: ChainState, sites=None):
+        (ki, kb1, k1, k2, kg, kb2, k3, k4, k5, k6, ka,
+         knew) = _batch_keys(state.key, 12)
+        if sites is None:
+            i = jax.vmap(lambda k: jax.random.randint(
+                k, (S,), 0, n))(ki)                        # (C, S)
+        else:
+            i = sites
+        lam_i = lam1 * graph.row_sum[i] / graph.L          # (C, S)
+        B1 = jnp.minimum(jax.vmap(lambda k, l: jax.random.poisson(
+            k, l, dtype=jnp.int32))(kb1, lam_i), K1)
+        u_idx = jax.vmap(lambda k: jax.random.uniform(k, (S, K1)))(k1)
+        u_alias = jax.vmap(lambda k: jax.random.uniform(k, (S, K1)))(k2)
+        gumbel = jax.vmap(lambda k: jax.random.gumbel(k, (S, D)))(kg)
+        B2 = jnp.minimum(jax.vmap(lambda k: jax.random.poisson(
+            k, lam2, (S,), dtype=jnp.int32))(kb2), K2)
+        draw2 = lambda ks: jax.vmap(lambda k: jax.random.uniform(
+            k, (S, K2)))(ks)
+        logu = jnp.log(jax.vmap(lambda k: jax.random.uniform(
+            k, (S,)))(ka))
+        x, cache, acc = kernel_ops.double_min_sweep(
+            state.x, graph.row_prob, graph.row_alias, node_prob, node_alias,
+            i, B1, u_idx, u_alias, gumbel, B2, draw2(k3), draw2(k4),
+            draw2(k5), draw2(k6), logu, state.cache, D=D, scale1=scale1,
+            lscale2=lscale2, impl="pallas")
+        new = state._replace(x=x, cache=cache, key=knew,
+                             accepts=state.accepts + acc)
+        if not collect_stats:
+            return new
+        # acceptance stays inside the kernel: per-site acceptances are
+        # reported as accepted *moves* (value changes) — a lower bound the
+        # jnp schedule sharpens to exact counts
+        moves = jnp.sum(state.x != x, axis=0, dtype=jnp.float32)
+        return new, SweepStats(site_prop=_site_hits(i, n), site_acc=moves)
 
     return sweep
 

@@ -102,7 +102,10 @@ def make_adaptive_engine(name: str, graph, schedule: AdaptiveScan,
         st = chain_init(key, n_chains, **kwargs)
         return AdaptiveState(
             inner=st, cdf=jnp.cumsum(jnp.full((n,), 1.0 / n, jnp.float32)),
-            tel=telemetry_init(st.x), calls=jnp.int32(0))
+            # the control loop feeds on flip/hit counters only: a lag-1
+            # ring keeps the carried state minimal (thread a separate
+            # Telemetry through Engine.sweep for deep-lag ESS)
+            tel=telemetry_init(st.x, lags=1), calls=jnp.int32(0))
 
     def sweep_fn(ast: AdaptiveState) -> AdaptiveState:
         st = ast.inner

@@ -12,9 +12,11 @@ host inside the sweep loop:
     accumulator over the whole run plus one over the second half, so
     *split*-R-hat can be recovered exactly at summary time (the first-half
     moments follow from Chan's combine formula run backwards);
-  * **lag-1 cross-products** at snapshot granularity, giving a cheap
-    autocorrelation-based ESS estimate (initial-sequence estimator
-    truncated at lag 1);
+  * **a lag-K ring of cross-products** at snapshot granularity (default
+    K = 8, device-resident: the last K snapshots plus K running
+    sums of ``x_t * x_{t-k}``), feeding Geyer's initial-sequence ESS
+    estimator at summary time; ``lags=1`` keeps the old lag-1 geometric
+    estimate as the K = 1 special case;
   * **per-site counters**: proposals/updates (``site_prop``), MH acceptances
     (``site_acc``, exact on the instrumented jnp sweep paths), and
     value changes (``site_flips``, from state diffs — exact on every
@@ -69,29 +71,37 @@ class Telemetry(NamedTuple):
     samples_h: jax.Array   # () snapshots in the second half
     mean_h: jax.Array      # (C, n) second-half Welford mean
     m2_h: jax.Array        # (C, n) second-half Welford M2
-    prev: jax.Array        # (C, n) previous snapshot (for lag-1 products)
-    cross: jax.Array       # (C, n) sum of consecutive-snapshot products
-    cross_n: jax.Array     # () pairs accumulated into ``cross``
+    prev: jax.Array        # (K, C, n) ring of the last K snapshots
+    #                        (prev[k-1] = x_{t-k}; K = the ESS lag depth)
+    cross: jax.Array       # (K, C, n) sums of products x_t * x_{t-k}
+    cross_n: jax.Array     # (K,) pairs accumulated into each ``cross[k-1]``
     accepts: jax.Array     # (C,) MH acceptances accumulated
     site_prop: jax.Array   # (n,) per-site proposals (instrumented paths)
     site_acc: jax.Array    # (n,) per-site MH acceptances (instrumented)
     site_flips: jax.Array  # (n,) per-site value changes (state diffs)
 
 
-def telemetry_init(x: jax.Array, half_at: Optional[float] = None) -> Telemetry:
+def telemetry_init(x: jax.Array, half_at: Optional[float] = None,
+                   lags: int = 8) -> Telemetry:
     """Zeroed telemetry for a batched state ``x`` of shape (C, n).
 
     ``half_at``: snapshot index where the second-half accumulator starts
     (pass ``total_snapshots // 2`` for a proper split-R-hat; the marginal
     runner does this).  Default ``None`` disables the split.
+    ``lags``: depth K of the autocovariance ring feeding the
+    initial-sequence ESS estimator; ``lags=1`` reproduces the original
+    lag-1 geometric estimate.
     """
+    if lags < 1:
+        raise ValueError(f"lags must be >= 1, got {lags}")
     C, n = x.shape
     z = jnp.zeros((C, n), jnp.float32)
+    zk = jnp.zeros((lags, C, n), jnp.float32)
     return Telemetry(
         samples=jnp.float32(0.0), updates=jnp.float32(0.0),
         half_at=jnp.float32(jnp.inf if half_at is None else half_at),
         mean=z, m2=z, samples_h=jnp.float32(0.0), mean_h=z, m2_h=z,
-        prev=z, cross=z, cross_n=jnp.float32(0.0),
+        prev=zk, cross=zk, cross_n=jnp.zeros((lags,), jnp.float32),
         accepts=jnp.zeros((C,), jnp.float32),
         site_prop=jnp.zeros((n,), jnp.float32),
         site_acc=jnp.zeros((n,), jnp.float32),
@@ -121,10 +131,13 @@ def telemetry_update(tel: Telemetry, old_x: jax.Array, new_x: jax.Array,
     mean_h = tel.mean_h + in2 * dh / jnp.maximum(kh, 1.0)
     m2_h = tel.m2_h + in2 * dh * (xf - mean_h)
 
-    # lag-1 cross-products (valid from the second snapshot on)
-    has_prev = (tel.samples >= 1.0).astype(jnp.float32)
-    cross = tel.cross + has_prev * tel.prev * xf
-    cross_n = tel.cross_n + has_prev
+    # lag-k cross-products, k = 1..K: ring slot k-1 holds x_{t-k}, valid
+    # once at least k snapshots have been seen
+    K = tel.prev.shape[0]
+    has_lag = (tel.samples >= jnp.arange(1.0, K + 1.0)).astype(jnp.float32)
+    cross = tel.cross + has_lag[:, None, None] * tel.prev * xf[None]
+    cross_n = tel.cross_n + has_lag
+    prev = jnp.concatenate([xf[None], tel.prev[:-1]], axis=0)
 
     flips = tel.site_flips + jnp.sum(old_x != new_x, axis=0,
                                      dtype=jnp.float32)
@@ -137,7 +150,7 @@ def telemetry_update(tel: Telemetry, old_x: jax.Array, new_x: jax.Array,
     return Telemetry(
         samples=k, updates=tel.updates + float(updates), half_at=tel.half_at,
         mean=mean, m2=m2, samples_h=kh, mean_h=mean_h, m2_h=m2_h,
-        prev=xf, cross=cross, cross_n=cross_n, accepts=accepts,
+        prev=prev, cross=cross, cross_n=cross_n, accepts=accepts,
         site_prop=site_prop, site_acc=site_acc, site_flips=flips)
 
 
@@ -203,35 +216,64 @@ def _lag1_stats(tel: Telemetry):
     float64 numpy, or None with fewer than two snapshots / one lag-1 pair.
 
     The autocovariance is E[x_t x_{t-1}] - mean^2 with the full-run mean —
-    the slight bias vanishes as the run grows.  Shared by the ESS estimate
-    here and the spectral-gap estimate in ``diagnostics.exact``.
+    the slight bias vanishes as the run grows.  Reads slot 0 of the lag-K
+    ring; shared by the ESS estimate here and the spectral-gap estimate in
+    ``diagnostics.exact``.
     """
     cnt = float(np.asarray(tel.samples))
-    cn = float(np.asarray(tel.cross_n))
+    cn = float(np.asarray(tel.cross_n[0]))
     if cnt <= 1.0 or cn <= 0.0:
         return None
     mean = np.asarray(tel.mean, np.float64)
     var = np.asarray(tel.m2, np.float64) / (cnt - 1.0)
-    cov1 = np.asarray(tel.cross, np.float64) / cn - mean ** 2
+    cov1 = np.asarray(tel.cross[0], np.float64) / cn - mean ** 2
     return cnt, cn, var, cov1
+
+
+def _rho_lags(tel: Telemetry):
+    """Chain-site lag-k autocorrelations rho[k-1], k = 1..K, as (K, C, n)
+    float64 (0 where the lag has no accumulated pairs), plus (cnt, var)."""
+    cnt = float(np.asarray(tel.samples))
+    mean = np.asarray(tel.mean, np.float64)
+    var = np.asarray(tel.m2, np.float64) / max(cnt - 1.0, 1.0)
+    cn = np.asarray(tel.cross_n, np.float64)              # (K,)
+    cov = (np.asarray(tel.cross, np.float64)
+           / np.maximum(cn, 1.0)[:, None, None] - mean[None] ** 2)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rho = np.clip(cov / np.maximum(var, 1e-300)[None], -0.999, 0.999)
+    rho = np.where((var[None] > 0.0) & (cn[:, None, None] > 0.0), rho, 0.0)
+    return rho, cnt, var
 
 
 def ess_per_site(tel: Telemetry) -> np.ndarray:
     """Per-site effective sample size summed over chains ((n,) float64).
 
-    Lag-1 initial-sequence estimate: ESS = C * N * (1 - rho1) / (1 + rho1)
-    with rho1 the chain-averaged lag-1 snapshot autocorrelation.  Sites with
-    zero variance (never moved) report 0.
+    With a lag ring of depth K > 1 this is Geyer's initial-sequence
+    estimate: tau = -1 + 2 * sum_m Gamma_m over the pair sums
+    Gamma_m = rho_{2m} + rho_{2m+1} (rho_0 = 1), truncated at the first
+    non-positive Gamma_m; ESS = C * N / tau.  With K = 1 (the original
+    telemetry configuration) it falls back to the geometric AR(1) closed
+    form ESS = C * N * (1 - rho1) / (1 + rho1).  Sites with zero variance
+    (never moved) report 0.
     """
     C, n = tel.mean.shape
-    stats = _lag1_stats(tel)
-    if stats is None:
+    K = tel.prev.shape[0]
+    cnt = float(np.asarray(tel.samples))
+    if cnt <= 1.0 or float(np.asarray(tel.cross_n[0])) <= 0.0:
         return np.zeros(n)
-    cnt, _, var, cov1 = stats
-    with np.errstate(divide="ignore", invalid="ignore"):
-        rho = np.clip(cov1 / var, -0.999, 0.999)
-    rho = np.where(var > 0.0, rho, 1.0)
-    ess = cnt * (1.0 - rho) / (1.0 + rho)                 # per chain, (C, n)
+    rho, cnt, var = _rho_lags(tel)                        # (K, C, n)
+    if K == 1:
+        r1 = rho[0]
+        ess = cnt * (1.0 - r1) / (1.0 + r1)
+    else:
+        # rho_0 = 1 prepended; odd tail zero-padded so lags pair up
+        full = np.concatenate(
+            [np.ones((1, C, n)), rho,
+             np.zeros(((K + 1) % 2, C, n))], axis=0)      # even length
+        gamma = full[0::2] + full[1::2]                   # (M, C, n) pair sums
+        keep = np.cumprod(gamma > 0.0, axis=0)            # initial positive seq
+        tau = np.maximum(-1.0 + 2.0 * (gamma * keep).sum(axis=0), 1e-3)
+        ess = cnt / tau
     return np.where(var > 0.0, ess, 0.0).sum(axis=0)
 
 

@@ -1,3 +1,5 @@
 """Pallas TPU kernels (interpret-validated on CPU) + pure-jnp oracles."""
-from .ops import bucket_energy, flash_attention, gibbs_sweep, mgpmh_sweep
-from .ref import bucket_energy_ref, gibbs_sweep_ref, mgpmh_sweep_ref
+from .ops import (bucket_energy, flash_attention, gibbs_sweep, mgpmh_sweep,
+                  min_gibbs_sweep, double_min_sweep)
+from .ref import (bucket_energy_ref, gibbs_sweep_ref, mgpmh_sweep_ref,
+                  min_gibbs_sweep_ref, double_min_sweep_ref)

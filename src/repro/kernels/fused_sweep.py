@@ -1,38 +1,60 @@
-"""Pallas TPU kernel: fused multi-site Gibbs/MGPMH sweep.
+"""Pallas TPU kernels: fused multi-site sweeps for all four fused samplers
+(vanilla Gibbs, MGPMH, MIN-Gibbs, DoubleMIN-Gibbs).
 
-Updates ``S`` sites per chain in ONE kernel launch instead of one launch
-per site — the chain state lives in VMEM across all ``S`` sequentially
-composed sub-steps, so the per-update cost is pure compute (the paper's
-O(lambda)) instead of kernel-dispatch latency.  Per sub-step the kernel
-fuses the full single-site update pipeline without returning to HBM:
+Each kernel updates ``S`` sites per chain in ONE launch instead of one
+launch per site — the chain state (and, for the minibatched-estimator
+algorithms, the cached eps/xi augmented state) lives in VMEM across all
+``S`` sequentially composed sub-steps, so the per-update cost is pure
+compute (the paper's O(lambda)) instead of kernel-dispatch latency.
 
-  1. alias-table minibatch draw  — uniforms -> table index -> alias select;
-     the (n, n) row tables are VMEM-resident and both gathers are realized
-     as one-hot GEMMs so the MXU does the indexing (mh mode only);
-  2. bucket-energy reduction     — ``eps_u = scale * #{k < B : x[j_k] = u}``
-     factored as two one-hot GEMMs: draws -> per-site counts ``cnt`` over n
-     buckets, then ``cnt @ onehot(x)`` over D buckets (the MXU trick of
-     kernels/minibatch_energy.py, applied twice);
-  3. exact conditional pass      — ``W[i] @ onehot(x)`` (shares the
-     in-register ``onehot(x)`` block with stage 2);
-  4. Gumbel-max categorical proposal + Metropolis-Hastings accept, then the
-     in-VMEM state update ``x[i] <- v``.
+The kernels are instances of one *template*: a per-algorithm substep
+plugged into the shared S-step ``fori_loop`` driver, built from shared
+primitives —
+
+  * **alias draws** — ``_alias_row_draw`` (per-chain row table, MGPMH's
+    local minibatch over A[i]) and ``_pair_draw`` (global factor draw as a
+    *two-stage* chain: endpoint ``a`` from a node table with p_a = L_a/2Psi,
+    endpoint ``b`` from row a's table with p_b = W_ab/L_a, so
+    p({a,b}) = M_phi/Psi exactly without the O(n^2) flat factor table).
+    All gathers are realized as one-hot GEMMs so the MXU does the indexing;
+  * **bucket-energy reductions** — ``_bucket``: weighted one-hot
+    contractions (the MXU trick of kernels/minibatch_energy.py);
+  * **Gumbel-argmax proposal** — ``_argmax_lanes`` over masked lanes
+    (categorical(exp eps) == argmax(eps + gumbel));
+  * **MH accept** — ``_pick_lane`` two-point energy reads + the log-uniform
+    threshold.
+
+Per-algorithm substeps:
+  gibbs      exact conditional pass -> Gumbel-argmax (no accept);
+  mgpmh      local alias minibatch -> bucket energies -> proposal -> exact
+             conditional pass -> MH accept;
+  min-gibbs  D independent global minibatches (two-stage pair draws) with
+             candidate substitution -> cached-eps slot overwrite (Alg 2's
+             augmented state, carried in VMEM) -> Gumbel-argmax (no accept);
+  doublemin  MGPMH proposal (no exact pass) -> second global minibatch at
+             the proposed state -> MH accept against the cached xi_x
+             (Thm 5's augmented state, carried in VMEM).
 
 Randomness: ``host_rng=True`` (default, and the only option off-TPU /
-interpret mode) consumes pre-drawn uniforms so the kernel is bit-comparable
-to the jnp oracle (kernels/ref.py).  ``host_rng=False`` generates the
-uniforms in-kernel from ``pltpu.prng_random_bits`` seeded per chain-block —
-identical arithmetic, only the bit source changes; it removes the (C, S, K)
-uniform streams from HBM entirely but cannot run in interpret mode
+interpret mode) consumes pre-drawn uniforms so each kernel is
+bit-comparable to its jnp oracle (kernels/ref.py).  ``host_rng=False``
+(the ``*_rng`` entry points) generates the uniforms in-kernel from
+``pltpu.prng_random_bits`` seeded per chain-block — identical arithmetic,
+only the bit source changes.  For MIN-Gibbs / DoubleMIN this is the
+memory fix the ROADMAP called for: the O(C·S·D·lam) resp. O(C·S·lam2)
+draw streams never exist in HBM; only the O(C·S·D) Poisson totals (no
+lambda factor) stay host-drawn.  It cannot run in interpret mode
 (``prng_seed`` has no CPU lowering), so it is TPU-compiled-only.
 
 Tiling / VMEM budget (per grid step, grid = (C/BC,)):
-  resident:  W, row_prob, row_alias (Np x Np each), x (BC x Np),
-             the (BC, Sp, Kp) uniform/weight blocks;
-  transient: one-hot blocks (BC, Kp, Np) and (BC, Np, Dp).
+  resident:  the (Np, Np) tables each algorithm needs (W and/or
+             row_prob/row_alias; MIN-Gibbs and DoubleMIN skip W entirely),
+             x (BC x Np), the per-sub-step uniform/weight blocks
+             (host-rng path only);
+  transient: one-hot blocks (BC, L, Np) where L is the draw-lane width
+             (Kp for mgpmh/doublemin, D*Kp for MIN-Gibbs's D independent
+             candidate minibatches).
   Np/Kp/Dp are 128-multiples (lane width), BC a multiple of 8 (sublanes).
-  For the paper's 20x20 Potts graph (n=400 -> Np=512, K~256, S=64) this is
-  ~6 MiB, comfortably inside 16 MiB VMEM.
 """
 from __future__ import annotations
 
@@ -48,10 +70,16 @@ except ImportError:  # pragma: no cover
     pltpu = None
 
 __all__ = ["mgpmh_sweep_pallas", "mgpmh_sweep_pallas_rng",
-           "gibbs_sweep_pallas"]
+           "gibbs_sweep_pallas",
+           "min_gibbs_sweep_pallas", "min_gibbs_sweep_pallas_rng",
+           "double_min_sweep_pallas", "double_min_sweep_pallas_rng"]
 
 _NEG = -1e30
 
+
+# ---------------------------------------------------------------------------
+# Shared template primitives
+# ---------------------------------------------------------------------------
 
 def _uniform_from_bits(bits):  # pragma: no cover - TPU-compiled path
     """uint32 random bits -> f32 uniform in [0, 1) with 24-bit mantissa."""
@@ -72,6 +100,20 @@ def _bucket(w, onehot):
     return acc[:, 0, :]
 
 
+def _gather_rows(oh, table):
+    """Rows ``table[ids]`` for per-lane ids: (BC, L, Np) one-hot contracted
+    with an (Np, Np) table -> (BC, L, Np)."""
+    return jax.lax.dot_general(
+        oh, table, dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _gather_state(oh, x_f):
+    """``x[ids]`` for per-lane ids via their one-hot: (BC, L, Np) x
+    (BC, Np) -> (BC, L) int32 (values < 2^24: exact in f32)."""
+    return jnp.sum(oh * x_f[:, None, :], axis=2).astype(jnp.int32)
+
+
 def _argmax_lanes(scores, iota_d, width):
     """First-max index over lanes, as (BC, 1) int32 (Mosaic-safe argmax)."""
     m = jnp.max(scores, axis=1, keepdims=True)
@@ -84,6 +126,95 @@ def _pick_lane(vec, iota_d, lane):
     return jnp.sum(jnp.where(iota_d == lane, vec, 0.0), axis=1,
                    keepdims=True)
 
+
+def _alias_row_draw(u_idx, u_alias, prob_row, alias_row, n):
+    """Alias-table draw from per-chain (already row-selected) tables —
+    MGPMH's local minibatch over A[i].  u_idx/u_alias (BC, K) uniforms;
+    prob_row/alias_row (BC, Np) f32.  Returns (BC, K) int32 ids."""
+    BC, K = u_idx.shape
+    Np = prob_row.shape[1]
+    idx = jnp.minimum((u_idx * n).astype(jnp.int32), n - 1)
+    # transposed one-hot so the table gathers are plain _bucket contractions
+    iota_nk = jax.lax.broadcasted_iota(jnp.int32, (BC, Np, K), 1)
+    oh_idx_t = (idx[:, None, :] == iota_nk).astype(jnp.float32)
+    p_g = _bucket(prob_row, oh_idx_t)
+    a_g = _bucket(alias_row, oh_idx_t)
+    return jnp.where(u_alias < p_g, idx, a_g.astype(jnp.int32))
+
+
+def _pair_draw(u_node, u_nacc, u_row, u_racc, node_prob, node_alias,
+               RP, RA, n):
+    """Two-stage global factor draw: endpoint ``a`` from the node alias
+    table (p_a = L_a / 2Psi), endpoint ``b`` from row a's alias table
+    (p_b = W_ab / L_a); the product is M_phi / Psi (see kernels/ref.py).
+
+    u_* (BC, L) uniforms; node_prob/node_alias (BC, Np) broadcast rows;
+    RP/RA the (Np, Np) per-row tables.  Returns (a, b, oh_a, oh_b):
+    endpoint ids (BC, L) int32 plus their state-gather one-hots
+    (BC, L, Np) f32 (reused by the callers' x[a]/x[b] gathers).
+    """
+    BC, L = u_node.shape
+    Np = RP.shape[0]
+    idx1 = jnp.minimum((u_node * n).astype(jnp.int32), n - 1)
+    iota_nl = jax.lax.broadcasted_iota(jnp.int32, (BC, Np, L), 1)
+    oh1_t = (idx1[:, None, :] == iota_nl).astype(jnp.float32)
+    p1 = _bucket(node_prob, oh1_t)
+    a1 = _bucket(node_alias, oh1_t)
+    a = jnp.where(u_nacc < p1, idx1, a1.astype(jnp.int32))
+    iota_ln = jax.lax.broadcasted_iota(jnp.int32, (BC, L, Np), 2)
+    oh_a = (a[:, :, None] == iota_ln).astype(jnp.float32)
+    prob_a = _gather_rows(oh_a, RP)            # row_prob[a_k] per draw
+    alias_a = _gather_rows(oh_a, RA)
+    idx2 = jnp.minimum((u_row * n).astype(jnp.int32), n - 1)
+    oh_i2 = (idx2[:, :, None] == iota_ln).astype(jnp.float32)
+    p2 = jnp.sum(prob_a * oh_i2, axis=2)       # row_prob[a_k, idx2_k]
+    a2 = jnp.sum(alias_a * oh_i2, axis=2)
+    b = jnp.where(u_racc < p2, idx2, a2.astype(jnp.int32))
+    oh_b = (b[:, :, None] == iota_ln).astype(jnp.float32)
+    return a, b, oh_a, oh_b
+
+
+# Host/device-switchable randomness: each returns a per-sub-step source.
+# The host variants slice the pre-drawn streams (bit-comparable to the jnp
+# oracles); the device variants draw from the in-kernel PRNG in the same
+# call order, so only the bit source changes.
+
+def _uniform_stream(host_rng, ref, BC, L):
+    if host_rng:
+        return lambda s: ref[:, s, :]
+    return lambda s: _uniform_from_bits(  # pragma: no cover - TPU path
+        pltpu.prng_random_bits((BC, L)))
+
+
+def _gumbel_stream(host_rng, ref, BC, Dp):
+    if host_rng:
+        return lambda s: ref[:, s, :]
+
+    def dev(s):  # pragma: no cover - TPU-compiled path
+        u = _uniform_from_bits(pltpu.prng_random_bits((BC, Dp)))
+        return -jnp.log(-jnp.log(u + 1e-20) + 1e-20)
+    return dev
+
+
+def _logu_stream(host_rng, ref, BC):
+    if host_rng:
+        return lambda s: ref[:, pl.ds(s, 1)]
+
+    def dev(s):  # pragma: no cover - TPU-compiled path
+        u = _uniform_from_bits(pltpu.prng_random_bits((BC, 128)))
+        return jnp.log(u[:, :1] + 1e-20)
+    return dev
+
+
+def _run_substeps(S, substep, carry):
+    """The template driver: S sequentially composed sub-steps in VMEM."""
+    return jax.lax.fori_loop(0, S, substep, carry)
+
+
+# ---------------------------------------------------------------------------
+# Gibbs / MGPMH kernel (exact conditional pass; MGPMH adds the local
+# minibatch proposal + MH accept)
+# ---------------------------------------------------------------------------
 
 def _sweep_kernel(*refs, n: int, D: int, S: int, Kp: int, scale: float,
                   mh: bool, host_rng: bool):
@@ -112,25 +243,14 @@ def _sweep_kernel(*refs, n: int, D: int, S: int, Kp: int, scale: float,
         RA = ra_ref[...].astype(jnp.float32)  # int-valued, < n <= 2^24: exact
     if not host_rng:  # pragma: no cover - TPU-compiled path
         pltpu.prng_seed(seed_ref[0], pl.program_id(0))
-
-    def rand_mb(s):
-        """(u_idx, u_alias) uniforms for the alias draw of sub-step s."""
-        if host_rng:
-            return u1_ref[:, s, :], u2_ref[:, s, :]
-        return (_uniform_from_bits(pltpu.prng_random_bits((BC, Kp))),
-                _uniform_from_bits(pltpu.prng_random_bits((BC, Kp))))
-
-    def rand_gumbel(s):
-        if host_rng:
-            return g_ref[:, s, :]
-        u = _uniform_from_bits(pltpu.prng_random_bits((BC, Dp)))
-        return -jnp.log(-jnp.log(u + 1e-20) + 1e-20)
-
-    def rand_logu(s):
-        if host_rng:
-            return lu_ref[:, pl.ds(s, 1)]
-        u = _uniform_from_bits(pltpu.prng_random_bits((BC, 128)))
-        return jnp.log(u[:, :1] + 1e-20)
+    if mh:
+        rand_u1 = _uniform_stream(host_rng, u1_ref if host_rng else None,
+                                  BC, Kp)
+        rand_u2 = _uniform_stream(host_rng, u2_ref if host_rng else None,
+                                  BC, Kp)
+        rand_logu = _logu_stream(host_rng, lu_ref if host_rng else None, BC)
+    rand_gumbel = _gumbel_stream(host_rng, g_ref if host_rng else None,
+                                 BC, Dp)
 
     def substep(s, carry):
         x, acc = carry                                     # (BC,Np), (BC,1)
@@ -144,19 +264,11 @@ def _sweep_kernel(*refs, n: int, D: int, S: int, Kp: int, scale: float,
         exact = _bucket(w_row, oh_x)                       # (BC, Dp)
 
         if mh:
-            # stage 1: alias-table minibatch draw, gathers as one-hot GEMMs
-            u_idx, u_alias = rand_mb(s)                    # (BC, Kp)
-            idx = jnp.minimum((u_idx * n).astype(jnp.int32), n - 1)
-            # transposed one-hot (BC, Np, Kp) built directly from an iota
-            # compare so the table gathers are plain _bucket contractions
-            iota_nk = jax.lax.broadcasted_iota(jnp.int32, (BC, Np, Kp), 1)
-            oh_idx_t = (idx[:, None, :] == iota_nk).astype(jnp.float32)
+            # stage 1: local alias minibatch over A[i_s]
             prob_row = _row_select(oh_i, RP)               # (BC, Np)
             alias_row = _row_select(oh_i, RA)
-            p_g = _bucket(prob_row, oh_idx_t)              # (BC, Kp)
-            a_g = _bucket(alias_row, oh_idx_t)
-            j = jnp.where(u_alias < p_g, idx,
-                          a_g.astype(jnp.int32))           # (BC, Kp)
+            j = _alias_row_draw(rand_u1(s), rand_u2(s), prob_row,
+                                alias_row, n)              # (BC, Kp)
             b_s = b_ref[:, pl.ds(s, 1)]                    # (BC, 1)
             iota_k = jax.lax.broadcasted_iota(jnp.int32, (BC, Kp), 1)
             w_k = scale * (iota_k < b_s).astype(jnp.float32)
@@ -188,11 +300,191 @@ def _sweep_kernel(*refs, n: int, D: int, S: int, Kp: int, scale: float,
         x = jnp.where(iota_n == i_s, new_v, x)
         return x, acc
 
-    x, acc = jax.lax.fori_loop(
-        0, S, substep, (x_ref[...], jnp.zeros((BC, 1), jnp.int32)))
+    x, acc = _run_substeps(
+        S, substep, (x_ref[...], jnp.zeros((BC, 1), jnp.int32)))
     xo_ref[...] = x
     acc_ref[...] = jnp.broadcast_to(acc, (BC, Dp))
 
+
+# ---------------------------------------------------------------------------
+# MIN-Gibbs kernel (Algorithm 2: D independent global minibatches per
+# sub-step, cached eps in the VMEM carry, no MH accept)
+# ---------------------------------------------------------------------------
+
+def _min_gibbs_kernel(*refs, n: int, D: int, S: int, Kp: int,
+                      lscale: float, host_rng: bool):
+    if host_rng:
+        (x_ref, np_ref, na_ref, rp_ref, ra_ref, i_ref, b_ref, un_ref,
+         una_ref, ur_ref, ura_ref, g_ref, c_ref, xo_ref, co_ref) = refs
+    else:  # pragma: no cover - TPU-compiled path
+        (x_ref, np_ref, na_ref, rp_ref, ra_ref, i_ref, b_ref, c_ref,
+         seed_ref, xo_ref, co_ref) = refs
+
+    BC, Np = x_ref.shape
+    Dp = co_ref.shape[1]
+    DK = D * Kp                        # D candidate blocks of Kp draw lanes
+    RP = rp_ref[...]
+    RA = ra_ref[...].astype(jnp.float32)
+    nprob = jnp.broadcast_to(np_ref[0:1, :], (BC, Np))
+    nalias = jnp.broadcast_to(na_ref[0:1, :], (BC, Np)).astype(jnp.float32)
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (BC, Np), 1)
+    iota_d = jax.lax.broadcasted_iota(jnp.int32, (BC, Dp), 1)
+    lane_pad = iota_d >= D
+    # static lane -> (candidate, draw) decomposition of the DK draw lanes
+    ucand = jax.lax.broadcasted_iota(
+        jnp.int32, (BC, D, Kp), 1).reshape(BC, DK)
+    klane = jax.lax.broadcasted_iota(
+        jnp.int32, (BC, D, Kp), 2).reshape(BC, DK)
+    iota_dl = jax.lax.broadcasted_iota(jnp.int32, (BC, Dp, DK), 1)
+    oh_cand_t = (ucand[:, None, :] == iota_dl).astype(jnp.float32)
+    iota_ld = jax.lax.broadcasted_iota(jnp.int32, (BC, DK, Dp), 2)
+    oh_cand = (ucand[:, :, None] == iota_ld).astype(jnp.float32)
+    if not host_rng:  # pragma: no cover - TPU-compiled path
+        pltpu.prng_seed(seed_ref[0], pl.program_id(0))
+    rand_un = _uniform_stream(host_rng, un_ref if host_rng else None,
+                              BC, DK)
+    rand_una = _uniform_stream(host_rng, una_ref if host_rng else None,
+                               BC, DK)
+    rand_ur = _uniform_stream(host_rng, ur_ref if host_rng else None,
+                              BC, DK)
+    rand_ura = _uniform_stream(host_rng, ura_ref if host_rng else None,
+                               BC, DK)
+    rand_gumbel = _gumbel_stream(host_rng, g_ref if host_rng else None,
+                                 BC, Dp)
+
+    def substep(s, carry):
+        x, cache = carry                                   # (BC,Np), (BC,1)
+        i_s = i_ref[:, pl.ds(s, 1)]                        # (BC, 1)
+        # D independent global minibatches, one per candidate value: the
+        # candidate-u block occupies lanes [u*Kp, (u+1)*Kp)
+        a, b, oh_a, oh_b = _pair_draw(
+            rand_un(s), rand_una(s), rand_ur(s), rand_ura(s),
+            nprob, nalias, RP, RA, n)                      # (BC, DK)
+        x_f = x.astype(jnp.float32)
+        xa = _gather_state(oh_a, x_f)
+        xb = _gather_state(oh_b, x_f)
+        # candidate substitution: endpoints hitting i_s read value u
+        xa = jnp.where(a == i_s, ucand, xa)
+        xb = jnp.where(b == i_s, ucand, xb)
+        b_s = b_ref[:, s, :].astype(jnp.float32)           # (BC, Dp)
+        b_l = _bucket(b_s, oh_cand_t).astype(jnp.int32)    # per-lane B_u
+        matchv = ((xa == xb) & (klane < b_l)).astype(jnp.float32)
+        cnt = _bucket(matchv, oh_cand)                     # (BC, Dp)
+        eps = lscale * cnt
+        xi = jnp.sum(jnp.where(iota_n == i_s, x, 0), axis=1,
+                     keepdims=True)                        # (BC, 1)
+        eps = jnp.where(iota_d == xi, cache, eps)  # Alg 2: eps_{x(i)}<-cache
+        scores = jnp.where(lane_pad, _NEG, eps + rand_gumbel(s))
+        v = _argmax_lanes(scores, iota_d, Dp)              # (BC, 1)
+        cache = _pick_lane(eps, iota_d, v)
+        x = jnp.where(iota_n == i_s, v, x)
+        return x, cache
+
+    x, cache = _run_substeps(S, substep, (x_ref[...], c_ref[:, :1]))
+    xo_ref[...] = x
+    co_ref[...] = jnp.broadcast_to(cache, (BC, Dp))
+
+
+# ---------------------------------------------------------------------------
+# DoubleMIN kernel (Algorithm 5: MGPMH proposal + second global minibatch
+# in the accept test, cached xi_x in the VMEM carry)
+# ---------------------------------------------------------------------------
+
+def _double_min_kernel(*refs, n: int, D: int, S: int, K1p: int, K2p: int,
+                       scale1: float, lscale2: float, host_rng: bool):
+    if host_rng:
+        (x_ref, rp_ref, ra_ref, np_ref, na_ref, i_ref, b1_ref, u1_ref,
+         u2_ref, g_ref, b2_ref, vn_ref, vna_ref, vr_ref, vra_ref, lu_ref,
+         c_ref, xo_ref, co_ref, acc_ref) = refs
+    else:  # pragma: no cover - TPU-compiled path
+        (x_ref, rp_ref, ra_ref, np_ref, na_ref, i_ref, b1_ref, b2_ref,
+         c_ref, seed_ref, xo_ref, co_ref, acc_ref) = refs
+
+    BC, Np = x_ref.shape
+    Dp = co_ref.shape[1]
+    RP = rp_ref[...]
+    RA = ra_ref[...].astype(jnp.float32)
+    nprob = jnp.broadcast_to(np_ref[0:1, :], (BC, Np))
+    nalias = jnp.broadcast_to(na_ref[0:1, :], (BC, Np)).astype(jnp.float32)
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (BC, Np), 1)
+    iota_d = jax.lax.broadcasted_iota(jnp.int32, (BC, Dp), 1)
+    iota_k1 = jax.lax.broadcasted_iota(jnp.int32, (BC, K1p), 1)
+    iota_k2 = jax.lax.broadcasted_iota(jnp.int32, (BC, K2p), 1)
+    lane_pad = iota_d >= D
+    if not host_rng:  # pragma: no cover - TPU-compiled path
+        pltpu.prng_seed(seed_ref[0], pl.program_id(0))
+    rand_u1 = _uniform_stream(host_rng, u1_ref if host_rng else None,
+                              BC, K1p)
+    rand_u2 = _uniform_stream(host_rng, u2_ref if host_rng else None,
+                              BC, K1p)
+    rand_gumbel = _gumbel_stream(host_rng, g_ref if host_rng else None,
+                                 BC, Dp)
+    rand_vn = _uniform_stream(host_rng, vn_ref if host_rng else None,
+                              BC, K2p)
+    rand_vna = _uniform_stream(host_rng, vna_ref if host_rng else None,
+                               BC, K2p)
+    rand_vr = _uniform_stream(host_rng, vr_ref if host_rng else None,
+                              BC, K2p)
+    rand_vra = _uniform_stream(host_rng, vra_ref if host_rng else None,
+                               BC, K2p)
+    rand_logu = _logu_stream(host_rng, lu_ref if host_rng else None, BC)
+
+    def substep(s, carry):
+        x, cache, acc = carry                    # (BC,Np), (BC,1), (BC,1)
+        i_s = i_ref[:, pl.ds(s, 1)]                        # (BC, 1)
+        oh_i = (iota_n == i_s).astype(jnp.float32)
+        # MGPMH proposal: local alias minibatch -> bucket energies.  The
+        # scale is applied to the exact integer counts so the values are
+        # bit-identical to the oracle's ``scale1 * count``.
+        prob_row = _row_select(oh_i, RP)
+        alias_row = _row_select(oh_i, RA)
+        j = _alias_row_draw(rand_u1(s), rand_u2(s), prob_row, alias_row, n)
+        b1_s = b1_ref[:, pl.ds(s, 1)]                      # (BC, 1)
+        w_k = (iota_k1 < b1_s).astype(jnp.float32)
+        iota_kn = jax.lax.broadcasted_iota(jnp.int32, (BC, K1p, Np), 2)
+        oh_j = (j[:, :, None] == iota_kn).astype(jnp.float32)
+        cnt = _bucket(w_k, oh_j)                           # (BC, Np)
+        iota_nd = jax.lax.broadcasted_iota(jnp.int32, (BC, Np, Dp), 2)
+        oh_x = (x[:, :, None] == iota_nd).astype(jnp.float32)
+        eps = scale1 * _bucket(cnt, oh_x)                  # (BC, Dp)
+        scores = jnp.where(lane_pad, _NEG, eps + rand_gumbel(s))
+        v = _argmax_lanes(scores, iota_d, Dp)              # (BC, 1)
+        # second (global) minibatch evaluated at y = x[i_s <- v]
+        a, b, oh_a, oh_b = _pair_draw(
+            rand_vn(s), rand_vna(s), rand_vr(s), rand_vra(s),
+            nprob, nalias, RP, RA, n)                      # (BC, K2p)
+        x_f = x.astype(jnp.float32)
+        ya = _gather_state(oh_a, x_f)
+        yb = _gather_state(oh_b, x_f)
+        ya = jnp.where(a == i_s, v, ya)
+        yb = jnp.where(b == i_s, v, yb)
+        b2_s = b2_ref[:, pl.ds(s, 1)]                      # (BC, 1)
+        m = jnp.sum(((ya == yb) & (iota_k2 < b2_s)).astype(jnp.float32),
+                    axis=1, keepdims=True)
+        xi_y = lscale2 * m                                 # (BC, 1)
+        # MH accept against the cached xi_x (no exact pass anywhere)
+        xi = jnp.sum(jnp.where(iota_n == i_s, x, 0), axis=1,
+                     keepdims=True)
+        log_a = ((xi_y - cache)
+                 + (_pick_lane(eps, iota_d, xi) - _pick_lane(eps, iota_d, v)))
+        accept = rand_logu(s) < log_a                      # (BC, 1)
+        new_v = jnp.where(accept, v, xi)
+        x = jnp.where(iota_n == i_s, new_v, x)
+        cache = jnp.where(accept, xi_y, cache)
+        acc = acc + accept.astype(jnp.int32)
+        return x, cache, acc
+
+    x, cache, acc = _run_substeps(
+        S, substep,
+        (x_ref[...], c_ref[:, :1], jnp.zeros((BC, 1), jnp.int32)))
+    xo_ref[...] = x
+    co_ref[...] = jnp.broadcast_to(cache, (BC, Dp))
+    acc_ref[...] = jnp.broadcast_to(acc, (BC, Dp))
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
 
 def _grid_specs(BC, shapes):
     """BlockSpecs taking the ci-th chain block of each (C, ...) input and
@@ -306,3 +598,179 @@ def gibbs_sweep_pallas(x, W, i_sites, gumbel, *, n: int, D: int, S: int,
         interpret=interpret,
     )(x, W.astype(jnp.float32), i_sites.astype(jnp.int32),
       gumbel.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n", "D", "S", "lscale", "bc", "interpret"))
+def min_gibbs_sweep_pallas(x, node_prob, node_alias, row_prob, row_alias,
+                           i_sites, B, u_node, u_nacc, u_row, u_racc,
+                           gumbel, cache, *, n: int, D: int, S: int,
+                           lscale: float, bc: int = 8,
+                           interpret: bool = True):
+    """Fused S-site MIN-Gibbs sweep; pre-padded inputs (see
+    ops.min_gibbs_sweep).
+
+    x (C, Np) i32; node_prob/node_alias (8, Np) replicated rows;
+    row_prob/row_alias (Np, Np); i_sites (C, Sp); B (C, Sp', Dp) i32;
+    u_node/u_nacc/u_row/u_racc (C, Sp', D*Kp) f32 — candidate u's draws in
+    lanes [u*Kp, (u+1)*Kp); gumbel (C, Sp', Dp) f32; cache (C, Dp) f32
+    (lane-broadcast).  Returns (x_out (C, Np) i32, cache_out (C, Dp) f32 —
+    value broadcast over lanes).
+    """
+    C, Np = x.shape
+    DK = u_node.shape[-1]
+    Kp = DK // D
+    Dp = gumbel.shape[-1]
+    ins = [(x.shape, True), (node_prob.shape, False),
+           (node_alias.shape, False), (row_prob.shape, False),
+           (row_alias.shape, False), (i_sites.shape, True), (B.shape, True),
+           (u_node.shape, True), (u_nacc.shape, True), (u_row.shape, True),
+           (u_racc.shape, True), (gumbel.shape, True), (cache.shape, True)]
+    kernel = functools.partial(_min_gibbs_kernel, n=n, D=D, S=S, Kp=Kp,
+                               lscale=lscale, host_rng=True)
+    return pl.pallas_call(
+        kernel,
+        grid=(C // bc,),
+        in_specs=_grid_specs(bc, ins),
+        out_specs=[pl.BlockSpec((bc, Np), lambda ci: (ci, 0)),
+                   pl.BlockSpec((bc, Dp), lambda ci: (ci, 0))],
+        out_shape=[jax.ShapeDtypeStruct((C, Np), jnp.int32),
+                   jax.ShapeDtypeStruct((C, Dp), jnp.float32)],
+        interpret=interpret,
+    )(x, node_prob.astype(jnp.float32), node_alias.astype(jnp.int32),
+      row_prob.astype(jnp.float32), row_alias.astype(jnp.int32),
+      i_sites.astype(jnp.int32), B.astype(jnp.int32),
+      u_node.astype(jnp.float32), u_nacc.astype(jnp.float32),
+      u_row.astype(jnp.float32), u_racc.astype(jnp.float32),
+      gumbel.astype(jnp.float32), cache.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n", "D", "S", "Kp", "Dp", "lscale", "bc"))
+def min_gibbs_sweep_pallas_rng(x, node_prob, node_alias, row_prob, row_alias,
+                               i_sites, B, cache, seed, *, n: int, D: int,
+                               S: int, Kp: int, Dp: int, lscale: float,
+                               bc: int = 8):
+    """TPU-only MIN-Gibbs variant with in-kernel PRNG: the four per-draw
+    uniform streams — the O(C·S·D·lam) buffers that block paper-scale
+    lambda — never exist in HBM; only the O(C·S·D) Poisson totals ``B``
+    stay host-drawn.  ``seed`` is a (1,) int32; otherwise the pre-padded
+    contract of ``min_gibbs_sweep_pallas``.  TPU-compiled-only.
+    """
+    if pltpu is None:  # pragma: no cover
+        raise NotImplementedError("in-kernel PRNG requires pallas TPU")
+    C, Np = x.shape
+    ins = [(x.shape, True), (node_prob.shape, False),
+           (node_alias.shape, False), (row_prob.shape, False),
+           (row_alias.shape, False), (i_sites.shape, True), (B.shape, True),
+           (cache.shape, True)]
+    kernel = functools.partial(_min_gibbs_kernel, n=n, D=D, S=S, Kp=Kp,
+                               lscale=lscale, host_rng=False)
+    return pl.pallas_call(
+        kernel,
+        grid=(C // bc,),
+        in_specs=_grid_specs(bc, ins)
+        + [pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=[pl.BlockSpec((bc, Np), lambda ci: (ci, 0)),
+                   pl.BlockSpec((bc, Dp), lambda ci: (ci, 0))],
+        out_shape=[jax.ShapeDtypeStruct((C, Np), jnp.int32),
+                   jax.ShapeDtypeStruct((C, Dp), jnp.float32)],
+        interpret=False,
+    )(x, node_prob.astype(jnp.float32), node_alias.astype(jnp.int32),
+      row_prob.astype(jnp.float32), row_alias.astype(jnp.int32),
+      i_sites.astype(jnp.int32), B.astype(jnp.int32),
+      cache.astype(jnp.float32), seed.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n", "D", "S", "scale1", "lscale2", "bc", "interpret"))
+def double_min_sweep_pallas(x, row_prob, row_alias, node_prob, node_alias,
+                            i_sites, B1, u_idx, u_alias, gumbel, B2, u_node,
+                            u_nacc, u_row, u_racc, logu, cache, *, n: int,
+                            D: int, S: int, scale1: float, lscale2: float,
+                            bc: int = 8, interpret: bool = True):
+    """Fused S-site DoubleMIN sweep; pre-padded inputs (see
+    ops.double_min_sweep).
+
+    x (C, Np) i32; row_prob/row_alias (Np, Np); node_prob/node_alias
+    (8, Np) replicated rows; i_sites/B1/B2/logu (C, Sp); u_idx/u_alias
+    (C, Sp', K1p) f32; u_node/u_nacc/u_row/u_racc (C, Sp', K2p) f32;
+    gumbel (C, Sp', Dp) f32; cache (C, Dp) f32 (lane-broadcast).
+    Returns (x_out (C, Np) i32, cache_out (C, Dp) f32, accepts (C, Dp)
+    i32 — scalars broadcast over lanes).
+    """
+    C, Np = x.shape
+    K1p = u_idx.shape[-1]
+    K2p = u_node.shape[-1]
+    Dp = gumbel.shape[-1]
+    ins = [(x.shape, True), (row_prob.shape, False),
+           (row_alias.shape, False), (node_prob.shape, False),
+           (node_alias.shape, False), (i_sites.shape, True),
+           (B1.shape, True), (u_idx.shape, True), (u_alias.shape, True),
+           (gumbel.shape, True), (B2.shape, True), (u_node.shape, True),
+           (u_nacc.shape, True), (u_row.shape, True), (u_racc.shape, True),
+           (logu.shape, True), (cache.shape, True)]
+    kernel = functools.partial(_double_min_kernel, n=n, D=D, S=S, K1p=K1p,
+                               K2p=K2p, scale1=scale1, lscale2=lscale2,
+                               host_rng=True)
+    return pl.pallas_call(
+        kernel,
+        grid=(C // bc,),
+        in_specs=_grid_specs(bc, ins),
+        out_specs=[pl.BlockSpec((bc, Np), lambda ci: (ci, 0)),
+                   pl.BlockSpec((bc, Dp), lambda ci: (ci, 0)),
+                   pl.BlockSpec((bc, Dp), lambda ci: (ci, 0))],
+        out_shape=[jax.ShapeDtypeStruct((C, Np), jnp.int32),
+                   jax.ShapeDtypeStruct((C, Dp), jnp.float32),
+                   jax.ShapeDtypeStruct((C, Dp), jnp.int32)],
+        interpret=interpret,
+    )(x, row_prob.astype(jnp.float32), row_alias.astype(jnp.int32),
+      node_prob.astype(jnp.float32), node_alias.astype(jnp.int32),
+      i_sites.astype(jnp.int32), B1.astype(jnp.int32),
+      u_idx.astype(jnp.float32), u_alias.astype(jnp.float32),
+      gumbel.astype(jnp.float32), B2.astype(jnp.int32),
+      u_node.astype(jnp.float32), u_nacc.astype(jnp.float32),
+      u_row.astype(jnp.float32), u_racc.astype(jnp.float32),
+      logu.astype(jnp.float32), cache.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n", "D", "S", "K1p", "K2p", "Dp", "scale1", "lscale2", "bc"))
+def double_min_sweep_pallas_rng(x, row_prob, row_alias, node_prob,
+                                node_alias, i_sites, B1, B2, cache, seed, *,
+                                n: int, D: int, S: int, K1p: int, K2p: int,
+                                Dp: int, scale1: float, lscale2: float,
+                                bc: int = 8):
+    """TPU-only DoubleMIN variant with in-kernel PRNG: the proposal and
+    second-batch uniform streams — O(C·S·lam1) + O(C·S·lam2) — never exist
+    in HBM; only the (C, Sp) Poisson totals stay host-drawn.  ``seed`` is a
+    (1,) int32; otherwise the pre-padded contract of
+    ``double_min_sweep_pallas``.  TPU-compiled-only.
+    """
+    if pltpu is None:  # pragma: no cover
+        raise NotImplementedError("in-kernel PRNG requires pallas TPU")
+    C, Np = x.shape
+    ins = [(x.shape, True), (row_prob.shape, False),
+           (row_alias.shape, False), (node_prob.shape, False),
+           (node_alias.shape, False), (i_sites.shape, True),
+           (B1.shape, True), (B2.shape, True), (cache.shape, True)]
+    kernel = functools.partial(_double_min_kernel, n=n, D=D, S=S, K1p=K1p,
+                               K2p=K2p, scale1=scale1, lscale2=lscale2,
+                               host_rng=False)
+    return pl.pallas_call(
+        kernel,
+        grid=(C // bc,),
+        in_specs=_grid_specs(bc, ins)
+        + [pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=[pl.BlockSpec((bc, Np), lambda ci: (ci, 0)),
+                   pl.BlockSpec((bc, Dp), lambda ci: (ci, 0)),
+                   pl.BlockSpec((bc, Dp), lambda ci: (ci, 0))],
+        out_shape=[jax.ShapeDtypeStruct((C, Np), jnp.int32),
+                   jax.ShapeDtypeStruct((C, Dp), jnp.float32),
+                   jax.ShapeDtypeStruct((C, Dp), jnp.int32)],
+        interpret=False,
+    )(x, row_prob.astype(jnp.float32), row_alias.astype(jnp.int32),
+      node_prob.astype(jnp.float32), node_alias.astype(jnp.int32),
+      i_sites.astype(jnp.int32), B1.astype(jnp.int32),
+      B2.astype(jnp.int32), cache.astype(jnp.float32),
+      seed.astype(jnp.int32))

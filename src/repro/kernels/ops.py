@@ -10,10 +10,13 @@ import jax.numpy as jnp
 
 from .minibatch_energy import bucket_energy_pallas
 from .flash_attention import flash_attention_pallas
-from .fused_sweep import mgpmh_sweep_pallas, gibbs_sweep_pallas
-from .ref import bucket_energy_ref, mgpmh_sweep_ref, gibbs_sweep_ref
+from .fused_sweep import (mgpmh_sweep_pallas, gibbs_sweep_pallas,
+                          min_gibbs_sweep_pallas, double_min_sweep_pallas)
+from .ref import (bucket_energy_ref, mgpmh_sweep_ref, gibbs_sweep_ref,
+                  min_gibbs_sweep_ref, double_min_sweep_ref)
 
-__all__ = ["bucket_energy", "flash_attention", "mgpmh_sweep", "gibbs_sweep"]
+__all__ = ["bucket_energy", "flash_attention", "mgpmh_sweep", "gibbs_sweep",
+           "min_gibbs_sweep", "double_min_sweep"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -152,6 +155,126 @@ def gibbs_sweep(x, W, i_sites, gumbel, *, D: int, impl: str = "auto"):
         _pad3(gumbel, Cp, Dp), n=n, D=D, S=S,
         interpret=jax.default_backend() != "tpu")
     return out_x[:C, :n]
+
+
+def _pad_cand_streams(streams, Cp, D, Kp):
+    """Pad (C, S, D, K) per-candidate draw streams to (Cp, S8, D*Kp): draws
+    to Kp lanes per candidate block, then blocks flattened onto the lane
+    axis (candidate u occupies lanes [u*Kp, (u+1)*Kp))."""
+    out = []
+    for u in streams:
+        C, S, D_, K = u.shape
+        if K != Kp:
+            u = jnp.pad(u, ((0, 0), (0, 0), (0, 0), (0, Kp - K)))
+        out.append(_pad3(u.reshape(C, S, D_ * Kp), Cp, D_ * Kp))
+    return out
+
+
+def _pad_cache(cache, Cp, Dp):
+    """(C,) per-chain scalar cache -> (Cp, Dp) lane-broadcast block."""
+    c = jnp.broadcast_to(cache[:, None], (cache.shape[0], Dp))
+    C = cache.shape[0]
+    if Cp != C:
+        c = jnp.pad(c, ((0, Cp - C), (0, 0)))
+    return c
+
+
+def _pad_node_table(t, n, Np):
+    """(n,) node alias-table vector -> (8, Np) replicated-row block (the
+    kernel reads row 0; 8 sublanes keep the f32 tile shape)."""
+    if Np != n:
+        t = jnp.pad(t, (0, Np - n))
+    return jnp.broadcast_to(t[None, :], (8, Np))
+
+
+@functools.partial(jax.jit, static_argnames=("D", "lscale", "impl"))
+def min_gibbs_sweep(x, node_prob, node_alias, row_prob, row_alias, i_sites,
+                    B, u_node, u_nacc, u_row, u_racc, gumbel, cache, *,
+                    D: int, lscale: float, impl: str = "auto"):
+    """S fused sequential MIN-Gibbs site updates per chain with the cached
+    energy estimate threaded through (see kernels/ref.py
+    ``min_gibbs_sweep_ref`` for exact semantics).
+
+    x (C, n) i32; node_prob/node_alias (n,); row_prob/row_alias (n, n);
+    i_sites (C, S); B (C, S, D) i32; u_node/u_nacc/u_row/u_racc
+    (C, S, D, K) f32 uniforms; gumbel (C, S, D) f32; cache (C,) f32.
+    ``lscale`` = log1p(Psi/lam).  impl as in mgpmh_sweep.
+    Returns (x_out (C, n) i32, cache_out (C,) f32).
+
+    Padding: chains to 8, sites to 128 lanes with x = D, per-candidate draw
+    blocks to Kp=128-multiples with zero uniforms (masked by B), candidate
+    blocks flattened onto one D*Kp lane axis.
+    """
+    if impl not in ("auto", "pallas", "jnp"):
+        raise ValueError(f"unknown impl: {impl!r}")
+    if impl == "jnp" or (impl == "auto" and jax.default_backend() != "tpu"):
+        return min_gibbs_sweep_ref(x, node_prob, node_alias, row_prob,
+                                   row_alias, i_sites, B, u_node, u_nacc,
+                                   u_row, u_racc, gumbel, cache, D, lscale)
+    C, n = x.shape
+    S = i_sites.shape[1]
+    K = u_node.shape[-1]
+    Cp, Np, Sp, Dp = _sweep_pads(C, n, S, D)
+    Kp = max(128, _round_up(K, 128))
+    xp = x
+    if (Cp, Np) != (C, n):
+        xp = jnp.pad(x, ((0, Cp - C), (0, Np - n)), constant_values=D)
+    un, una, ur, ura = _pad_cand_streams([u_node, u_nacc, u_row, u_racc],
+                                         Cp, D, Kp)
+    out_x, out_cache = min_gibbs_sweep_pallas(
+        xp, _pad_node_table(node_prob, n, Np),
+        _pad_node_table(node_alias, n, Np), _pad_square(row_prob, Np),
+        _pad_square(row_alias, Np), _pad2(i_sites, Cp, Sp),
+        _pad3(B, Cp, Dp), un, una, ur, ura, _pad3(gumbel, Cp, Dp),
+        _pad_cache(cache, Cp, Dp), n=n, D=D, S=S, lscale=lscale,
+        interpret=jax.default_backend() != "tpu")
+    return out_x[:C, :n], out_cache[:C, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("D", "scale1", "lscale2",
+                                             "impl"))
+def double_min_sweep(x, row_prob, row_alias, node_prob, node_alias, i_sites,
+                     B1, u_idx, u_alias, gumbel, B2, u_node, u_nacc, u_row,
+                     u_racc, logu, cache, *, D: int, scale1: float,
+                     lscale2: float, impl: str = "auto"):
+    """S fused sequential DoubleMIN site updates per chain with the cached
+    xi_x threaded through (see kernels/ref.py ``double_min_sweep_ref``).
+
+    x (C, n) i32; row/node tables as in min_gibbs_sweep; i_sites/B1/B2/logu
+    (C, S); u_idx/u_alias (C, S, K1) f32; u_node/u_nacc/u_row/u_racc
+    (C, S, K2) f32; gumbel (C, S, D) f32; cache (C,) f32.
+    ``scale1`` = L/lam1, ``lscale2`` = log1p(Psi/lam2).  impl and padding
+    as in mgpmh_sweep.  Returns (x_out (C, n) i32, cache_out (C,) f32,
+    accepts (C,) i32).
+    """
+    if impl not in ("auto", "pallas", "jnp"):
+        raise ValueError(f"unknown impl: {impl!r}")
+    if impl == "jnp" or (impl == "auto" and jax.default_backend() != "tpu"):
+        return double_min_sweep_ref(x, row_prob, row_alias, node_prob,
+                                    node_alias, i_sites, B1, u_idx, u_alias,
+                                    gumbel, B2, u_node, u_nacc, u_row,
+                                    u_racc, logu, cache, D, scale1, lscale2)
+    C, n = x.shape
+    S = i_sites.shape[1]
+    K1 = u_idx.shape[-1]
+    K2 = u_node.shape[-1]
+    Cp, Np, Sp, Dp = _sweep_pads(C, n, S, D)
+    K1p = max(128, _round_up(K1, 128))
+    K2p = max(128, _round_up(K2, 128))
+    xp = x
+    if (Cp, Np) != (C, n):
+        xp = jnp.pad(x, ((0, Cp - C), (0, Np - n)), constant_values=D)
+    out_x, out_cache, out_acc = double_min_sweep_pallas(
+        xp, _pad_square(row_prob, Np), _pad_square(row_alias, Np),
+        _pad_node_table(node_prob, n, Np),
+        _pad_node_table(node_alias, n, Np), _pad2(i_sites, Cp, Sp),
+        _pad2(B1, Cp, Sp), _pad3(u_idx, Cp, K1p), _pad3(u_alias, Cp, K1p),
+        _pad3(gumbel, Cp, Dp), _pad2(B2, Cp, Sp), _pad3(u_node, Cp, K2p),
+        _pad3(u_nacc, Cp, K2p), _pad3(u_row, Cp, K2p),
+        _pad3(u_racc, Cp, K2p), _pad2(logu, Cp, Sp),
+        _pad_cache(cache, Cp, Dp), n=n, D=D, S=S, scale1=scale1,
+        lscale2=lscale2, interpret=jax.default_backend() != "tpu")
+    return out_x[:C, :n], out_cache[:C, 0], out_acc[:C, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("window", "causal"))

@@ -1,18 +1,28 @@
 """Pure-jnp oracles for the Pallas kernels (the allclose reference).
 
-``mgpmh_sweep_ref`` / ``gibbs_sweep_ref`` are the semantic definition of the
-fused multi-site sweep kernel (kernels/fused_sweep.py): S sequentially
-composed single-site updates per call, consuming *pre-drawn* uniforms so the
-kernel and the oracle make bit-identical random choices and the resulting
-states can be compared exactly (up to float-reduction-order accept flips of
-measure ~0).
+``mgpmh_sweep_ref`` / ``gibbs_sweep_ref`` / ``min_gibbs_sweep_ref`` /
+``double_min_sweep_ref`` are the semantic definition of the fused multi-site
+sweep kernels (kernels/fused_sweep.py): S sequentially composed single-site
+updates per call, consuming *pre-drawn* uniforms so the kernel and the
+oracle make bit-identical random choices and the resulting states can be
+compared exactly (up to float-reduction-order accept flips of measure ~0).
+
+Global-minibatch factor draws (MIN-Gibbs, DoubleMIN's second batch) use the
+*two-stage* decomposition p(phi = {a, b}) = p(a) p(b | a) with
+``p(a) = L_a / 2Psi`` (a node alias table over the row sums) and
+``p(b | a) = W_ab / L_a`` (the per-row alias tables the graph already
+carries) — the product is ``W_ab / Psi = M_phi / Psi``, identical in
+distribution to the flat factor-alias draw of ``estimators.
+draw_global_minibatch``, but realized entirely with (n,)-indexed tables so
+the kernel never needs the O(n^2)-entry flat factor table in VMEM.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["bucket_energy_ref", "mgpmh_sweep_ref", "gibbs_sweep_ref"]
+__all__ = ["bucket_energy_ref", "mgpmh_sweep_ref", "gibbs_sweep_ref",
+           "min_gibbs_sweep_ref", "double_min_sweep_ref"]
 
 
 def bucket_energy_ref(w: jax.Array, v: jax.Array, D: int) -> jax.Array:
@@ -92,6 +102,131 @@ def mgpmh_sweep_ref(x, W, row_prob, row_alias, i_sites, B, u_idx, u_alias,
     (x, acc), _ = jax.lax.scan(substep, (x, jnp.zeros((C,), jnp.int32)),
                                jnp.arange(S))
     return x, acc
+
+
+def _pair_pick(node_prob, node_alias, row_prob, row_alias, u_node, u_nacc,
+               u_row, u_racc, n):
+    """Two-stage global factor draw (see module docstring): endpoint ``a``
+    from the node alias table (p_a = L_a / 2Psi), endpoint ``b`` from row
+    ``a``'s alias table (p_b = W_ab / L_a).  All uniforms (..., K)-shaped;
+    returns endpoint arrays ``(a, b)`` — identical arithmetic to the
+    in-kernel draw in fused_sweep.py."""
+    idx1 = jnp.minimum((u_node * n).astype(jnp.int32), n - 1)
+    a = jnp.where(u_nacc < node_prob[idx1], idx1,
+                  node_alias[idx1]).astype(jnp.int32)
+    idx2 = jnp.minimum((u_row * n).astype(jnp.int32), n - 1)
+    b = jnp.where(u_racc < row_prob[a, idx2], idx2,
+                  row_alias[a, idx2]).astype(jnp.int32)
+    return a, b
+
+
+def min_gibbs_sweep_ref(x, node_prob, node_alias, row_prob, row_alias,
+                        i_sites, B, u_node, u_nacc, u_row, u_racc, gumbel,
+                        cache, D: int, lscale: float):
+    """S sequentially composed MIN-Gibbs site updates (Algorithm 2 per
+    sub-step), the cached energy estimate threaded through the scan carry.
+
+    Per sub-step s (all chains c in parallel, sites sequential in s):
+      {a_k, b_k} ~ p_phi = M_phi/Psi   two-stage draw, per candidate u
+      eps_u = lscale * #{k < B_u : x_u[a_k] = x_u[b_k]},  x_u = x[i_s <- u]
+      eps_{x(i)} <- cache              (Alg 2's augmented-state slot)
+      v = argmax_u eps_u + gumbel_u;  x[i_s] <- v;  cache <- eps_v.
+
+    x: (C, n) int32; node_prob/node_alias: (n,); row_prob/row_alias: (n, n);
+    i_sites: (C, S); B: (C, S, D) int32 per-candidate Poisson totals;
+    u_node/u_nacc/u_row/u_racc: (C, S, D, K) f32; gumbel: (C, S, D);
+    cache: (C,) f32.  ``lscale`` is log1p(Psi/lam).
+    Returns (x_out (C, n) int32, cache_out (C,) f32).
+    """
+    C, n = x.shape
+    S = i_sites.shape[1]
+    K = u_node.shape[-1]
+    rows = jnp.arange(C)
+    # the factor draws are x-independent: hoist them out of the scan
+    a, b = _pair_pick(node_prob, node_alias, row_prob, row_alias,
+                      u_node, u_nacc, u_row, u_racc, n)   # (C, S, D, K)
+    mask = jnp.arange(K) < B[..., None]                   # (C, S, D, K)
+    u_cand = jnp.arange(D, dtype=jnp.int32)[None, :, None]
+
+    def substep(carry, s):
+        x, cache = carry
+        i = i_sites[:, s]
+        a_s, b_s = a[:, s], b[:, s]                       # (C, D, K)
+        xa = x[rows[:, None, None], a_s]
+        xb = x[rows[:, None, None], b_s]
+        xa = jnp.where(a_s == i[:, None, None], u_cand, xa)
+        xb = jnp.where(b_s == i[:, None, None], u_cand, xb)
+        m = jnp.sum((xa == xb) & mask[:, s], axis=-1).astype(jnp.float32)
+        eps = lscale * m                                  # (C, D)
+        xi = x[rows, i]
+        eps = eps.at[rows, xi].set(cache)
+        v = jnp.argmax(eps + gumbel[:, s], axis=-1).astype(jnp.int32)
+        x = x.at[rows, i].set(v)
+        return (x, eps[rows, v]), None
+
+    (x, cache), _ = jax.lax.scan(substep, (x, cache), jnp.arange(S))
+    return x, cache
+
+
+def double_min_sweep_ref(x, row_prob, row_alias, node_prob, node_alias,
+                         i_sites, B1, u_idx, u_alias, gumbel, B2, u_node,
+                         u_nacc, u_row, u_racc, logu, cache, D: int,
+                         scale1: float, lscale2: float):
+    """S sequentially composed DoubleMIN site updates (Algorithm 5 per
+    sub-step), the cached second-batch estimate xi_x in the scan carry.
+
+    Per sub-step s:
+      j_k  ~ alias(W[i_s]/L_i)        MGPMH proposal minibatch (u_idx/u_alias)
+      eps_u = scale1 * #{k < B1 : x[j_k] = u};  v = argmax_u eps_u + gumbel_u
+      {a_k, b_k} ~ p_phi              second (global) batch, two-stage draw
+      xi_y = lscale2 * #{k < B2 : y[a_k] = y[b_k]},  y = x[i_s <- v]
+      log a = (xi_y - cache) + (eps_{x(i)} - eps_v);  accept iff logu < log a
+      on accept: x <- y, cache <- xi_y.
+
+    x: (C, n) int32; row/node tables as in min_gibbs_sweep_ref; i_sites/B1/
+    B2/logu: (C, S); u_idx/u_alias: (C, S, K1); u_node/u_nacc/u_row/u_racc:
+    (C, S, K2); gumbel: (C, S, D); cache: (C,).  ``scale1`` = L/lam1,
+    ``lscale2`` = log1p(Psi/lam2).
+    Returns (x_out (C, n) int32, cache_out (C,) f32, accepts (C,) int32).
+    """
+    C, n = x.shape
+    S = i_sites.shape[1]
+    K1 = u_idx.shape[-1]
+    K2 = u_node.shape[-1]
+    rows = jnp.arange(C)
+    # x-independent draws hoisted: proposal neighbors + second-batch pairs
+    j_all = jax.vmap(
+        lambda i, u1, u2: _alias_pick(row_prob, row_alias, i, u1, u2, n),
+        in_axes=1, out_axes=1)(i_sites, u_idx, u_alias)       # (C, S, K1)
+    w_all = (jnp.arange(K1)[None, None, :]
+             < B1[:, :, None]).astype(jnp.float32)            # (C, S, K1)
+    a, b = _pair_pick(node_prob, node_alias, row_prob, row_alias,
+                      u_node, u_nacc, u_row, u_racc, n)       # (C, S, K2)
+    mask2 = jnp.arange(K2) < B2[:, :, None]
+
+    def substep(carry, s):
+        x, cache, acc = carry
+        i = i_sites[:, s]
+        vals = jnp.take_along_axis(x, j_all[:, s], axis=1)    # (C, K1)
+        eps = scale1 * bucket_energy_ref(w_all[:, s], vals, D)
+        v = jnp.argmax(eps + gumbel[:, s], axis=-1).astype(jnp.int32)
+        xi = x[rows, i]
+        a_s, b_s = a[:, s], b[:, s]
+        ya = x[rows[:, None], a_s]
+        yb = x[rows[:, None], b_s]
+        ya = jnp.where(a_s == i[:, None], v[:, None], ya)
+        yb = jnp.where(b_s == i[:, None], v[:, None], yb)
+        m = jnp.sum((ya == yb) & mask2[:, s], axis=-1).astype(jnp.float32)
+        xi_y = lscale2 * m
+        log_a = (xi_y - cache) + (eps[rows, xi] - eps[rows, v])
+        accept = logu[:, s] < log_a
+        x = x.at[rows, i].set(jnp.where(accept, v, xi))
+        cache = jnp.where(accept, xi_y, cache)
+        return (x, cache, acc + accept.astype(jnp.int32)), None
+
+    (x, cache, acc), _ = jax.lax.scan(
+        substep, (x, cache, jnp.zeros((C,), jnp.int32)), jnp.arange(S))
+    return x, cache, acc
 
 
 def gibbs_sweep_ref(x, W, i_sites, gumbel, D: int):

@@ -13,7 +13,7 @@ Engines and workloads come straight from the registries in
 (the default) shards the graph over the mesh (one psum per sweep, see
 runtime/dist_gibbs.py); ``--backend jnp|pallas|auto`` runs the fused
 single-host schedules, where ``--adaptive`` switches to the telemetry-driven
-``AdaptiveScan`` site-selection schedule (gibbs/mgpmh).  ``--telemetry``
+``AdaptiveScan`` site-selection schedule (any fused engine).  ``--telemetry``
 threads the streaming diagnostics carry through the run and logs mean
 acceptance / max split-R-hat / ESS alongside throughput.  Sampler state
 (chains, caches, rng, running marginals) is a pytree checkpointed/restored
@@ -133,7 +133,7 @@ def main():
                     help="site updates per launch: fused sweep (one psum "
                          "per sweep on the dist backend)")
     ap.add_argument("--adaptive", action="store_true",
-                    help="AdaptiveScan schedule (gibbs/mgpmh, non-dist): "
+                    help="AdaptiveScan schedule (fused engines, non-dist): "
                          "telemetry-driven non-uniform site selection")
     ap.add_argument("--telemetry", action="store_true",
                     help="thread streaming convergence telemetry and log "
@@ -149,9 +149,10 @@ def main():
     if args.adaptive and args.backend == "dist":
         ap.error("--adaptive requires a non-dist backend "
                  "(the selection table is chain-local)")
-    if args.adaptive and args.engine not in ("gibbs", "mgpmh"):
-        ap.error(f"--adaptive supports the gibbs/mgpmh engines, "
-                 f"not {args.engine!r}")
+    if args.adaptive and args.engine not in ("gibbs", "mgpmh", "min-gibbs",
+                                             "doublemin"):
+        ap.error(f"--adaptive supports the gibbs/mgpmh/min-gibbs/doublemin "
+                 f"engines, not {args.engine!r}")
     run(args.config, args.engine, args.steps, args.chains,
         ckpt_dir=args.ckpt_dir, mp_shards=args.mp_shards, sweep=args.sweep,
         backend=args.backend, adaptive=args.adaptive,

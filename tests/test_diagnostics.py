@@ -76,6 +76,41 @@ def test_split_rhat_and_ess_behave():
     assert diag.split_rhat(tel).max() > 2.0
 
 
+def test_lagk_cross_products_match_numpy():
+    """The lag-K ring (default K=8) accumulates exactly the
+    sum_t x_t x_{t-k} products and pair counts, per lag."""
+    rng = np.random.default_rng(4)
+    xs = rng.integers(0, 3, size=(25, 2, 4)).astype(np.int32)
+    tel = _feed(xs, half_at=12)
+    f = xs.astype(np.float64)
+    K = np.asarray(tel.cross).shape[0]
+    assert K == 8
+    for k in range(1, K + 1):
+        np.testing.assert_allclose(np.asarray(tel.cross[k - 1]),
+                                   (f[k:] * f[:-k]).sum(0), rtol=1e-5)
+        assert float(np.asarray(tel.cross_n[k - 1])) == len(xs) - k
+
+
+def test_ess_lag_ring_detects_slow_mixing():
+    """Sticky chains: the initial-sequence ESS (K=8 ring) reports far fewer
+    effective samples than snapshots; the K=1 ring still runs the original
+    geometric special case."""
+    rng = np.random.default_rng(5)
+    T, C, n = 400, 4, 3
+    flips = rng.random((T, C, n)) < 0.08          # sticky binary chains
+    xs = (np.cumsum(flips, axis=0) % 2).astype(np.int32)
+    tel = _feed(xs, half_at=200)
+    ess = diag.ess_per_site(tel)
+    assert np.all(ess > 0) and np.all(ess < 0.5 * T * C)
+    tel1 = telemetry_init(jnp.asarray(xs[0]), half_at=200, lags=1)
+    old = xs[0]
+    for x in xs:
+        tel1 = telemetry_update(tel1, jnp.asarray(old), jnp.asarray(x), 3)
+        old = x
+    ess1 = diag.ess_per_site(tel1)
+    assert np.all(ess1 > 0) and np.all(ess1 < 0.5 * T * C)
+
+
 def test_summarize_fields():
     rng = np.random.default_rng(2)
     xs = rng.integers(0, 3, size=(50, 2, 4)).astype(np.int32)
@@ -240,7 +275,9 @@ def _updates_to_target(eng, key, n_chains, n_iters, n_snapshots, ref,
 def test_adaptive_scan_registry_roundtrip():
     wl = engine.make_workload("hetero-pairs-24")
     sched = AdaptiveScan(sweep_len=8, refresh_every=4)
-    for name in ("gibbs", "mgpmh"):
+    # all four fused-sweep engines take the schedule (the cached-estimator
+    # samplers thread their eps/xi augmented state through the wrapper)
+    for name in ("gibbs", "mgpmh", "min-gibbs", "doublemin"):
         eng = engine.make(name, wl.graph, schedule=sched, backend="jnp")
         assert eng.updates_per_call == 8
         assert "adaptive-scan" in eng.describe()["schedule"]
@@ -252,7 +289,7 @@ def test_adaptive_scan_registry_roundtrip():
         np.testing.assert_allclose(float(st.cdf[-1]), 1.0, rtol=1e-5)
     # unsupported engines reject the schedule; so do bad parameters
     with pytest.raises(ValueError):
-        engine.make("min-gibbs", wl.graph, schedule=sched)
+        engine.make("local-gibbs", wl.graph, schedule=sched)
     with pytest.raises(ValueError):
         AdaptiveScan(uniform_mix=0.0)
 

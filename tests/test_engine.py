@@ -88,7 +88,7 @@ def test_make_errors():
     with pytest.raises(KeyError):
         engine.make("nope", g)
     with pytest.raises(ValueError):
-        engine.make("min-gibbs", g, backend="pallas")   # unsupported backend
+        engine.make("local-gibbs", g, backend="pallas")  # unsupported backend
     with pytest.raises(ValueError):
         engine.make("gibbs", g, backend="dist")         # dist needs mesh
     with pytest.raises(ValueError):

@@ -1,12 +1,16 @@
 """Fused multi-site sweep engine validation.
 
-Three layers:
-  * kernel parity — the fused Pallas sweep kernel (interpret mode on CPU)
-    must make bit-identical decisions to the jnp oracle when fed the same
-    pre-drawn uniforms, across padded/unaligned (C, S, K, D, n) shapes;
+Four layers:
+  * kernel parity — the fused Pallas sweep kernels (interpret mode on CPU)
+    must make bit-identical decisions to their jnp oracles when fed the
+    same pre-drawn uniforms, across padded/unaligned (C, S, K, D, n)
+    shapes — for all four kernels (gibbs, mgpmh, min-gibbs, doublemin);
   * distributional agreement — `make_*_sweep` chains (both impls route
     through exact single-site updates) must converge to the exact
     marginals of enumerable graphs, like the single-site reference;
+  * memory regression — the jnp min-gibbs/doublemin sweeps draw their
+    minibatch streams inside the scan body, so peak temp bytes (XLA
+    memory_analysis) must not scale with sweep length S;
   * integration — `run_marginal_experiment` consumes batched sweeps, and
     the distributed sweep (one psum per sweep) matches exact marginals.
 """
@@ -23,7 +27,8 @@ import pytest
 from repro.core import (engine, make_potts_graph, init_chains, init_state,
                         run_marginal_experiment, ChainState)
 from repro.core.factor_graph import build_alias_table
-from repro.kernels.ops import mgpmh_sweep, gibbs_sweep
+from repro.kernels.ops import (mgpmh_sweep, gibbs_sweep, min_gibbs_sweep,
+                               double_min_sweep)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -41,6 +46,14 @@ def _random_graph_arrays(rng, n):
     for i in range(n):
         rp[i], ra[i] = build_alias_table(A[i])
     return jnp.asarray(A, jnp.float32), jnp.asarray(rp), jnp.asarray(ra)
+
+
+def _random_node_table(rng, n):
+    A = rng.uniform(0.1, 1.0, (n, n))
+    A = (A + A.T) / 2
+    np.fill_diagonal(A, 0)
+    prob, alias = build_alias_table(A.sum(1))
+    return jnp.asarray(prob), jnp.asarray(alias)
 
 
 @pytest.mark.parametrize("C,S,K,D,n", [
@@ -79,6 +92,63 @@ def test_gibbs_sweep_kernel_parity(C, S, D, n):
     xr = gibbs_sweep(x, W, i_sites, g, D=D, impl="jnp")
     xp = gibbs_sweep(x, W, i_sites, g, D=D, impl="pallas")
     np.testing.assert_array_equal(np.asarray(xr), np.asarray(xp))
+
+
+@pytest.mark.parametrize("C,S,K,D,n", [
+    (4, 5, 17, 3, 11),      # everything unaligned
+    (3, 1, 1, 2, 5),        # degenerate sweep
+    (5, 7, 33, 4, 20),
+])
+def test_min_gibbs_sweep_kernel_parity(C, S, K, D, n):
+    """The fused MIN-Gibbs kernel (interpret mode) is bit-identical to the
+    jnp oracle on the host-rng path: same states AND same cached eps."""
+    rng = np.random.default_rng(C * 100 + S * 10 + K + D + n)
+    _, rp, ra = _random_graph_arrays(rng, n)
+    npb, nab = _random_node_table(rng, n)
+    x = jnp.asarray(rng.integers(0, D, (C, n)), jnp.int32)
+    i_sites = jnp.asarray(rng.integers(0, n, (C, S)), jnp.int32)
+    B = jnp.asarray(rng.integers(0, K + 1, (C, S, D)), jnp.int32)
+    u4 = [jnp.asarray(rng.uniform(size=(C, S, D, K)), jnp.float32)
+          for _ in range(4)]
+    g = jnp.asarray(rng.gumbel(size=(C, S, D)), jnp.float32)
+    cache = jnp.asarray(rng.uniform(0, 3, (C,)), jnp.float32)
+    args = (x, npb, nab, rp, ra, i_sites, B, *u4, g, cache)
+    xr, cr = min_gibbs_sweep(*args, D=D, lscale=0.37, impl="jnp")
+    xp, cp = min_gibbs_sweep(*args, D=D, lscale=0.37, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(xr), np.asarray(xp))
+    np.testing.assert_array_equal(np.asarray(cr), np.asarray(cp))
+
+
+@pytest.mark.parametrize("C,S,K1,K2,D,n", [
+    (4, 5, 17, 9, 3, 11),   # everything unaligned
+    (3, 1, 1, 1, 2, 5),     # degenerate sweep
+    (5, 7, 33, 21, 4, 20),
+])
+def test_double_min_sweep_kernel_parity(C, S, K1, K2, D, n):
+    """The fused DoubleMIN kernel (interpret mode) is bit-identical to the
+    jnp oracle: same states, cached xi, and acceptance counts."""
+    rng = np.random.default_rng(C * 100 + S * 10 + K1 + K2 + D + n)
+    _, rp, ra = _random_graph_arrays(rng, n)
+    npb, nab = _random_node_table(rng, n)
+    x = jnp.asarray(rng.integers(0, D, (C, n)), jnp.int32)
+    i_sites = jnp.asarray(rng.integers(0, n, (C, S)), jnp.int32)
+    B1 = jnp.asarray(rng.integers(0, K1 + 1, (C, S)), jnp.int32)
+    u1 = jnp.asarray(rng.uniform(size=(C, S, K1)), jnp.float32)
+    u2 = jnp.asarray(rng.uniform(size=(C, S, K1)), jnp.float32)
+    g = jnp.asarray(rng.gumbel(size=(C, S, D)), jnp.float32)
+    B2 = jnp.asarray(rng.integers(0, K2 + 1, (C, S)), jnp.int32)
+    v4 = [jnp.asarray(rng.uniform(size=(C, S, K2)), jnp.float32)
+          for _ in range(4)]
+    lu = jnp.asarray(np.log(rng.uniform(size=(C, S))), jnp.float32)
+    cache = jnp.asarray(rng.uniform(0, 3, (C,)), jnp.float32)
+    args = (x, rp, ra, npb, nab, i_sites, B1, u1, u2, g, B2, *v4, lu, cache)
+    xr, cr, ar = double_min_sweep(*args, D=D, scale1=0.7, lscale2=0.31,
+                                  impl="jnp")
+    xp, cp, ap = double_min_sweep(*args, D=D, scale1=0.7, lscale2=0.31,
+                                  impl="pallas")
+    np.testing.assert_array_equal(np.asarray(xr), np.asarray(xp))
+    np.testing.assert_array_equal(np.asarray(cr), np.asarray(cp))
+    np.testing.assert_array_equal(np.asarray(ar), np.asarray(ap))
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +195,49 @@ def test_mgpmh_sweep_kernel_impl_marginals():
                         capacity=cap).sweep_fn
     emp = _empirical_sweep_marginals(sweep, g, 600, n_chains=32)
     assert np.abs(emp - _exact_marginals(g)).max() < 0.08
+
+
+def test_min_gibbs_pallas_engine_marginals():
+    """The Pallas-backed MIN-Gibbs engine (interpret mode) is a correct
+    chain — short run, loose tolerance (the interpreter is slow)."""
+    g = make_potts_graph(grid=2, beta=0.8, D=3)
+    eng = engine.make("min-gibbs", g, sweep=8, backend="pallas",
+                      lam=float(2 * g.psi ** 2))
+    emp = _empirical_sweep_marginals(eng.sweep_fn, g, 500, n_chains=32)
+    assert np.abs(emp - _exact_marginals(g)).max() < 0.08
+
+
+def test_double_min_pallas_engine_marginals():
+    g = make_potts_graph(grid=2, beta=0.8, D=3)
+    eng = engine.make("doublemin", g, sweep=8, backend="pallas")
+    emp = _empirical_sweep_marginals(eng.sweep_fn, g, 500, n_chains=32)
+    assert np.abs(emp - _exact_marginals(g)).max() < 0.08
+
+
+# ---------------------------------------------------------------------------
+# memory regression: chunked jnp draw streams
+# ---------------------------------------------------------------------------
+
+def _sweep_temp_bytes(eng, n_chains=8):
+    st = eng.init(jax.random.PRNGKey(0), n_chains)
+    compiled = jax.jit(eng.sweep_fn).lower(st).compile()
+    return int(compiled.memory_analysis().temp_size_in_bytes)
+
+
+@pytest.mark.parametrize("name,params", [
+    ("min-gibbs", dict(lam=64.0, capacity=96)),
+    ("doublemin", dict(lam2=64.0, capacity2=96)),
+])
+def test_jnp_sweep_peak_memory_independent_of_sweep_len(name, params):
+    """The jnp min-gibbs/doublemin sweeps generate their O(lam)-sized draw
+    buffers inside the scan body, so XLA's peak temp allocation must not
+    scale with S (pre-chunking it was ~8x from S=4 to S=32; the remaining
+    growth is the lam-free O(C*S*D) gumbel/Poisson streams)."""
+    g = make_potts_graph(grid=2, beta=0.8, D=3)
+    temp = {S: _sweep_temp_bytes(
+        engine.make(name, g, sweep=S, backend="jnp", **params))
+        for S in (4, 32)}
+    assert temp[32] < 2.0 * temp[4], temp
 
 
 # ---------------------------------------------------------------------------
