@@ -20,21 +20,26 @@ def main() -> None:
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig1,fig2,kernel,roofline,"
-                         "sweep,diag")
+                         "sweep,diag,dist")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all rows as JSON records to PATH")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: diagnostics + newly-swept kernel rows, "
                          "tiny scales")
     args = ap.parse_args()
+    import types
+
     from . import (table1_cost, fig1_min_gibbs, fig2_variants, kernel_bench,
                    roofline, sweep_bench, diagnostics_bench, common)
     mods = {"table1": table1_cost, "fig1": fig1_min_gibbs,
             "fig2": fig2_variants, "kernel": kernel_bench,
             "roofline": roofline, "sweep": sweep_bench,
-            "diag": diagnostics_bench}
+            "diag": diagnostics_bench,
+            # dist-backend rows (one-psum sweep template; BENCH_dist.json
+            # comes from ``--json BENCH_dist.json --only dist``)
+            "dist": types.SimpleNamespace(run=sweep_bench.run_dist)}
     if args.smoke:
-        only = ["diag", "sweep"]
+        only = ["diag", "sweep", "dist"]
     else:
         only = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")

@@ -23,6 +23,11 @@ streams, S-independent footprint) and Pallas rows (on TPU also the
 in-kernel-PRNG variant with no draw streams in HBM at all), plus a
 chromatic-blocks row on the sparse lattice Ising.  ``smoke=True`` is the
 CI subset (tiny shapes, peak_bytes populated).
+
+``run_dist`` (the ``--only dist`` module, also part of ``--smoke``) adds
+dist-backend rows for the one-psum sweep template: sites/sec for all four
+algorithms plus chromatic-dist, each stamped with the analytic
+``collectives_per_sweep`` / ``psum_payload_bytes`` footprint.
 """
 from __future__ import annotations
 
@@ -180,6 +185,74 @@ def _run_new_kernel_interp_rows(g, C=8, S=4, lam_cap=256.0):
         row(f"sweep/pallas_interp_{name}_C{C}_S{S}", dt * 1e6 / (S * C),
             "interpret-mode incl. compile (correctness path)",
             peak_bytes=_sweep_peak_bytes(eng, st), **eng.describe())
+
+
+def _dist_mesh():
+    """The widest (dp, mp) mesh the host devices support (1x1 on a plain
+    CPU run; run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    for a real sharded measurement)."""
+    n_dev = len(jax.devices())
+    mp = 4 if n_dev % 4 == 0 and n_dev >= 4 else 1
+    return make_auto_mesh((n_dev // mp, mp), ("data", "model")), mp
+
+
+def run_dist(paper_scale: bool = False, smoke: bool = False):
+    """Dist-backend rows (the one-psum sweep template): sites/sec for all
+    four algorithms plus the chromatic-dist schedule, each stamped with the
+    template's analytic ``collectives_per_sweep`` and ``psum_payload_bytes``
+    (per dp shard) so BENCH_dist.json records the collective footprint the
+    sweep batching buys, not just throughput."""
+    from repro.runtime.dist_gibbs import psum_footprint
+
+    mesh, mp = _dist_mesh()
+    if smoke:
+        g, C, S, calls = make_potts_graph(4, 2.0, 4), 8, 4, 4
+        lam_small = 48.0
+    else:
+        g, C, S, calls = make_potts_graph(20, 4.6, 10), 32, 8, 20
+        lam_small = 128.0
+    key = jax.random.PRNGKey(0)
+    for name, kw in (("gibbs", {}), ("mgpmh", {}),
+                     ("min-gibbs", dict(lam=lam_small)),
+                     ("doublemin", dict(lam2=lam_small))):
+        eng = engine.make(name, g, backend="dist", mesh=mesh, sweep=S, **kw)
+        st = eng.init(key, C)
+        st = eng.sweep(st)
+        jax.block_until_ready(st.x)
+        t0 = time.perf_counter()
+        for _ in range(calls):
+            st = eng.sweep(st)
+        jax.block_until_ready(st.x)
+        dt = time.perf_counter() - t0
+        fp = psum_footprint(name, C=C, S=S, D=g.D)
+        sps = calls * S * C / dt
+        row(f"dist/{'smoke_' if smoke else ''}{name}_C{C}_S{S}_mp{mp}",
+            dt * 1e6 / (calls * S * C),
+            f"sites_per_sec={sps:.0f} collectives_per_sweep="
+            f"{fp['collectives_per_sweep']} psum_payload_bytes="
+            f"{fp['psum_payload_bytes']}",
+            sites_per_sec=round(sps), **fp, **eng.describe())
+
+    grid = 8 if smoke else 32
+    gl = make_lattice_ising(grid, beta=0.4)
+    eng = engine.make("gibbs", gl, backend="dist", mesh=mesh,
+                      schedule=engine.ChromaticBlocks(lattice_colors(grid)))
+    st = eng.init(jax.random.PRNGKey(1), C)
+    st = eng.sweep(st)
+    jax.block_until_ready(st.x)
+    ccalls = 2 if smoke else 8
+    t0 = time.perf_counter()
+    for _ in range(ccalls):
+        st = eng.sweep(st)
+    jax.block_until_ready(st.x)
+    dt = time.perf_counter() - t0
+    fp = psum_footprint("chromatic", C=C, D=2, n=gl.n, n_colors=2)
+    sps = ccalls * gl.n * C / dt
+    row(f"dist/{'smoke_' if smoke else ''}chromatic_lattice{grid}_C{C}_mp{mp}",
+        dt * 1e6 / (ccalls * gl.n * C),
+        f"sites_per_sec={sps:.0f} collectives_per_sweep="
+        f"{fp['collectives_per_sweep']} (one psum per color class)",
+        sites_per_sec=round(sps), **fp, **eng.describe())
 
 
 def _run_smoke():

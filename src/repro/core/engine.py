@@ -30,7 +30,10 @@ Backends decide *where* the sweep runs:
 
 The registry (`register` / `make` / `names`) subsumes the previous three
 divergent construction paths (``make_*_step``, ``make_*_sweep``,
-``make_dist_*``); those factories survive only as deprecation shims.  The
+``make_dist_*``); the single-host sweep factories survive only as
+deprecation shims and the hand-written ``make_dist_*`` family is gone —
+the distributed sweep-kernel template (``runtime/dist_gibbs.py``) builds
+every dist engine.  The
 workload registry (`WORKLOADS` / `make_workload`) names the paper's
 experimental models plus the sparse lattice Ising where chromatic
 scheduling applies.
@@ -115,8 +118,10 @@ class ChromaticBlocks(Schedule):
 class AdaptiveScan(Schedule):
     """``sweep_len`` fused updates per call at sites drawn from a *learned*
     non-uniform distribution (gibbs / mgpmh / min-gibbs / doublemin
-    engines — the cached-estimator samplers thread their eps/xi augmented
-    state through the adaptive wrapper unchanged).
+    engines on every backend — the cached-estimator samplers thread their
+    eps/xi augmented state through the adaptive wrapper unchanged, and on
+    ``backend="dist"`` the cross-shard table reduction rides the sweep's
+    one psum).
 
     The selection table is driven by the streaming per-site telemetry the
     sweep itself collects (``repro.diagnostics``): sites that rarely change
@@ -371,7 +376,7 @@ def _gibbs_builder(graph, *, schedule, backend, mesh, **params):
                    exact_accept=True)
 
 
-@register("min-gibbs", backends=("jnp", "pallas"))
+@register("min-gibbs", backends=("jnp", "pallas", "dist"))
 def _min_gibbs_builder(graph, *, schedule, backend, mesh, lam=None,
                        capacity=None, **params):
     _reject_unknown("min-gibbs", params)
@@ -381,6 +386,9 @@ def _min_gibbs_builder(graph, *, schedule, backend, mesh, lam=None,
     # exceed it (on TPU the in-kernel-PRNG kernel lifts the ceiling)
     lam = float(min(2.0 * graph.psi ** 2, 16384.0)) if lam is None \
         else float(lam)
+    if backend == "dist":
+        return _dist_engine("min-gibbs", graph, schedule, mesh,
+                            dict(lam=lam, capacity=capacity))
     capacity = recommended_capacity(lam) if capacity is None else capacity
     cache_init = lambda k, st: S.init_min_gibbs_cache(k, graph, st, lam,
                                                       capacity)
@@ -420,7 +428,6 @@ def _mgpmh_builder(graph, *, schedule, backend, mesh, lam=None,
     _reject_unknown("mgpmh", params)
     lam = float(4.0 * graph.L ** 2) if lam is None else float(lam)
     if backend == "dist":
-        _require_uniform("mgpmh", schedule)
         return _dist_engine("mgpmh", graph, schedule, mesh,
                             dict(lam=lam, capacity=capacity))
     capacity = recommended_capacity(lam) if capacity is None else capacity
@@ -454,7 +461,6 @@ def _doublemin_builder(graph, *, schedule, backend, mesh, lam1=None,
     lam2 = float(min(2.0 * graph.psi ** 2, 16384.0)) if lam2 is None \
         else float(lam2)
     if backend == "dist":
-        _require_uniform("doublemin", schedule)
         return _dist_engine("doublemin", graph, schedule, mesh,
                             dict(lam1=lam1, capacity1=capacity1,
                                  lam2=lam2, capacity2=capacity2))
@@ -488,64 +494,117 @@ def _require_uniform(name, schedule):
 # Distributed backend (shard_map over a (data, model) mesh)
 # ---------------------------------------------------------------------------
 
+def _dist_unsupported(name: str, schedule: Schedule) -> ValueError:
+    """The ONE error the dist backend raises for an unsupported request,
+    always naming the full supported (engine, schedule) table."""
+    return ValueError(
+        f"backend='dist' supports (engine, schedule) combinations: "
+        f"gibbs/mgpmh/min-gibbs/doublemin x UniformSites(S >= 1), "
+        f"gibbs/mgpmh/min-gibbs/doublemin x AdaptiveScan, and "
+        f"gibbs x ChromaticBlocks; got engine {name!r} with schedule "
+        f"{schedule.describe()}")
+
+
 def _dist_engine(name: str, graph: MatchGraph, schedule: Schedule, mesh,
                  params: Dict[str, Any]) -> Engine:
-    """Wrap the ``runtime/dist_gibbs`` constructions: graph column-sharded
-    over the model axis, chains over the data axis, state/marginals carried
-    in a DistState.  One jitted shard_map'd step, donated state."""
+    """Wrap the ``runtime/dist_gibbs`` sweep template: graph column-sharded
+    over the model axis, chains over the data axes, state/marginals carried
+    in a DistState (DistAdaptiveState under AdaptiveScan).  One jitted
+    shard_map'd sweep per call — ONE psum per sweep on the uniform/adaptive
+    schedules, one per color class on the chromatic schedule — with
+    donated state."""
     from ..runtime import dist_gibbs as DG
     from ..launch.mesh import compat_shard_map, dp_axes, MP_AXIS
 
-    _require_uniform(name, schedule)
-    sweep_len = schedule.sweep_len
     mp = mesh.shape[MP_AXIS]
     dps = dp_axes(mesh)                       # ("data",) or ("pod", "data")
-    dp = int(np.prod([mesh.shape[a] for a in dps]))
+    dp_shape = tuple(mesh.shape[a] for a in dps)
+    dp = int(np.prod(dp_shape))
     if graph.n % mp:
         raise ValueError(f"graph.n={graph.n} must divide into mp={mp} "
                          f"column shards")
-    gs = DG.ShardedMatchGraph.from_graph(graph, mp)
+    if name not in DG.DIST_ALGOS:
+        raise _dist_unsupported(name, schedule)
+    chromatic = isinstance(schedule, ChromaticBlocks)
+    adaptive = isinstance(schedule, AdaptiveScan)
+    if chromatic and name != "gibbs":
+        raise _dist_unsupported(name, schedule)
+    if not (chromatic or adaptive or isinstance(schedule, UniformSites)):
+        raise _dist_unsupported(name, schedule)
 
-    # paper-recipe defaults; capacities sized for the per-shard thinned rate
-    def cap(lam, explicit):
-        return (recommended_capacity(max(lam / mp, 1.0)) + 8
-                if explicit is None else explicit)
+    # shard only the graph tables this algorithm reads: the per-row alias
+    # builds are n python loops per shard, prohibitive at lattice scale
+    # for the algorithms (gibbs, chromatic) that never draw from them
+    gs = DG.ShardedMatchGraph.from_graph(
+        graph, mp, row_tables=name in ("mgpmh", "doublemin"),
+        pair_tables=name in ("min-gibbs", "doublemin"))
+
+    # paper-recipe defaults; capacities sized for the WORST per-shard
+    # thinned rate (shard ownership can be skewed — sizing for the uniform
+    # lam/mp silently truncates the hot shard's Poisson draws and biases
+    # the estimator)
+    def cap_rows(lam, explicit):
+        if explicit is not None:
+            return explicit
+        frac = float(np.max(np.asarray(gs.row_sum))) / graph.L
+        return recommended_capacity(max(lam * frac, 1.0)) + 8
+
+    def cap_pairs(lam, explicit):
+        if explicit is not None:
+            return explicit
+        frac = float(np.max(np.asarray(gs.psi_loc))) / graph.psi
+        return recommended_capacity(max(lam * frac, 1.0)) + 8
+
+    def global_cache_fn(lam_g):
+        # seed the cached eps/xi with one full-rate estimator draw (same
+        # estimator the per-shard thinned psum realizes; Engine.init's
+        # cache contract holds on every backend)
+        cap_full = recommended_capacity(lam_g)
+
+        def cache_fn(k, x):
+            idx, B = draw_global_minibatch(k, graph, lam_g, cap_full)
+            return min_gibbs_estimate(graph, x, idx, B, lam_g)
+        return cache_fn
 
     cache_fn = None
     if name == "gibbs":
-        if sweep_len != 1:
-            raise ValueError("dist gibbs supports sweep=1 only")
-        step = DG.make_dist_gibbs_step(gs)
-        resolved = {}
+        resolved, algo_params = {}, {}
     elif name == "mgpmh":
         lam = params["lam"]
-        capacity = cap(lam, params.get("capacity"))
-        step = (DG.make_dist_mgpmh_sweep(gs, lam, capacity, sweep_len)
-                if sweep_len > 1
-                else DG.make_dist_mgpmh_step(gs, lam, capacity))
-        resolved = dict(lam=lam, capacity=capacity)
-    elif name == "doublemin":
-        if sweep_len != 1:
-            raise ValueError("dist doublemin supports sweep=1 only")
+        capacity = cap_rows(lam, params.get("capacity"))
+        resolved = algo_params = dict(lam=lam, capacity=capacity)
+    elif name == "min-gibbs":
+        lam = params["lam"]
+        capacity = cap_pairs(lam, params.get("capacity"))
+        resolved = algo_params = dict(lam=lam, capacity=capacity)
+        cache_fn = global_cache_fn(lam)
+    else:  # doublemin
         lam1, lam2 = params["lam1"], params["lam2"]
-        c1 = cap(lam1, params.get("capacity1"))
-        c2 = cap(lam2, params.get("capacity2"))
-        step = DG.make_dist_double_min_step(gs, lam1, c1, lam2, c2)
+        c1 = cap_rows(lam1, params.get("capacity1"))
+        c2 = cap_pairs(lam2, params.get("capacity2"))
         resolved = dict(lam1=lam1, capacity1=c1, lam2=lam2, capacity2=c2)
+        algo_params = dict(lam=lam1, capacity=c1, lam2=lam2, capacity2=c2)
+        cache_fn = global_cache_fn(lam2)
 
-        # seed the cached xi_x with one full-rate estimator draw (same
-        # estimator the per-shard thinned psum realizes; Engine.init's
-        # cache contract holds on every backend)
-        cap_full = recommended_capacity(lam2)
-
-        def cache_fn(k, x):
-            idx, B = draw_global_minibatch(k, graph, lam2, cap_full)
-            return min_gibbs_estimate(graph, x, idx, B, lam2)
+    mesh_info = (dps, dp_shape, mp)
+    if chromatic:
+        S.validate_coloring(graph, schedule.colors_array)
+        step = DG.make_dist_chromatic_sweep(gs, schedule.colors_array)
+        upd = graph.n
+        st_specs = DG.state_specs(dp_axes=dps)
+    elif adaptive:
+        step = DG.make_dist_adaptive_sweep(gs, name, schedule,
+                                           mesh_info=mesh_info,
+                                           **algo_params)
+        upd = schedule.sweep_len
+        st_specs = DG.adaptive_state_specs(dp_axes=dps)
     else:
-        raise ValueError(f"engine {name!r} has no dist backend")
+        step = DG.make_dist_sweep(gs, name, schedule.sweep_len,
+                                  mesh_info=mesh_info, **algo_params)
+        upd = schedule.sweep_len
+        st_specs = DG.state_specs(dp_axes=dps)
 
     sh_specs = DG.shard_specs()
-    st_specs = DG.state_specs(dp_axes=dps)
     smapped = compat_shard_map(lambda st, sh: step(st, sh), mesh,
                                (st_specs, sh_specs), st_specs)
     sh = {k: getattr(gs, k) for k in sh_specs}
@@ -565,15 +624,25 @@ def _dist_engine(name: str, graph: MatchGraph, schedule: Schedule, mesh,
         if cache_fn is not None:
             ck = jax.random.split(jax.random.fold_in(key, 0x5eed), n_chains)
             cache = jax.vmap(cache_fn)(ck, x)
-        return DG.DistState(
+        st = DG.DistState(
             x=x, cache=cache,
             key=jax.random.split(key, dp),
             accepts=jnp.zeros((n_chains,), jnp.int32),
             marg=jnp.zeros((n_chains, graph.n, graph.D), jnp.float32),
             count=jnp.int32(0))
+        if adaptive:
+            n = graph.n
+            st = DG.DistAdaptiveState(
+                inner=st,
+                cdf=jnp.cumsum(jnp.full((n,), 1.0 / n, jnp.float32)),
+                flips=jnp.zeros((dp, n), jnp.float32),
+                hits=jnp.zeros((dp, n), jnp.float32),
+                calls=jnp.int32(0))
+        return st
 
-    return _engine(name, "dist", schedule, sweep_len, graph, resolved,
-                   init_fn, sweep_fn, exact_accept=(name == "gibbs"))
+    return _engine(name, "dist", schedule, upd, graph, resolved,
+                   init_fn, sweep_fn,
+                   exact_accept=name in ("gibbs", "min-gibbs"))
 
 
 # ---------------------------------------------------------------------------

@@ -60,6 +60,9 @@ __all__ = [
     "make_double_min_step",
     "make_gibbs_sweep",
     "make_mgpmh_sweep",
+    "gibbs_select",
+    "mh_accept",
+    "min_gibbs_select",
 ]
 
 
@@ -306,6 +309,40 @@ def _site_hits(i: jax.Array, n: int) -> jax.Array:
     return jnp.zeros((n,), jnp.float32).at[i.reshape(-1)].add(1.0)
 
 
+# ---------------------------------------------------------------------------
+# Per-algorithm substep primitives, shared between the fused jnp sweeps
+# below and the distributed sweep template (runtime/dist_gibbs.py).  Each is
+# one algorithm's selection/acceptance rule over batched (C, D) energies —
+# the part of a sub-step that is identical no matter how the energies were
+# produced (full exact pass, delta-corrected psum partials, minibatch
+# bucket counts).
+# ---------------------------------------------------------------------------
+
+def gibbs_select(eps: jax.Array, gumbel: jax.Array) -> jax.Array:
+    """Categorical draw over (C, D) energies via Gumbel-argmax
+    (``categorical(exp eps)`` == ``argmax(eps + gumbel)``) — the Gibbs /
+    proposal selection every algorithm's substep starts from."""
+    return jnp.argmax(eps + gumbel, axis=-1).astype(jnp.int32)
+
+
+def mh_accept(logu: jax.Array, exact_diff: jax.Array, eps_xi: jax.Array,
+              eps_v: jax.Array) -> jax.Array:
+    """The MGPMH/DoubleMIN acceptance rule:
+    ``log a = (exact(y) - exact(x)) + (eps_x - eps_v)`` — for DoubleMIN,
+    ``exact_diff`` is the second-minibatch difference ``xi_y - xi_x``."""
+    return logu < exact_diff + (eps_xi - eps_v)
+
+
+def min_gibbs_select(eps: jax.Array, cache: jax.Array, xi: jax.Array,
+                     gumbel: jax.Array, rows: jax.Array):
+    """Alg 2's augmented-state recursion at one sub-step: overwrite the
+    current-value slot with the cached estimate, Gumbel-argmax, cache the
+    winner's estimate.  Returns ``(v, new_cache)``."""
+    eps = eps.at[rows, xi].set(cache)
+    v = gibbs_select(eps, gumbel)
+    return v, eps[rows, v]
+
+
 # Sweep builders below take two optional extensions to the plain
 # ``sweep(state) -> state`` contract:
 #   * ``collect_stats=True`` (build time): the sweep additionally returns a
@@ -460,8 +497,7 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
             i_s = i[:, s]
             vals = jnp.take_along_axis(xp, j[:, s, :], axis=1)  # (C, K)
             eps = scale * _bucket_counts(vals, D)               # (C, D)
-            v = jnp.argmax(eps + gumbel[:, s, :],
-                           axis=-1).astype(jnp.int32)
+            v = gibbs_select(eps, gumbel[:, s, :])
             xi = xp[rows, i_s]
             w_row = graph.W[i_s]                                # (C, n)
             x_body = xp[:, :n]
@@ -469,8 +505,8 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
                 w_row * ((x_body == v[:, None]).astype(jnp.float32)
                          - (x_body == xi[:, None]).astype(jnp.float32)),
                 axis=1)
-            log_a = exact_diff + (eps[rows, xi] - eps[rows, v])
-            accept = logu[:, s] < log_a
+            accept = mh_accept(logu[:, s], exact_diff,
+                               eps[rows, xi], eps[rows, v])
             new_v = jnp.where(accept, v, xi)
             xp = xp.at[rows, i_s].set(new_v)
             if collect_stats:
@@ -556,11 +592,10 @@ def _build_min_gibbs_sweep(graph: MatchGraph, lam: float, capacity: int,
             matches = jnp.sum((xa == xb) & mask, axis=-1)
             eps = lscale * matches.astype(jnp.float32)      # (C, D)
             xi = x[rows, i_s]
-            eps = eps.at[rows, xi].set(cache)   # Alg 2: eps_{x(i)} <- cache
-            v = jnp.argmax(eps + gumbel[:, s, :],
-                           axis=-1).astype(jnp.int32)
+            v, cache = min_gibbs_select(eps, cache, xi, gumbel[:, s, :],
+                                        rows)
             x = x.at[rows, i_s].set(v)
-            return (x, eps[rows, v]), None
+            return (x, cache), None
 
         (x, cache), _ = jax.lax.scan(substep, (state.x, state.cache),
                                      jnp.arange(S))
@@ -687,8 +722,7 @@ def _build_double_min_sweep(graph: MatchGraph, lam1: float, capacity1: int,
             j = jnp.where(jnp.arange(K1)[None, :] < B1[:, s, None], j, n)
             vals = jnp.take_along_axis(xp, j, axis=1)            # (C, K1)
             eps = scale1 * _bucket_counts(vals, D)               # (C, D)
-            v = jnp.argmax(eps + gumbel[:, s, :],
-                           axis=-1).astype(jnp.int32)
+            v = gibbs_select(eps, gumbel[:, s, :])
             xi = xp[rows, i_s]
             # xi_y = eq.-(2) estimate at y = x[i_s <- v]
             f = _alias_gather(graph.pair_prob, graph.pair_alias,
@@ -701,8 +735,8 @@ def _build_double_min_sweep(graph: MatchGraph, lam1: float, capacity1: int,
             mask2 = jnp.arange(K2)[None, :] < B2[:, s, None]
             matches = jnp.sum((ya == yb) & mask2, axis=-1)
             xi_y = lscale2 * matches.astype(jnp.float32)
-            log_a = (xi_y - cache) + (eps[rows, xi] - eps[rows, v])
-            accept = logu[:, s] < log_a
+            accept = mh_accept(logu[:, s], xi_y - cache,
+                               eps[rows, xi], eps[rows, v])
             xp = xp.at[rows, i_s].set(jnp.where(accept, v, xi))
             cache = jnp.where(accept, xi_y, cache)
             if collect_stats:
@@ -777,6 +811,26 @@ def _build_double_min_sweep_pallas(graph: MatchGraph, lam1: float,
 # Chromatic block sweep: color classes through the fused sweep kernel
 # ---------------------------------------------------------------------------
 
+def validate_coloring(graph: MatchGraph, colors) -> list:
+    """Check ``colors`` is a proper coloring of ``graph`` (non-empty
+    classes, no same-color factors) and return the color classes as numpy
+    index arrays.  Shared by the fused and distributed chromatic paths."""
+    colors = np.asarray(colors)
+    n = graph.n
+    if colors.shape != (n,):
+        raise ValueError(f"colors must have shape ({n},), got {colors.shape}")
+    n_colors = int(colors.max()) + 1
+    classes = [np.flatnonzero(colors == c) for c in range(n_colors)]
+    W = np.asarray(graph.W)
+    for c, sites in enumerate(classes):
+        if sites.size == 0:
+            raise ValueError(f"color class {c} is empty")
+        if np.any(W[np.ix_(sites, sites)] != 0.0):
+            raise ValueError(
+                f"colors is not a proper coloring: class {c} shares factors")
+    return classes
+
+
 def _build_chromatic_gibbs_sweep(graph: MatchGraph, colors, *,
                                  impl: str, collect_stats: bool = False):
     """One full chromatic Gibbs sweep per call: every color class updated as
@@ -793,20 +847,10 @@ def _build_chromatic_gibbs_sweep(graph: MatchGraph, colors, *,
     ``updates_per_call`` is n: one call updates every site once.
     """
     _check_impl(impl)
-    colors = np.asarray(colors)
     n, D = graph.n, graph.D
-    if colors.shape != (n,):
-        raise ValueError(f"colors must have shape ({n},), got {colors.shape}")
-    n_colors = int(colors.max()) + 1
-    classes = [np.flatnonzero(colors == c) for c in range(n_colors)]
-    W = np.asarray(graph.W)
-    for c, sites in enumerate(classes):
-        if sites.size == 0:
-            raise ValueError(f"color class {c} is empty")
-        if np.any(W[np.ix_(sites, sites)] != 0.0):
-            raise ValueError(
-                f"colors is not a proper coloring: class {c} shares factors")
-    classes = [jnp.asarray(s, jnp.int32) for s in classes]
+    classes = [jnp.asarray(s, jnp.int32)
+               for s in validate_coloring(graph, colors)]
+    n_colors = len(classes)
 
     def sweep(state: ChainState):
         C = state.x.shape[0]

@@ -23,15 +23,15 @@ __all__ = [
     "split_rhat", "ess_per_site", "acceptance_rate", "summarize",
     # lazy (see __getattr__): adaptive control + exact references
     "AdaptiveScan", "AdaptiveState", "make_adaptive_engine",
-    "run_with_telemetry", "autotune_lambda",
+    "refresh_cdf", "run_with_telemetry", "autotune_lambda",
     "exact_marginals", "tv_to_exact", "exact_gibbs_gap",
     "empirical_spectral_gap",
 ]
 
 _LAZY = {
     "AdaptiveScan": "adaptive", "AdaptiveState": "adaptive",
-    "make_adaptive_engine": "adaptive", "run_with_telemetry": "adaptive",
-    "autotune_lambda": "adaptive",
+    "make_adaptive_engine": "adaptive", "refresh_cdf": "adaptive",
+    "run_with_telemetry": "adaptive", "autotune_lambda": "adaptive",
     "exact_marginals": "exact", "tv_to_exact": "exact",
     "exact_gibbs_gap": "exact", "empirical_spectral_gap": "exact",
 }

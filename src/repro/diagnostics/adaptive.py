@@ -47,7 +47,7 @@ from .telemetry import (Telemetry, telemetry_init, telemetry_update,
                         acceptance_rate)
 
 __all__ = ["AdaptiveScan", "AdaptiveState", "make_adaptive_engine",
-           "run_with_telemetry", "autotune_lambda"]
+           "refresh_cdf", "run_with_telemetry", "autotune_lambda"]
 
 
 class AdaptiveState(NamedTuple):
@@ -74,13 +74,28 @@ class AdaptiveState(NamedTuple):
         return self.inner.accepts
 
 
-def _refresh_cdf(tel: Telemetry, n: int, uniform_mix: float,
-                 smoothing: float) -> jax.Array:
-    """New cumulative table from the streaming per-site statistics."""
-    rate = tel.site_flips / jnp.maximum(tel.site_prop, 1.0)
+def refresh_cdf(flips: jax.Array, props: jax.Array, n: int,
+                uniform_mix: float, smoothing: float) -> jax.Array:
+    """New cumulative selection table from raw per-site flip/proposal
+    counters — the mesh-agnostic core of the table refresh.
+
+    The single-host engine feeds it the Telemetry counters of its local
+    chains; the distributed engine feeds it counters already reduced over
+    every data shard (the reduction rides the sweep's fused psum — see
+    ``runtime.dist_gibbs.make_dist_adaptive_sweep``), so one table serves
+    the whole mesh.  Pure jnp, in-graph, no host sync.
+    """
+    rate = flips / jnp.maximum(props, 1.0)
     w = 1.0 / (rate + smoothing)
     p = uniform_mix / n + (1.0 - uniform_mix) * w / jnp.sum(w)
     return jnp.cumsum(p)
+
+
+def _refresh_cdf(tel: Telemetry, n: int, uniform_mix: float,
+                 smoothing: float) -> jax.Array:
+    """New cumulative table from the streaming per-site statistics."""
+    return refresh_cdf(tel.site_flips, tel.site_prop, n, uniform_mix,
+                       smoothing)
 
 
 def make_adaptive_engine(name: str, graph, schedule: AdaptiveScan,

@@ -120,6 +120,15 @@ def roofline_terms(cost: dict, coll: dict) -> dict:
     return terms
 
 
+def _cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to a dict (older jax returns
+    ``[dict]``, newer returns the dict directly, either may be empty)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _depth_variant(cfg, g: int):
     """A g-group-deep copy of cfg (uniform stacks => costs affine in g)."""
     import dataclasses as _dc
@@ -142,7 +151,7 @@ def analysis_costs(cfg, shape, mesh) -> dict:
     for g in (1, 2):
         vcfg = _depth_variant(cfg, g)
         comp = _lower_cell(vcfg, shape, mesh, unroll=True).compile()
-        cost = comp.cost_analysis() or {}
+        cost = _cost_dict(comp)
         coll = collective_stats(comp.as_text())
         c[g] = {"flops": float(cost.get("flops", 0.0)),
                 "bytes": float(cost.get("bytes accessed", 0.0)),
@@ -199,7 +208,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                 "temp_bytes": mem.temp_size_in_bytes,
                 "alias_bytes": mem.alias_size_in_bytes,
             }
-            cost = compiled.cost_analysis() or {}
+            cost = _cost_dict(compiled)
             rec["cost"] = {k: float(v) for k, v in cost.items()
                            if k in ("flops", "bytes accessed",
                                     "transcendentals")}
@@ -325,10 +334,12 @@ def run_gibbs_cell(name: str, *, multi_pod: bool, out_dir: str,
             psi_loc=sds((mp,), jnp.float32),
             D=D, psi=float(n), L=float(np.sqrt(n)), n=n, n_shards=mp)
         if engine == "doublemin":
-            step = DG.make_dist_double_min_step(gs, lam, capacity,
-                                                lam2, capacity2, impl="jnp")
+            step = DG.make_dist_sweep(gs, "doublemin", 1, lam=lam,
+                                      capacity=capacity, lam2=lam2,
+                                      capacity2=capacity2)
         else:
-            step = DG.make_dist_mgpmh_step(gs, lam, capacity, impl="jnp")
+            step = DG.make_dist_sweep(gs, "mgpmh", 1, lam=lam,
+                                      capacity=capacity)
 
         shard_specs = {"W_cols": P(MP_AXIS, None, None),
                        "row_prob": P(MP_AXIS, None, None),
@@ -370,7 +381,7 @@ def run_gibbs_cell(name: str, *, multi_pod: bool, out_dir: str,
         mem = compiled.memory_analysis()
         rec["memory"] = {"argument_bytes": mem.argument_size_in_bytes,
                          "temp_bytes": mem.temp_size_in_bytes}
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled)
         rec["cost"] = {k: float(v) for k, v in cost.items()
                        if k in ("flops", "bytes accessed")}
         coll = collective_stats(compiled.as_text())

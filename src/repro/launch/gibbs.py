@@ -10,10 +10,12 @@ marginal-error reporting, and streaming convergence telemetry.
 Engines and workloads come straight from the registries in
 ``repro.core.engine`` — this launcher holds NO construction logic: it calls
 ``engine.make(...)`` and drives the returned Engine.  ``--backend dist``
-(the default) shards the graph over the mesh (one psum per sweep, see
-runtime/dist_gibbs.py); ``--backend jnp|pallas|auto`` runs the fused
-single-host schedules, where ``--adaptive`` switches to the telemetry-driven
-``AdaptiveScan`` site-selection schedule (any fused engine).  ``--telemetry``
+(the default) shards the graph over the mesh (one psum per sweep for all
+four dist algorithms, see runtime/dist_gibbs.py); ``--backend
+jnp|pallas|auto`` runs the fused single-host schedules.  ``--adaptive``
+switches to the telemetry-driven ``AdaptiveScan`` site-selection schedule
+on any backend (under dist the cross-shard table reduction rides the
+sweep's one psum).  ``--telemetry``
 threads the streaming diagnostics carry through the run and logs mean
 acceptance / max split-R-hat / ESS alongside throughput.  Sampler state
 (chains, caches, rng, running marginals) is a pytree checkpointed/restored
@@ -40,21 +42,16 @@ def _build_engine(config: str, engine: str, sweep: int, mp_shards: int,
                   backend: str, adaptive: bool):
     wl = engine_lib.make_workload(config)
     g = wl.graph
+    schedule = (engine_lib.AdaptiveScan(sweep_len=max(sweep, 1)) if adaptive
+                else engine_lib.UniformSites(max(sweep, 1)))
     if backend == "dist":
-        if adaptive:
-            raise ValueError("--adaptive requires a non-dist backend "
-                             "(the selection table is chain-local)")
         n_dev = len(jax.devices())
         mp = mp_shards or 1
         dp = n_dev // mp
         mesh = make_auto_mesh((dp, mp), ("data", "model"))
-        return engine_lib.make(engine, g, sweep=max(sweep, 1),
-                               backend="dist", mesh=mesh), g
-    if adaptive:
-        schedule = engine_lib.AdaptiveScan(sweep_len=max(sweep, 1))
         return engine_lib.make(engine, g, schedule=schedule,
-                               backend=backend), g
-    return engine_lib.make(engine, g, sweep=max(sweep, 1),
+                               backend="dist", mesh=mesh), g
+    return engine_lib.make(engine, g, schedule=schedule,
                            backend=backend), g
 
 
@@ -133,7 +130,8 @@ def main():
                     help="site updates per launch: fused sweep (one psum "
                          "per sweep on the dist backend)")
     ap.add_argument("--adaptive", action="store_true",
-                    help="AdaptiveScan schedule (fused engines, non-dist): "
+                    help="AdaptiveScan schedule (any backend incl. dist, "
+                         "where the table reduction rides the sweep psum): "
                          "telemetry-driven non-uniform site selection")
     ap.add_argument("--telemetry", action="store_true",
                     help="thread streaming convergence telemetry and log "
@@ -146,9 +144,6 @@ def main():
         ap.error(f"engine {args.engine!r} supports backends {supported}, "
                  f"not {args.backend!r} (jnp-only engines need "
                  f"--backend jnp)")
-    if args.adaptive and args.backend == "dist":
-        ap.error("--adaptive requires a non-dist backend "
-                 "(the selection table is chain-local)")
     if args.adaptive and args.engine not in ("gibbs", "mgpmh", "min-gibbs",
                                              "doublemin"):
         ap.error(f"--adaptive supports the gibbs/mgpmh/min-gibbs/doublemin "

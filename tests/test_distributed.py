@@ -25,59 +25,41 @@ def _run(code: str) -> str:
     return out.stdout
 
 
-def test_dist_mgpmh_matches_reference():
-    """Distributed (2 dp x 4 mp) MGPMH marginals match the single-chain
-    reference sampler on the same graph."""
+def test_dist_sweep_matches_reference_all_engines():
+    """All four dist sweep engines (2 dp x 4 mp, ONE psum per S-update
+    sweep through the shared template) match the exact marginals the jnp
+    engines are validated against (test_engine.py / test_sweep.py validate
+    the jnp sweeps on the same enumerable graph)."""
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P
-        from jax.experimental.shard_map import shard_map
+        from repro.core import engine
         from repro.core.factor_graph import make_potts_graph, TabularPairwiseGraph
-        from repro.core import samplers as S
-        from repro.runtime import dist_gibbs as DG
+        from repro.launch.mesh import make_auto_mesh
 
         g = make_potts_graph(grid=2, beta=0.8, D=3)     # n=4, enumerable
-        lam = float(4*g.L**2); cap = int(lam + 6*lam**0.5 + 16)
-
-        from repro.launch.mesh import make_auto_mesh
-        mesh = make_auto_mesh((2,4), ("data","model"))
-        gs = DG.ShardedMatchGraph.from_graph(g, 4)
-        step = DG.make_dist_mgpmh_step(gs, lam, cap)
-        shard_specs = {"W_cols": P("model",None,None), "row_prob": P("model",None,None),
-                       "row_alias": P("model",None,None), "row_sum": P("model",None),
-                       "pair_a": P("model",None), "pair_b": P("model",None),
-                       "pair_prob": P("model",None), "pair_alias": P("model",None),
-                       "psi_loc": P("model")}
-        st_specs = DG.DistState(x=P("data",None), cache=P("data"), key=P("data"),
-                                accepts=P("data"), marg=P("data","model",None), count=P())
-        smapped = shard_map(lambda st, sh: step(st, sh), mesh=mesh,
-                            in_specs=(st_specs, shard_specs), out_specs=st_specs,
-                            check_rep=False)
-        C = 64
-        keys = jax.random.split(jax.random.PRNGKey(0), 2)   # one per dp shard
-        st = DG.DistState(x=jnp.zeros((C, g.n), jnp.int32),
-                          cache=jnp.zeros((C,), jnp.float32), key=keys,
-                          accepts=jnp.zeros((C,), jnp.int32),
-                          marg=jnp.zeros((C, g.n, g.D), jnp.float32),
-                          count=jnp.int32(0))
-        sh = {k: getattr(gs, k) for k in shard_specs}
-        with mesh:
-            jstep = jax.jit(smapped, donate_argnums=(0,))
-            for _ in range(4000):
-                st = jstep(st, sh)
-        emp = np.asarray(st.marg).sum(0) / (float(st.count) * C)
-
         tg = TabularPairwiseGraph.from_match_graph(g)
         pi = tg.pi(); states = tg.all_states()
         exact = np.zeros((g.n, g.D))
         for p_, s_ in zip(pi, states):
             for i, v in enumerate(s_):
                 exact[i, v] += p_
-        err = np.abs(emp - exact).max()
-        print("ERR", err)
-        assert err < 0.05, err
+
+        mesh = make_auto_mesh((2,4), ("data","model"))
+        C, S, calls = 64, 4, 800
+        for name in ("gibbs", "mgpmh", "min-gibbs", "doublemin"):
+            kw = dict(lam=float(2*g.psi**2)) if name == "min-gibbs" else {}
+            eng = engine.make(name, g, backend="dist", mesh=mesh, sweep=S,
+                              **kw)
+            assert eng.updates_per_call == S
+            st = eng.init(jax.random.PRNGKey(0), C)
+            for _ in range(calls):
+                st = eng.sweep(st)
+            emp = np.asarray(st.marg).sum(0) / (float(st.count) * C)
+            err = np.abs(emp - exact).max()
+            print("ERR", name, err)
+            assert err < 0.05, (name, err)
     """)
-    assert "ERR" in out
+    assert out.count("ERR") == 4
 
 
 def test_compressed_psum_mean():
@@ -188,54 +170,120 @@ def test_sharded_moe_matches_gspmd():
     assert out.count("OK") == 2
 
 
-def test_dist_double_min_matches_reference():
-    """Distributed DoubleMIN-Gibbs marginals match exact pi (Thm 5 at the
-    systems level: sharded second minibatch via Poisson thinning)."""
+def test_dist_chromatic_bitexact_lattice64():
+    """The ChromaticBlocks dist schedule (graph column-sharded over 8 model
+    shards, one psum per color class) is BIT-exact vs the single-host dense
+    chromatic reference on lattice-ising-64x64: the lattice energies are
+    small-integer multiples of beta, exactly representable under any
+    summation order, and the key/draw protocol mirrors the dense path."""
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P
-        from jax.experimental.shard_map import shard_map
-        from repro.core.factor_graph import make_potts_graph, TabularPairwiseGraph
-        from repro.runtime import dist_gibbs as DG
-
-        g = make_potts_graph(grid=2, beta=0.8, D=3)
-        lam1 = float(4*g.L**2); cap1 = int(lam1 + 6*lam1**0.5 + 16)
-        lam2 = float(2*g.psi**2); cap2 = int(lam2 + 6*lam2**0.5 + 16)
+        from repro.core import engine, make_lattice_ising, lattice_colors
         from repro.launch.mesh import make_auto_mesh
-        mesh = make_auto_mesh((2,4), ("data","model"))
-        gs = DG.ShardedMatchGraph.from_graph(g, 4)
-        step = DG.make_dist_double_min_step(gs, lam1, cap1, lam2, cap2)
-        shard_specs = {"W_cols": P("model",None,None), "row_prob": P("model",None,None),
-                       "row_alias": P("model",None,None), "row_sum": P("model",None),
-                       "pair_a": P("model",None), "pair_b": P("model",None),
-                       "pair_prob": P("model",None), "pair_alias": P("model",None),
-                       "psi_loc": P("model")}
-        st_specs = DG.DistState(x=P("data",None), cache=P("data"), key=P("data"),
-                                accepts=P("data"), marg=P("data","model",None), count=P())
-        smapped = shard_map(lambda st, sh: step(st, sh), mesh=mesh,
-                            in_specs=(st_specs, shard_specs), out_specs=st_specs,
-                            check_rep=False)
-        C = 64
-        st = DG.DistState(x=jnp.zeros((C, g.n), jnp.int32),
-                          cache=jnp.full((C,), float(g.energy(jnp.zeros(g.n, jnp.int32)))),
-                          key=jax.random.split(jax.random.PRNGKey(0), 2),
-                          accepts=jnp.zeros((C,), jnp.int32),
-                          marg=jnp.zeros((C, g.n, g.D), jnp.float32),
-                          count=jnp.int32(0))
-        sh = {k: getattr(gs, k) for k in shard_specs}
-        with mesh:
-            jstep = jax.jit(smapped, donate_argnums=(0,))
-            for _ in range(4000):
-                st = jstep(st, sh)
-        emp = np.asarray(st.marg).sum(0) / (float(st.count) * C)
-        tg = TabularPairwiseGraph.from_match_graph(g)
-        pi = tg.pi(); states = tg.all_states()
-        exact = np.zeros((g.n, g.D))
-        for p_, s_ in zip(pi, states):
-            for i, v in enumerate(s_):
-                exact[i, v] += p_
-        err = np.abs(emp - exact).max()
-        print("ERR", err)
-        assert err < 0.06, err
+        from repro.runtime.dist_gibbs import make_chromatic_gibbs_step
+
+        grid = 64
+        g = make_lattice_ising(grid, beta=0.4)
+        colors = lattice_colors(grid)
+        mesh = make_auto_mesh((1, 8), ("data", "model"))
+        eng = engine.make("gibbs", g, backend="dist", mesh=mesh,
+                          schedule=engine.ChromaticBlocks(colors))
+        assert eng.updates_per_call == g.n == 64 * 64
+        C = 2
+        key0 = jax.random.PRNGKey(3)
+        st = eng.init(key0, C)
+        dense = make_chromatic_gibbs_step(g, colors)
+
+        # replicate the dist key protocol host-side on the dense reference
+        x_ref = jnp.zeros((C, g.n), jnp.int32)
+        k = jax.random.split(key0, 1)[0]    # the single dp-shard key
+        for sweep in range(2):
+            k, master = jax.random.split(k)
+            keys = jax.random.split(master, 2)
+            for c in range(2):
+                x_ref = dense(x_ref, keys[c], c)
+            st = eng.sweep(st)
+            np.testing.assert_array_equal(np.asarray(st.x),
+                                          np.asarray(x_ref))
+            print("BITEXACT", sweep)
     """)
-    assert "ERR" in out
+    assert out.count("BITEXACT") == 2
+
+
+def test_dist_adaptive_scan():
+    """AdaptiveScan on the dist backend: the flip-rate table is reduced
+    across every data shard inside the sweep's one psum (no extra
+    collective), adapts toward the sticky strong-pair sites, and the chain
+    stays correct (exact uniform marginals on hetero-pairs-24)."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import engine
+        from repro.launch.mesh import make_auto_mesh
+
+        g = engine.make_workload("hetero-pairs-24").graph   # n=24
+        mesh = make_auto_mesh((2, 4), ("data", "model"))
+        C, S, calls = 32, 16, 500
+        eng = engine.make("gibbs", g, backend="dist", mesh=mesh,
+                          schedule=engine.AdaptiveScan(sweep_len=S,
+                                                       refresh_every=4))
+        st = eng.init(jax.random.PRNGKey(0), C)
+        cdf0 = np.asarray(st.cdf).copy()
+        for _ in range(calls):
+            st = eng.sweep(st)
+        cdf = np.asarray(st.cdf)
+        emp = np.asarray(st.marg).sum(0) / (float(st.count) * C)
+        err = np.abs(emp - 0.5).max()       # exact marginals are uniform
+        assert err < 0.06, err
+        assert abs(cdf[-1] - 1.0) < 1e-4
+        assert not np.allclose(cdf, cdf0)   # the table adapted
+        p = np.diff(np.concatenate([[0.0], cdf]))
+        # sticky strong-pair sites (the first 4) upweighted vs weak sites
+        assert p[:4].mean() > 1.5 * p[4:].mean(), p
+        # both dp shards fed the table: per-shard counters accumulated
+        hits = np.asarray(st.hits)
+        assert hits.shape[0] == 2 and (hits.sum(1) > 0).all()
+        print("ADAPTIVE_OK", err)
+    """)
+    assert "ADAPTIVE_OK" in out
+
+
+def test_dist_telemetry_matches_jnp():
+    """``Engine.sweep(state, telemetry=...)`` on the dist backend (the
+    donated-buffer copy path) agrees with the jnp backend on hetero-pairs-24
+    for every dist engine: acceptance counters statistically match and the
+    per-site split-R-hat profile is comparable (mean over sites, plus a
+    factor-2 bound on the heavy-tailed worst site)."""
+    out = _run("""
+        import jax, numpy as np
+        from repro.core import engine
+        from repro import diagnostics as diag
+        from repro.launch.mesh import make_auto_mesh
+
+        g = engine.make_workload("hetero-pairs-24").graph
+        mesh = make_auto_mesh((2, 4), ("data", "model"))
+        C, S, calls = 32, 8, 120
+        for name in ("gibbs", "mgpmh", "min-gibbs", "doublemin"):
+            kw = dict(lam=256.0) if name == "min-gibbs" else {}
+            acc, rhat = {}, {}
+            for backend in ("jnp", "dist"):
+                bkw = dict(mesh=mesh) if backend == "dist" else {}
+                eng = engine.make(name, g, backend=backend, sweep=S,
+                                  **kw, **bkw)
+                st = eng.init(jax.random.PRNGKey(2), C)
+                tel = eng.init_telemetry(st, half_at=calls // 2)
+                for _ in range(calls):
+                    st, tel = eng.sweep(st, tel)
+                acc[backend] = diag.acceptance_rate(tel, eng.exact_accept)
+                rhat[backend] = diag.split_rhat(tel)
+            assert abs(acc["jnp"] - acc["dist"]) < 0.05, (name, acc)
+            r_j, r_d = rhat["jnp"], rhat["dist"]
+            assert np.isfinite(r_d).all(), name
+            # the site-mean R-hat profile is stable; the max over sites is
+            # a heavy-tailed point estimate, bounded to a factor of 2
+            assert abs(r_j.mean() - r_d.mean()) < 0.2, (name, r_j.mean(),
+                                                        r_d.mean())
+            assert max(r_j.max(), r_d.max()) < 2 * min(r_j.max(), r_d.max())
+            print("TEL_OK", name, round(acc["dist"], 3),
+                  round(float(r_d.mean()), 3))
+    """)
+    assert out.count("TEL_OK") == 4

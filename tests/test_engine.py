@@ -62,25 +62,53 @@ def test_registry_roundtrip_every_name_and_backend():
 
 def test_registry_dist_backend_roundtrip():
     """The dist backend (1x1 mesh) constructs and steps for every engine
-    that supports it."""
+    that supports it — sweep=1 AND sweep>1 route through the shared
+    one-psum template; the chromatic and adaptive dist schedules also
+    round-trip."""
     from repro.launch.mesh import make_auto_mesh
     g = make_potts_graph(grid=2, beta=0.8, D=3)
     mesh = make_auto_mesh((1, 1), ("data", "model"))
     key = jax.random.PRNGKey(0)
     dist_names = [n for n in engine.names()
                   if "dist" in engine.backends(n)]
-    assert set(dist_names) == {"gibbs", "mgpmh", "doublemin"}
+    assert set(dist_names) == {"gibbs", "mgpmh", "min-gibbs", "doublemin"}
     for name in dist_names:
-        eng = engine.make(name, g, backend="dist", mesh=mesh)
-        assert eng.backend == "dist"
+        for sweep in (1, 4):
+            eng = engine.make(name, g, backend="dist", mesh=mesh,
+                              sweep=sweep)
+            assert eng.backend == "dist"
+            assert eng.updates_per_call == sweep
+            st = eng.init(key, 4)
+            st = eng.sweep(st)
+            assert st.x.shape == (4, g.n)
+            assert int(st.count) == 1
+        # AdaptiveScan under dist: the control state wraps DistState
+        eng = engine.make(name, g, backend="dist", mesh=mesh,
+                          schedule=engine.AdaptiveScan(sweep_len=3,
+                                                       refresh_every=2))
         st = eng.init(key, 4)
-        st = eng.sweep(st)
-        assert st.x.shape == (4, g.n)
-        assert int(st.count) == 1
-    # the mgpmh sweep variant (one psum per sweep) also round-trips
-    eng = engine.make("mgpmh", g, backend="dist", mesh=mesh, sweep=4)
+        st = eng.sweep(eng.sweep(st))
+        assert st.x.shape == (4, g.n) and int(st.calls) == 2
+        assert st.cdf.shape == (g.n,)
+    # chromatic-dist (gibbs only): one call = one full lattice sweep
+    gl = make_lattice_ising(3, beta=0.45)
+    eng = engine.make("gibbs", gl, backend="dist", mesh=mesh,
+                      schedule=ChromaticBlocks(lattice_colors(3)))
+    assert eng.updates_per_call == gl.n
     st = eng.sweep(eng.init(key, 4))
-    assert eng.updates_per_call == 4 and st.x.shape == (4, g.n)
+    assert st.x.shape == (4, gl.n)
+
+
+def test_dist_unsupported_combos_raise_uniform_error():
+    """Every unsupported (engine, schedule) dist request raises the ONE
+    ValueError naming the full supported table."""
+    from repro.launch.mesh import make_auto_mesh
+    gl = make_lattice_ising(3, beta=0.45)
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
+    sched = ChromaticBlocks(lattice_colors(3))
+    for name in ("mgpmh", "min-gibbs", "doublemin"):
+        with pytest.raises(ValueError, match="backend='dist' supports"):
+            engine.make(name, gl, backend="dist", mesh=mesh, schedule=sched)
 
 
 def test_make_errors():
