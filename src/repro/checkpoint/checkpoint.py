@@ -1,14 +1,23 @@
-"""Checkpointing: atomic, manifest-driven, mesh-reshardable, async-capable.
+"""Checkpointing: atomic, manifest-driven, mesh-reshardable, async-capable,
+integrity-checked.
 
 Layout:  <dir>/step_<N>/manifest.json + arrays.npz
-  * save writes to ``step_<N>.tmp`` then os.rename's — a crashed save can
-    never shadow a good checkpoint (fault-tolerance invariant #1).
+  * save writes to a unique ``step_<N>.tmp-*`` then os.rename's — a crashed
+    save can never shadow a good checkpoint (fault-tolerance invariant #1).
   * every leaf is keyed by its pytree path; restore rebuilds the tree and
     (optionally) ``jax.device_put``'s each leaf with a NamedSharding — so a
     checkpoint taken on one mesh restores onto *any* mesh shape (elastic
     restart).
   * ``async_save`` snapshots to host memory synchronously (cheap) and does
-    file I/O on a worker thread, overlapping with the next train steps.
+    file I/O on a worker thread, overlapping with the next steps.  Both
+    paths route through one ``_write``; concurrent saves of the same step
+    are serialized by a per-directory lock (last writer wins, no torn dir).
+  * the manifest carries a crc32 **checksum per array** (and one for the
+    key set), so ``verify`` detects bit-rot / truncation without a restore
+    and ``latest_good_step`` can pick the newest checkpoint that actually
+    loads — quarantining corrupt step dirs instead of handing them to the
+    resume path (fault-tolerance invariant #2: never resume from a
+    checkpoint that fails verification).
 
 Single-process note: this container runs one process, so leaves are written
 whole.  The manifest carries (mesh_shape, pspec) per leaf; the multi-host
@@ -22,14 +31,27 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Dict, Optional
+import uuid
+import zlib
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["save", "async_save", "restore", "latest_step", "wait_pending"]
+__all__ = ["save", "async_save", "restore", "latest_step",
+           "latest_good_step", "verify", "read_manifest", "wait_pending"]
 
-_PENDING: list[threading.Thread] = []
+_PENDING: List[threading.Thread] = []
+_MAX_PENDING = 4                       # writer threads in flight, bounded
+
+_DIR_LOCKS: Dict[str, threading.Lock] = {}
+_DIR_LOCKS_GUARD = threading.Lock()
+
+
+def _dir_lock(directory: str) -> threading.Lock:
+    key = os.path.abspath(directory)
+    with _DIR_LOCKS_GUARD:
+        return _DIR_LOCKS.setdefault(key, threading.Lock())
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -50,62 +72,67 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _to_host(tree) -> Dict[str, np.ndarray]:
+    flat = _flatten(tree)
+    return {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+
+def _checksum(arr: np.ndarray) -> int:
+    """crc32 over the array bytes (C-contiguous, shape/dtype pinned by the
+    manifest fields next to it)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _write(directory: str, step: int, host: Dict[str, np.ndarray],
+           extra: Optional[dict]) -> str:
+    """The ONE checkpoint writer: tmp dir -> arrays.npz + manifest.json ->
+    atomic rename.  Serialized per directory so concurrent saves of the
+    same step can't interleave their rm/rename (last writer wins)."""
+    with _dir_lock(directory):
+        os.makedirs(directory, exist_ok=True)
+        final = os.path.join(directory, f"step_{step:08d}")
+        # unique suffix: a crashed writer's leftover tmp never collides
+        tmp = f"{final}.tmp-{uuid.uuid4().hex[:8]}"
+        os.makedirs(tmp)
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"),
+                     **{k.replace("/", "::"): v for k, v in host.items()})
+            manifest = {
+                "step": step,
+                "keys": sorted(host.keys()),
+                "shapes": {k: list(v.shape) for k, v in host.items()},
+                "dtypes": {k: str(v.dtype) for k, v in host.items()},
+                "checksums": {k: _checksum(v) for k, v in host.items()},
+                "extra": extra or {},
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=1)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+    return final
+
+
 def save(directory: str, step: int, tree, extra: Optional[dict] = None
          ) -> str:
-    os.makedirs(directory, exist_ok=True)
-    final = os.path.join(directory, f"step_{step:08d}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
-    flat = _flatten(tree)
-    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    np.savez(os.path.join(tmp, "arrays.npz"),
-             **{k.replace("/", "::"): v for k, v in host.items()})
-    manifest = {
-        "step": step,
-        "keys": sorted(host.keys()),
-        "shapes": {k: list(v.shape) for k, v in host.items()},
-        "dtypes": {k: str(v.dtype) for k, v in host.items()},
-        "extra": extra or {},
-    }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
-    return final
+    return _write(directory, step, _to_host(tree), extra)
 
 
 def async_save(directory: str, step: int, tree,
                extra: Optional[dict] = None) -> threading.Thread:
-    """Snapshot to host memory now; write files on a background thread."""
-    flat = _flatten(tree)
-    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    """Snapshot to host memory now; write files on a background thread.
 
-    def work():
-        class _Pre:
-            pass
-        # reuse save() logic on the already-fetched host arrays
-        os.makedirs(directory, exist_ok=True)
-        final = os.path.join(directory, f"step_{step:08d}")
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{k.replace("/", "::"): v for k, v in host.items()})
-        manifest = {"step": step, "keys": sorted(host.keys()),
-                    "shapes": {k: list(v.shape) for k, v in host.items()},
-                    "dtypes": {k: str(v.dtype) for k, v in host.items()},
-                    "extra": extra or {}}
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f, indent=1)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-
-    t = threading.Thread(target=work, daemon=True)
+    At most ``_MAX_PENDING`` writer threads are tracked in flight — the
+    caller blocks on the oldest when the bound is hit, so a slow disk
+    backpressures instead of accumulating unbounded snapshots."""
+    host = _to_host(tree)
+    while len(_PENDING) >= _MAX_PENDING:
+        _PENDING.pop(0).join()
+    t = threading.Thread(target=_write, args=(directory, step, host, extra),
+                         daemon=True)
     t.start()
     _PENDING.append(t)
     return t
@@ -116,12 +143,98 @@ def wait_pending():
         _PENDING.pop().join()
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _step_dirs(directory: str) -> Dict[int, str]:
     if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for d in os.listdir(directory)
-             if (m := re.fullmatch(r"step_(\d+)", d))]
-    return max(steps) if steps else None
+        return {}
+    out = {}
+    for d in os.listdir(directory):
+        if (m := re.fullmatch(r"step_(\d+)", d)):
+            out[int(m.group(1))] = os.path.join(directory, d)
+    return out
+
+
+def verify(directory: str, step: int) -> List[str]:
+    """Integrity-check one checkpoint; returns a list of problems ([] = ok).
+
+    Checks: manifest present and parseable, arrays.npz present and
+    loadable, key sets match, per-array shape/dtype match the manifest,
+    and (when the manifest carries them — all checkpoints written since
+    checksums landed do) per-array crc32 checksums."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    problems: List[str] = []
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"manifest unreadable: {e}"]
+    try:
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            host = {k.replace("::", "/"): data[k] for k in data.files}
+    except Exception as e:  # noqa: BLE001 — np.load raises many types
+        return [f"arrays unreadable: {e}"]
+    keys = set(manifest.get("keys", []))
+    if keys != set(host):
+        problems.append(f"key mismatch: manifest {sorted(keys)[:3]}... vs "
+                        f"arrays {sorted(host)[:3]}...")
+        return problems
+    sums = manifest.get("checksums", {})
+    for k, v in host.items():
+        if list(v.shape) != manifest["shapes"].get(k):
+            problems.append(f"shape mismatch at {k!r}")
+        elif str(v.dtype) != manifest["dtypes"].get(k):
+            problems.append(f"dtype mismatch at {k!r}")
+        elif k in sums and _checksum(v) != sums[k]:
+            problems.append(f"checksum mismatch at {k!r}")
+    return problems
+
+
+def _quarantine(path: str):
+    dst = path + ".corrupt"
+    if os.path.exists(dst):
+        shutil.rmtree(dst)
+    os.rename(path, dst)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest step whose dir has a parseable manifest and an arrays file.
+
+    A partially written / damaged step dir (missing or unloadable
+    ``manifest.json``, missing ``arrays.npz``) is skipped, never returned
+    as a restore target.  For full content verification (checksums) use
+    :func:`latest_good_step`."""
+    for step, path in sorted(_step_dirs(directory).items(), reverse=True):
+        if not os.path.exists(os.path.join(path, "arrays.npz")):
+            continue
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                json.load(f)
+        except (OSError, ValueError):
+            continue
+        return step
+    return None
+
+
+def latest_good_step(directory: str, *, quarantine: bool = False
+                     ) -> Optional[int]:
+    """Newest step that passes :func:`verify`, scanning backwards.
+
+    ``quarantine=True`` renames failing step dirs to ``*.corrupt`` so they
+    are never rescanned (and a post-mortem can still inspect them)."""
+    for step, path in sorted(_step_dirs(directory).items(), reverse=True):
+        if not verify(directory, step):
+            return step
+        if quarantine:
+            _quarantine(path)
+    return None
+
+
+def read_manifest(directory: str, step: int) -> dict:
+    """The manifest of one checkpoint (carries the caller's ``extra`` — the
+    supervisor records its engine name / outer step there, so a fresh
+    process can resume the right engine)."""
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
 
 
 def restore(directory: str, step: int, like,

@@ -230,8 +230,13 @@ class Engine:
         else:
             new, stats = self.sweep_fn(state), None
         delta = None if old_acc is None else new.accepts - old_acc
+        # health hooks: the state's cached energy + the site domain feed the
+        # in-graph guards (bad_state flag, windowed acceptance) riding the
+        # telemetry carry — no host sync on this path
         telemetry = telemetry_update(telemetry, old_x, new.x,
-                                     self.updates_per_call, delta, stats)
+                                     self.updates_per_call, delta, stats,
+                                     cache=getattr(new, "cache", None),
+                                     n_values=self.graph.D)
         return new, telemetry
 
     def describe(self) -> Dict[str, Any]:

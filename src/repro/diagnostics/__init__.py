@@ -16,11 +16,13 @@ the telemetry types without an import cycle.
 """
 from .telemetry import (Telemetry, SweepStats, telemetry_init,
                         telemetry_update, split_rhat, ess_per_site,
-                        acceptance_rate, summarize)
+                        acceptance_rate, summarize, state_health,
+                        health_report, clear_health)
 
 __all__ = [
     "Telemetry", "SweepStats", "telemetry_init", "telemetry_update",
     "split_rhat", "ess_per_site", "acceptance_rate", "summarize",
+    "state_health", "health_report", "clear_health",
     # lazy (see __getattr__): adaptive control + exact references
     "AdaptiveScan", "AdaptiveState", "make_adaptive_engine",
     "refresh_cdf", "run_with_telemetry", "autotune_lambda",

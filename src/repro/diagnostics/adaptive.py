@@ -134,7 +134,8 @@ def make_adaptive_engine(name: str, graph, schedule: AdaptiveScan,
                         n - 1).astype(jnp.int32)
         new, stats = core(st._replace(key=knew), sites=i)
         delta = new.accepts - st.accepts
-        tel = telemetry_update(ast.tel, st.x, new.x, sweep_len, delta, stats)
+        tel = telemetry_update(ast.tel, st.x, new.x, sweep_len, delta, stats,
+                               cache=new.cache, n_values=graph.D)
         calls = ast.calls + 1
         cdf = jax.lax.cond(calls % K == 0,
                            lambda t: _refresh_cdf(t, n, mix, r0),

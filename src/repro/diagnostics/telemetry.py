@@ -40,7 +40,13 @@ import numpy as np
 __all__ = [
     "Telemetry", "SweepStats", "telemetry_init", "telemetry_update",
     "split_rhat", "ess_per_site", "acceptance_rate", "summarize",
+    "state_health", "health_report", "clear_health", "HEALTH_DECAY",
 ]
+
+# per-sweep-call decay of the windowed acceptance counters: ~last
+# 1/(1-decay) = 50 calls dominate, so a collapse shows within a few dozen
+# sweeps instead of being averaged away by a long healthy history
+HEALTH_DECAY = 0.98
 
 
 class SweepStats(NamedTuple):
@@ -79,6 +85,12 @@ class Telemetry(NamedTuple):
     site_prop: jax.Array   # (n,) per-site proposals (instrumented paths)
     site_acc: jax.Array    # (n,) per-site MH acceptances (instrumented)
     site_flips: jax.Array  # (n,) per-site value changes (state diffs)
+    # --- health guards (DESIGN.md §fault-tolerance): in-graph flags the
+    # supervisor reads once per outer step; zero host sync in the sweep loop
+    bad_state: jax.Array   # () float32 sticky flag: non-finite cache energy
+    #                        or out-of-domain site value seen in any sweep
+    win_prop: jax.Array    # () float32 decayed site-update count (window)
+    win_acc: jax.Array     # () float32 decayed MH-acceptance count (window)
 
 
 def telemetry_init(x: jax.Array, half_at: Optional[float] = None,
@@ -105,18 +117,31 @@ def telemetry_init(x: jax.Array, half_at: Optional[float] = None,
         accepts=jnp.zeros((C,), jnp.float32),
         site_prop=jnp.zeros((n,), jnp.float32),
         site_acc=jnp.zeros((n,), jnp.float32),
-        site_flips=jnp.zeros((n,), jnp.float32))
+        site_flips=jnp.zeros((n,), jnp.float32),
+        bad_state=jnp.float32(0.0), win_prop=jnp.float32(0.0),
+        win_acc=jnp.float32(0.0))
 
 
 def telemetry_update(tel: Telemetry, old_x: jax.Array, new_x: jax.Array,
                      updates: int, accept_delta: Optional[jax.Array] = None,
-                     stats: Optional[SweepStats] = None) -> Telemetry:
+                     stats: Optional[SweepStats] = None,
+                     cache: Optional[jax.Array] = None,
+                     n_values: Optional[int] = None) -> Telemetry:
     """One streaming update from a sweep call that advanced ``old_x`` to
     ``new_x`` (both (C, n) int) in ``updates`` site updates per chain.
 
     Pure jnp, O(C*n) elementwise — safe inside ``lax.scan``.  ``accept_delta``
     is the per-chain MH-acceptance increment ((C,), optional);``stats`` is the
     instrumented sweep's per-site counters (optional).
+
+    ``cache`` (the state's cached energy estimate, optional) and
+    ``n_values`` (the site domain size D, optional) feed the in-graph
+    health guards: ``bad_state`` latches when any cache entry goes
+    non-finite or any site value leaves [0, D) — a couple of ``isfinite``
+    reductions riding the carry, no host sync — and ``win_prop`` /
+    ``win_acc`` keep an exponentially windowed acceptance rate so a
+    λ-mistuning acceptance collapse (De Sa et al. 2018, Thm. 2) is visible
+    long before the cumulative rate moves.
     """
     xf = new_x.astype(jnp.float32)
     k = tel.samples + 1.0
@@ -147,11 +172,59 @@ def telemetry_update(tel: Telemetry, old_x: jax.Array, new_x: jax.Array,
     if stats is not None:
         site_prop = site_prop + stats.site_prop
         site_acc = site_acc + stats.site_acc
+
+    # health guards: sticky bad-state flag + windowed acceptance counters
+    bad = jnp.maximum(tel.bad_state, state_health(new_x, cache, n_values))
+    win_prop = HEALTH_DECAY * tel.win_prop + float(updates)
+    win_acc = HEALTH_DECAY * tel.win_acc + (
+        jnp.float32(float(updates)) if accept_delta is None
+        else accept_delta.astype(jnp.float32).mean())
     return Telemetry(
         samples=k, updates=tel.updates + float(updates), half_at=tel.half_at,
         mean=mean, m2=m2, samples_h=kh, mean_h=mean_h, m2_h=m2_h,
         prev=prev, cross=cross, cross_n=cross_n, accepts=accepts,
-        site_prop=site_prop, site_acc=site_acc, site_flips=flips)
+        site_prop=site_prop, site_acc=site_acc, site_flips=flips,
+        bad_state=bad, win_prop=win_prop, win_acc=win_acc)
+
+
+def state_health(x: jax.Array, cache: Optional[jax.Array] = None,
+                 n_values: Optional[int] = None) -> jax.Array:
+    """() float32 flag: 1.0 iff the chain state is degenerate.
+
+    Degenerate means a non-finite cached energy (NaN/Inf factor weights or
+    estimator blow-ups propagate there) or a site value outside [0, D)
+    (D = ``n_values``; x is integral, so corruption shows as out-of-domain
+    codes rather than NaN).  Pure jnp reduction — usable both inside the
+    telemetry carry and as a one-off device-side check at a supervisor
+    boundary."""
+    bad = jnp.any(x < 0)
+    if n_values is not None:
+        bad = bad | jnp.any(x >= n_values)
+    if cache is not None:
+        bad = bad | ~jnp.all(jnp.isfinite(cache.astype(jnp.float32)))
+    return bad.astype(jnp.float32)
+
+
+def clear_health(tel: Telemetry) -> Telemetry:
+    """Reset the health guards (sticky flag + acceptance window) — call
+    after a rollback so the pre-rollback incident doesn't re-trigger."""
+    return tel._replace(bad_state=jnp.float32(0.0),
+                        win_prop=jnp.float32(0.0),
+                        win_acc=jnp.float32(0.0))
+
+
+def health_report(tel: Telemetry, exact_accept: bool = False) -> dict:
+    """ONE host read of the in-graph health guards (supervisor boundary).
+
+    ``win_acceptance`` is the exponentially windowed per-update acceptance
+    (1.0 for exact-accept samplers and before any window accumulates)."""
+    bad = bool(np.asarray(tel.bad_state) > 0.0)
+    wp = float(np.asarray(tel.win_prop))
+    if exact_accept or wp <= 0.0:
+        win = 1.0
+    else:
+        win = float(np.asarray(tel.win_acc)) / wp
+    return {"bad_state": bad, "win_acceptance": win}
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,7 @@ exactly like model params — restart resumes the chain bit-exactly.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -32,27 +33,72 @@ import numpy as np
 
 from ..core import engine as engine_lib
 from ..checkpoint import checkpoint as ckpt
-from .mesh import make_auto_mesh, compat_shard_map
+from .mesh import make_device_mesh, compat_shard_map
 
 # legacy alias (pre-engine consumers imported the compat wrapper from here)
 shard_map = compat_shard_map
 
 
-def _build_engine(config: str, engine: str, sweep: int, mp_shards: int,
-                  backend: str, adaptive: bool):
+def _engine_factory(config: str, sweep: int, mp_shards: int, backend: str,
+                    adaptive: bool):
+    """``(make_engine, graph)`` where ``make_engine(name, devices,
+    **params)`` builds the engine over an explicit device list — the ONE
+    construction hook both the plain loop and the supervisor (which swaps
+    engines on degrade/retune and shrinks the device list on elastic
+    restart) call."""
     wl = engine_lib.make_workload(config)
     g = wl.graph
     schedule = (engine_lib.AdaptiveScan(sweep_len=max(sweep, 1)) if adaptive
                 else engine_lib.UniformSites(max(sweep, 1)))
-    if backend == "dist":
-        n_dev = len(jax.devices())
-        mp = mp_shards or 1
-        dp = n_dev // mp
-        mesh = make_auto_mesh((dp, mp), ("data", "model"))
-        return engine_lib.make(engine, g, schedule=schedule,
-                               backend="dist", mesh=mesh), g
-    return engine_lib.make(engine, g, schedule=schedule,
-                           backend=backend), g
+
+    def make_engine(name, devices, **params):
+        if backend == "dist":
+            mp = mp_shards or 1
+            dp = max(len(devices) // mp, 1)
+            mesh = make_device_mesh((dp, mp), ("data", "model"), devices)
+            return engine_lib.make(name, g, schedule=schedule,
+                                   backend="dist", mesh=mesh, **params)
+        return engine_lib.make(name, g, schedule=schedule, backend=backend,
+                               **params)
+    return make_engine, g
+
+
+def _build_engine(config: str, engine: str, sweep: int, mp_shards: int,
+                  backend: str, adaptive: bool):
+    make_engine, g = _engine_factory(config, sweep, mp_shards, backend,
+                                     adaptive)
+    return make_engine(engine, list(jax.devices())), g
+
+
+def run_supervised(config: str, engine: str, steps: int, chains: int,
+                   ckpt_dir: str = "", mp_shards: int = 0, seed: int = 0,
+                   sweep: int = 0, backend: str = "dist",
+                   adaptive: bool = False, fault_plan: str = "",
+                   chunk: int = 16, max_restarts: int = 5):
+    """The supervised counterpart of :func:`run`: same engine/workload
+    flags, but the loop is driven by ``runtime.supervisor.SupervisedRun``
+    — retrying restarts, verified-checkpoint rollback, health guards with
+    λ-retune / degrade-to-gibbs escalation, elastic restart — optionally
+    under a deterministic ``--fault-plan`` (inline JSON or a path)."""
+    from ..runtime import supervisor as sup
+    from ..runtime.faultinject import FaultPlan
+
+    make_engine, g = _engine_factory(config, sweep, mp_shards, backend,
+                                     adaptive)
+    cfg = sup.SupervisorConfig(
+        outer_steps=-(-steps // chunk), sweeps_per_outer=chunk,
+        chains=chains, seed=seed, ckpt_dir=ckpt_dir,
+        max_restarts=max_restarts,
+        heartbeat=os.path.join(ckpt_dir, "heartbeat.json")
+        if ckpt_dir else "")
+    plan = FaultPlan.from_json(fault_plan) if fault_plan else None
+    res = sup.SupervisedRun(engine, make_engine, cfg, plan).run()
+    m = res.marginals
+    err = float(np.sqrt(((m - 1 / g.D) ** 2).sum(-1)).mean())
+    print(f"[gibbs] supervised done: outer_steps={res.outer_steps} "
+          f"restarts={res.restarts} rollbacks={res.rollbacks} "
+          f"engine={res.engine.name} marg_err={err:.4f}", flush=True)
+    return res
 
 
 def run(config: str, engine: str, steps: int, chains: int,
@@ -137,6 +183,19 @@ def main():
                     help="thread streaming convergence telemetry and log "
                          "acceptance / split-R-hat / ESS per second")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the supervised runtime: verified-"
+                         "checkpoint restarts, in-graph health guards "
+                         "with rollback + lambda-retune / degrade-to-gibbs, "
+                         "elastic restart (runtime/supervisor.py)")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic FaultPlan as inline JSON or a file "
+                         "path (requires --supervise); see "
+                         "runtime/faultinject.py")
+    ap.add_argument("--supervise-chunk", type=int, default=16,
+                    help="sweep calls per supervised outer step (health "
+                         "check + checkpoint cadence)")
+    ap.add_argument("--max-restarts", type=int, default=5)
     args = ap.parse_args()
     # reject impossible combinations with a usage message, not a traceback
     supported = engine_lib.backends(args.engine)
@@ -148,6 +207,16 @@ def main():
                                              "doublemin"):
         ap.error(f"--adaptive supports the gibbs/mgpmh/min-gibbs/doublemin "
                  f"engines, not {args.engine!r}")
+    if args.fault_plan and not args.supervise:
+        ap.error("--fault-plan requires --supervise")
+    if args.supervise:
+        run_supervised(args.config, args.engine, args.steps, args.chains,
+                       ckpt_dir=args.ckpt_dir, mp_shards=args.mp_shards,
+                       sweep=args.sweep, backend=args.backend,
+                       adaptive=args.adaptive, fault_plan=args.fault_plan,
+                       chunk=args.supervise_chunk,
+                       max_restarts=args.max_restarts)
+        return
     run(args.config, args.engine, args.steps, args.chains,
         ckpt_dir=args.ckpt_dir, mp_shards=args.mp_shards, sweep=args.sweep,
         backend=args.backend, adaptive=args.adaptive,

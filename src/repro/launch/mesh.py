@@ -8,9 +8,10 @@ init and only then calls make_production_mesh().
 from __future__ import annotations
 
 import jax
+import numpy as np
 
-__all__ = ["make_production_mesh", "make_auto_mesh", "auto_axis_types",
-           "compat_shard_map", "dp_axes", "MP_AXIS"]
+__all__ = ["make_production_mesh", "make_auto_mesh", "make_device_mesh",
+           "auto_axis_types", "compat_shard_map", "dp_axes", "MP_AXIS"]
 
 MP_AXIS = "model"
 
@@ -49,6 +50,18 @@ def make_auto_mesh(shape, axes) -> jax.sharding.Mesh:
         return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
     except TypeError:                      # older jax without axis_types kwarg
         return jax.make_mesh(shape, axes)
+
+
+def make_device_mesh(shape, axes, devices) -> jax.sharding.Mesh:
+    """A mesh over an explicit device subset — the elastic-restart path:
+    after a (simulated) device loss the supervisor rebuilds its dist engine
+    over the survivors, which ``jax.make_mesh`` (always all devices) can't
+    express."""
+    need = int(np.prod(shape))
+    if len(devices) < need:
+        raise ValueError(f"mesh shape {shape} needs {need} devices, "
+                         f"got {len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices[:need]).reshape(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

@@ -1,0 +1,406 @@
+"""Supervised sampling runtime: the driver that keeps a chain alive for
+days (DESIGN.md §fault-tolerance).
+
+:class:`SupervisedRun` wraps any :class:`~repro.core.engine.Engine` loop
+with everything the bare launcher loop lacks:
+
+  * **restarts** under a progress-refreshing retry budget with exponential
+    backoff (``runtime/fault.py``: :class:`RestartBudget` / :class:`Backoff`),
+    restoring from the newest checkpoint that passes integrity verification
+    (``checkpoint.latest_good_step`` — corrupt step dirs are quarantined,
+    never resumed from);
+  * **periodic async checkpoints** of the full sampler bundle (state +
+    running marginal sums + snapshot count), so resume is bit-exact;
+  * **in-graph health guards** read ONCE per outer step: the sticky
+    ``bad_state`` flag and windowed acceptance counters ride the existing
+    telemetry carry (``diagnostics/telemetry.py``) — the healthy-path sweep
+    loop stays host-sync-free — plus one device-side
+    :func:`~repro.diagnostics.telemetry.state_health` reduction at the
+    boundary.  An unhealthy step is never checkpointed; the supervisor
+    rolls back to the last good checkpoint and, after ``max_strikes``
+    consecutive rollbacks, escalates: re-tune λ via ``autotune_lambda``
+    (MH minibatch engines — acceptance collapse means λ is mis-tuned
+    relative to the local energy scale, De Sa et al. 2018 Thm. 2) or
+    gracefully degrade to the exact ``gibbs`` engine (one ``engine.make``
+    swap; the chain state carries over — same pytree layout);
+  * **elastic restart**: a :class:`~repro.runtime.faultinject.
+    SimulatedDeviceLoss` (or a real one surfacing as an exception) rebuilds
+    the engine over the surviving devices and restores the checkpoint onto
+    the smaller mesh — global array shapes are mesh-independent, and the
+    few per-data-shard leaves (PRNG keys, adaptive counters) are re-binned
+    by :func:`reshard_dp`;
+  * **heartbeat + step watchdog + incident log**: liveness for external
+    monitors, straggler counters, and one JSON line per incident
+    (restart / rollback / retune / degrade / fault) for post-mortems and
+    the CI chaos smoke.
+
+Fault injection (``runtime/faultinject.py``) plugs in as a scripted
+:class:`FaultPlan`, making every recovery path above deterministically
+testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import checkpoint as ckpt
+from ..diagnostics.telemetry import health_report, state_health
+from .fault import RestartBudget, Backoff, StepWatchdog, Heartbeat
+from .faultinject import (FaultPlan, SimulatedPreemption, SimulatedDeviceLoss,
+                          corrupt_checkpoint, inject_state_fault)
+
+__all__ = ["SupervisorConfig", "SupervisedRun", "RunResult", "reshard_dp"]
+
+
+class Bundle(NamedTuple):
+    """What gets checkpointed: sampler state + (non-dist) marginal sums and
+    snapshot count.  ``marg``/``count`` are None on the dist backend, which
+    accumulates both inside its own state — None subtrees simply vanish
+    from the checkpoint manifest."""
+    st: Any
+    marg: Optional[jax.Array]
+    count: Optional[jax.Array]
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    outer_steps: int                  # supervised outer steps to complete
+    sweeps_per_outer: int = 8         # Engine.sweep calls per outer step
+    chains: int = 16
+    seed: int = 0
+    ckpt_dir: str = ""                # empty: no persistence (still guards)
+    ckpt_every: int = 1               # outer steps between checkpoints
+    async_ckpt: bool = True
+    max_restarts: int = 5
+    refresh_after: Optional[int] = 8  # successes refilling the retry budget
+    backoff_base: float = 0.05
+    backoff_factor: float = 2.0
+    backoff_max: float = 2.0
+    acceptance_floor: float = 0.02    # windowed-acceptance health floor
+    floor_after: int = 2              # outer steps before the floor applies
+    max_strikes: int = 2              # rollbacks before retune/degrade
+    retune: bool = True               # try autotune_lambda before degrading
+    retune_target: tuple = (0.5, 0.9)
+    heartbeat: str = ""               # liveness file path (optional)
+    incident_log: str = ""            # default: <ckpt_dir>/incidents.jsonl
+
+
+@dataclasses.dataclass
+class RunResult:
+    state: Any                        # final sampler state
+    marginals: np.ndarray             # (n, D) chain-averaged estimate
+    outer_steps: int
+    restarts: int
+    rollbacks: int
+    incidents: List[Dict[str, Any]]
+    engine: Any                       # the final Engine (post degrade/retune)
+    telemetry: Any
+    watchdog: Dict[str, Any]
+
+
+class SupervisedRun:
+    """Drive ``make_engine(name, devices, **params)`` for
+    ``config.outer_steps`` outer steps, surviving preemptions, checkpoint
+    corruption, sampler divergence, and device loss.
+
+    ``make_engine`` is the ONE construction hook: the supervisor calls it
+    with the current engine name and surviving device list — on degrade it
+    passes ``"gibbs"``, on retune it forwards the tuned λ as a keyword —
+    so mesh/backends stay the caller's business (the launcher closes over
+    its ``--backend``/``--mp-shards`` flags).
+    """
+
+    def __init__(self, engine_name: str,
+                 make_engine: Callable[..., Any],
+                 config: SupervisorConfig,
+                 fault_plan: Optional[FaultPlan] = None, *,
+                 sleep_fn: Callable[[float], None] = time.sleep):
+        self.cfg = config
+        self.make_engine = make_engine
+        self.engine_name = engine_name
+        self.plan = fault_plan
+        self.devices = list(jax.devices())
+        self.engine = make_engine(engine_name, self.devices)
+        self.incidents: List[Dict[str, Any]] = []
+        self.rollbacks = 0
+        self._strikes = 0
+        self._chunk = None            # jitted chunk, rebuilt on engine swap
+        self._chunk_engine = None
+        self._budget = RestartBudget(config.max_restarts,
+                                     config.refresh_after)
+        self._backoff = Backoff(config.backoff_base, config.backoff_factor,
+                                config.backoff_max, sleep_fn)
+        self._watchdog = StepWatchdog()
+        self._heartbeat = (Heartbeat(config.heartbeat, interval_s=0.0)
+                           if config.heartbeat else None)
+        self._incident_path = config.incident_log or (
+            os.path.join(config.ckpt_dir, "incidents.jsonl")
+            if config.ckpt_dir else "")
+
+    # -- incident log -------------------------------------------------------
+
+    def _incident(self, kind: str, **info):
+        rec = {"time": time.time(), "kind": kind, **info}
+        self.incidents.append(rec)
+        print(f"[supervisor] {kind}: "
+              f"{json.dumps({k: v for k, v in info.items()})}", flush=True)
+        if self._incident_path:
+            parent = os.path.dirname(self._incident_path)
+            if parent:
+                os.makedirs(parent, exist_ok=True)
+            with open(self._incident_path, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+    # -- bundle lifecycle ---------------------------------------------------
+
+    def _init_bundle(self) -> Bundle:
+        eng = self.engine
+        st = eng.init(jax.random.PRNGKey(self.cfg.seed), self.cfg.chains)
+        if eng.backend == "dist":
+            return Bundle(st=st, marg=None, count=None)
+        g = eng.graph
+        return Bundle(st=st,
+                      marg=jnp.zeros((self.cfg.chains, g.n, g.D),
+                                     jnp.float32),
+                      count=jnp.float32(0.0))
+
+    def _save(self, step: int, bundle: Bundle):
+        extra = {"outer_step": step, "engine": self.engine_name,
+                 "backend": self.engine.backend,
+                 # numeric params survive a process restart, so a resumed
+                 # run rebuilds e.g. a retuned lambda, not the default
+                 "params": {k: v for k, v in self.engine.params.items()
+                            if isinstance(v, (int, float))}}
+        if self.cfg.async_ckpt:
+            ckpt.async_save(self.cfg.ckpt_dir, step, bundle, extra=extra)
+        else:
+            ckpt.save(self.cfg.ckpt_dir, step, bundle, extra=extra)
+
+    def _recover(self, reason: str):
+        """(bundle, telemetry, outer_step) from the newest checkpoint that
+        verifies — quarantining corrupt ones — or from scratch."""
+        if self.cfg.ckpt_dir:
+            ckpt.wait_pending()
+            step = ckpt.latest_good_step(self.cfg.ckpt_dir, quarantine=True)
+        else:
+            step = None
+        if step is None:
+            bundle = self._init_bundle()
+            tel = self.engine.init_telemetry(bundle.st)
+            self._incident("restore", source="scratch", reason=reason)
+            return bundle, tel, 0
+        saved = ckpt.read_manifest(self.cfg.ckpt_dir, step).get("extra", {})
+        if reason == "start":
+            # a fresh process adopts the checkpoint's engine (a degraded /
+            # retuned run resumes as such); in-session recoveries keep the
+            # CURRENT engine — a post-escalation rollback must not swap the
+            # old engine back in from a pre-escalation checkpoint
+            name = saved.get("engine", self.engine_name)
+            params = saved.get("params", {})
+            current = {k: v for k, v in self.engine.params.items()
+                       if isinstance(v, (int, float))}
+            if name != self.engine_name or (params and params != current):
+                self._swap_engine(name, note="resume", **params)
+        template = self._init_bundle()
+        bundle = ckpt.restore(self.cfg.ckpt_dir, step, template)
+        bundle = reshard_dp(bundle, template)
+        tel = self.engine.init_telemetry(bundle.st)
+        self._incident("restore", source=f"step_{step}", reason=reason)
+        return bundle, tel, int(saved.get("outer_step", step))
+
+    # -- engine swaps (degrade / retune / elastic) --------------------------
+
+    def _swap_engine(self, name: str, note: str, **params):
+        self.engine_name = name
+        self.engine = self.make_engine(name, self.devices, **params)
+        self._chunk = None
+        if note != "resume":
+            self._incident(note, engine=name,
+                           devices=len(self.devices), **params)
+
+    def _escalate(self):
+        """Too many consecutive rollbacks: retune λ (MH engines) or degrade
+        to exact gibbs.  State carries over via the next checkpoint restore
+        (same pytree layout on every engine of a backend)."""
+        eng = self.engine
+        if (self.cfg.retune and not eng.exact_accept
+                and eng.name in ("mgpmh", "doublemin")):
+            from ..diagnostics.adaptive import autotune_lambda
+            lam_key = "lam1" if eng.name == "doublemin" else "lam"
+            lam0 = float(eng.params.get(lam_key, 0.0)) or None
+            tuned, history = autotune_lambda(
+                eng.name, eng.graph, target=self.cfg.retune_target,
+                sweep=8, n_chains=8, pilot_calls=16, backend="jnp",
+                lam0=None if lam0 is None else 2.0 * lam0,
+                seed=self.cfg.seed + 1)
+            lam = float(tuned.params[lam_key])
+            self._swap_engine(eng.name, note="retune",
+                              **{lam_key: lam})
+        else:
+            self._swap_engine("gibbs", note="degrade")
+        self._strikes = 0
+
+    # -- the outer step -----------------------------------------------------
+
+    def _make_chunk(self):
+        eng, n_sweeps = self.engine, self.cfg.sweeps_per_outer
+        D = eng.graph.D
+        if eng.backend == "dist":
+            # the dist sweep is already one jitted shard_map launch with
+            # donated buffers; drive it from the host like the launcher does
+            def chunk(st, tel, marg, count):
+                for _ in range(n_sweeps):
+                    st, tel = eng.sweep(st, tel)
+                return st, tel, marg, count
+            return chunk
+
+        @jax.jit
+        def chunk(st, tel, marg, count):
+            def body(carry, _):
+                st, tel, marg, count = carry
+                st, tel = eng.sweep(st, tel)
+                marg = marg + jax.nn.one_hot(st.x, D, dtype=jnp.float32)
+                return (st, tel, marg, count + 1.0), None
+            (st, tel, marg, count), _ = jax.lax.scan(
+                body, (st, tel, marg, count), None, length=n_sweeps)
+            return st, tel, marg, count
+        return chunk
+
+    def _outer_step(self, bundle: Bundle, tel):
+        if self._chunk is None or self._chunk_engine is not self.engine:
+            self._chunk = self._make_chunk()
+            self._chunk_engine = self.engine
+        st, tel, marg, count = self._chunk(bundle.st, tel, bundle.marg,
+                                           bundle.count)
+        return Bundle(st=st, marg=marg, count=count), tel
+
+    def _healthy(self, bundle: Bundle, tel, step: int) -> bool:
+        """ONE host read per outer step of the device-resident guards."""
+        eng = self.engine
+        boundary = state_health(bundle.st.x,
+                                getattr(bundle.st, "cache", None),
+                                eng.graph.D)
+        rep = health_report(
+            tel._replace(bad_state=jnp.maximum(tel.bad_state, boundary)),
+            eng.exact_accept)
+        if rep["bad_state"]:
+            self._incident("health", guard="bad_state", outer_step=step)
+            return False
+        if (not eng.exact_accept and step >= self.cfg.floor_after
+                and rep["win_acceptance"] < self.cfg.acceptance_floor):
+            self._incident("health", guard="acceptance_floor",
+                           outer_step=step,
+                           win_acceptance=rep["win_acceptance"])
+            return False
+        return True
+
+    def _apply_faults(self, bundle: Bundle, step: int) -> Bundle:
+        if self.plan is None:
+            return bundle
+        for f in self.plan.take(step):
+            self._incident("fault", outer_step=step, fault=f.to_dict())
+            if f.kind == "preempt":
+                raise SimulatedPreemption(f"injected at outer step {step}")
+            if f.kind == "device-loss":
+                raise SimulatedDeviceLoss(f.keep)
+            if f.kind == "corrupt":
+                if self.cfg.ckpt_dir:
+                    ckpt.wait_pending()
+                    corrupt_checkpoint(self.cfg.ckpt_dir, f.target,
+                                       self.plan.rng(step))
+            elif f.kind == "nan":
+                bundle = bundle._replace(
+                    st=inject_state_fault(bundle.st, f,
+                                          self.plan.rng(step)))
+        return bundle
+
+    # -- the supervision loop -----------------------------------------------
+
+    def run(self) -> RunResult:
+        cfg = self.cfg
+        bundle, tel, step = self._recover("start")
+        while step < cfg.outer_steps:
+            try:
+                bundle = self._apply_faults(bundle, step)
+                with self._watchdog:
+                    new_bundle, new_tel = self._outer_step(bundle, tel)
+                if not self._healthy(new_bundle, new_tel, step):
+                    self._strikes += 1
+                    self.rollbacks += 1
+                    if self._strikes > cfg.max_strikes:
+                        self._escalate()
+                    bundle, tel, step = self._recover("rollback")
+                    continue
+                bundle, tel = new_bundle, new_tel
+                step += 1
+                self._strikes = 0
+                self._budget.note_success()
+                self._backoff.reset()
+                if self._heartbeat is not None:
+                    self._heartbeat.beat(step)
+                if cfg.ckpt_dir and (step % cfg.ckpt_every == 0
+                                     or step == cfg.outer_steps):
+                    self._save(step, bundle)
+            except Exception as e:     # noqa: BLE001 — supervision boundary
+                self._budget.consume()
+                if self._budget.exhausted:
+                    self._incident("giveup", error=repr(e))
+                    raise
+                self._incident("restart", outer_step=step, error=repr(e),
+                               restart=self._budget.used,
+                               backoff_s=self._backoff.next_delay())
+                self._backoff.wait()
+                if isinstance(e, SimulatedDeviceLoss):
+                    self.devices = self.devices[:e.keep]
+                    self._swap_engine(self.engine_name, note="elastic",
+                                      **self.engine.params)
+                bundle, tel, step = self._recover("restart")
+        ckpt.wait_pending()
+        return RunResult(
+            state=bundle.st, marginals=self._marginals(bundle),
+            outer_steps=step, restarts=self._budget.total,
+            rollbacks=self.rollbacks, incidents=self.incidents,
+            engine=self.engine, telemetry=tel,
+            watchdog=self._watchdog.stats())
+
+    def _marginals(self, bundle: Bundle) -> np.ndarray:
+        if self.engine.backend == "dist":
+            st = bundle.st
+            cnt = max(float(np.asarray(st.count)), 1.0)
+            return np.asarray(st.marg).sum(0) / (cnt * st.marg.shape[0])
+        cnt = max(float(np.asarray(bundle.count)), 1.0)
+        return (np.asarray(bundle.marg).sum(0)
+                / (cnt * bundle.marg.shape[0]))
+
+
+def reshard_dp(tree, like):
+    """Re-bin restored leaves whose leading (data-parallel) axis no longer
+    matches the template's — the elastic-restart path, where a checkpoint
+    written on dp shards restores onto dp' != dp.
+
+    Global (mesh-independent) shapes pass through untouched.  Shrinking:
+    float counters (adaptive flip/hit tables) are group-summed so no
+    statistics are lost; integer leaves (per-shard PRNG keys) take the
+    first dp' rows — the surviving shards keep their streams.  Growing:
+    rows repeat cyclically (keys are re-folded by the next sweep's splits).
+    """
+    def fix(a, b):
+        if a.shape == tuple(b.shape):
+            return a
+        if a.shape[1:] != tuple(b.shape)[1:] or a.ndim == 0 or b.ndim == 0:
+            raise ValueError(f"cannot reshard leaf {a.shape} -> {b.shape}")
+        new, old = b.shape[0], a.shape[0]
+        if new <= old:
+            if jnp.issubdtype(b.dtype, jnp.floating) and old % new == 0:
+                return a.reshape((new, old // new) + a.shape[1:]).sum(1)
+            return a[:new]
+        reps = -(-new // old)
+        return jnp.concatenate([a] * reps, axis=0)[:new]
+    return jax.tree_util.tree_map(fix, tree, like)

@@ -1,0 +1,144 @@
+"""Checkpoint integrity: checksums, verify, corrupt-step quarantine, and
+the save/async_save unification (one writer, per-directory serialization,
+bounded pending queue)."""
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+def _tree(seed=0, n=7):
+    rng = np.random.default_rng(seed)
+    return {"x": jnp.asarray(rng.integers(0, 5, (4, n), dtype=np.int32)),
+            "w": jnp.asarray(rng.normal(size=(n,)).astype(np.float32))}
+
+
+def test_manifest_carries_checksums_and_verify_passes(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, _tree(), extra={"engine": "mgpmh"})
+    man = ckpt.read_manifest(d, 3)
+    assert set(man["checksums"]) == set(man["keys"]) == {"x", "w"}
+    assert all(isinstance(v, int) for v in man["checksums"].values())
+    assert man["extra"] == {"engine": "mgpmh"}
+    assert ckpt.verify(d, 3) == []
+
+
+def test_verify_detects_array_corruption(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, _tree())
+    npz = os.path.join(d, "step_00000001", "arrays.npz")
+    size = os.path.getsize(npz)
+    with open(npz, "r+b") as f:         # flip bytes mid-file: checksum or
+        f.seek(size // 2)               # npz decode must trip
+        f.write(b"\xff" * 32)
+    assert ckpt.verify(d, 1) != []
+
+
+def test_verify_detects_manifest_damage_and_key_mismatch(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, _tree())
+    man_path = os.path.join(d, "step_00000001", "manifest.json")
+    man = json.load(open(man_path))
+    man["keys"].append("ghost")
+    json.dump(man, open(man_path, "w"))
+    assert any("mismatch" in p for p in ckpt.verify(d, 1))
+    with open(man_path, "w") as f:
+        f.write("{ not json")
+    assert any("manifest" in p for p in ckpt.verify(d, 1))
+
+
+def test_latest_good_step_skips_and_quarantines_corrupt(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3):
+        ckpt.save(d, s, _tree(seed=s))
+    # damage the newest step's arrays — verification must fall back to 2
+    npz = os.path.join(d, "step_00000003", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.seek(os.path.getsize(npz) // 2)
+        f.write(b"\x00" * 64)
+    assert ckpt.latest_good_step(d) == 2
+    assert ckpt.latest_good_step(d, quarantine=True) == 2
+    assert os.path.isdir(os.path.join(d, "step_00000003.corrupt"))
+    assert not os.path.isdir(os.path.join(d, "step_00000003"))
+    # the quarantined dir is never rescanned
+    assert ckpt.latest_good_step(d) == 2
+
+
+def test_latest_step_skips_partial_dirs(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 5, _tree())
+    # a torn dir: manifest but no arrays (crashed writer shape)
+    os.makedirs(os.path.join(d, "step_00000009"))
+    with open(os.path.join(d, "step_00000009", "manifest.json"), "w") as f:
+        f.write("{}")
+    # an unparseable manifest
+    os.makedirs(os.path.join(d, "step_00000008"))
+    open(os.path.join(d, "step_00000008", "arrays.npz"), "wb").close()
+    with open(os.path.join(d, "step_00000008", "manifest.json"), "w") as f:
+        f.write("not json at all")
+    assert ckpt.latest_step(d) == 5
+    assert ckpt.latest_step(str(tmp_path / "nope")) is None
+
+
+def test_save_and_async_save_write_identical_checkpoints(tmp_path):
+    t = _tree(seed=42)
+    d1, d2 = str(tmp_path / "sync"), str(tmp_path / "async")
+    ckpt.save(d1, 7, t, extra={"k": 1})
+    ckpt.async_save(d2, 7, t, extra={"k": 1})
+    ckpt.wait_pending()
+    m1, m2 = ckpt.read_manifest(d1, 7), ckpt.read_manifest(d2, 7)
+    assert m1["checksums"] == m2["checksums"]
+    assert m1["extra"] == m2["extra"]
+    r1 = ckpt.restore(d1, 7, t)
+    r2 = ckpt.restore(d2, 7, t)
+    for k in t:
+        assert np.array_equal(np.asarray(r1[k]), np.asarray(r2[k]))
+
+
+def test_concurrent_same_step_saves_leave_one_valid_checkpoint(tmp_path):
+    d = str(tmp_path / "ck")
+    trees = [_tree(seed=s) for s in range(8)]
+    threads = [threading.Thread(target=ckpt.save, args=(d, 1, t))
+               for t in trees]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # last writer wins, but whoever won left a verifiable dir (no tear)
+    assert ckpt.verify(d, 1) == []
+    got = ckpt.restore(d, 1, trees[0])
+    assert any(np.array_equal(np.asarray(got["w"]), np.asarray(t["w"]))
+               for t in trees)
+    assert not [p for p in os.listdir(d) if ".tmp" in p]
+
+
+def test_async_save_pending_is_bounded(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in range(12):
+        ckpt.async_save(d, s, _tree(seed=s))
+        assert len(ckpt._PENDING) <= ckpt._MAX_PENDING
+    ckpt.wait_pending()
+    assert ckpt._PENDING == []
+    assert ckpt.latest_good_step(d) == 11
+
+
+def test_restore_missing_key_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        ckpt.restore(d, 1, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_elastic_restore_ignores_shape_via_template_cast(tmp_path):
+    """restore() pins dtype from the template but keeps the stored shape —
+    the supervisor's reshard_dp handles dp-axis changes downstream."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"k": jnp.zeros((8, 2), jnp.uint32)})
+    out = ckpt.restore(d, 1, {"k": jnp.zeros((4, 2), jnp.uint32)})
+    assert out["k"].shape == (8, 2) and out["k"].dtype == jnp.uint32

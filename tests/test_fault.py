@@ -1,0 +1,234 @@
+"""Restart policy (RestartBudget / Backoff / run_with_restarts) and the
+deterministic fault-injection plan (runtime/faultinject.py)."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.runtime.fault import Backoff, RestartBudget, run_with_restarts
+from repro.runtime.faultinject import (Fault, FaultPlan, SimulatedPreemption,
+                                       corrupt_checkpoint, inject_state_fault)
+
+
+# -- restart budget ----------------------------------------------------------
+
+def test_budget_exhausts_on_crash_loop():
+    b = RestartBudget(max_restarts=2, refresh_after=4)
+    for _ in range(2):
+        b.consume()
+    assert not b.exhausted
+    b.consume()
+    assert b.exhausted and b.total == 3
+
+
+def test_budget_refreshes_after_sustained_progress():
+    b = RestartBudget(max_restarts=2, refresh_after=3)
+    b.consume(); b.consume()
+    for _ in range(3):                    # 3 consecutive successes -> refill
+        b.note_success()
+    assert b.used == 0
+    # successes interleaved with failures never refill (streak resets)
+    b.consume(); b.note_success(); b.note_success(); b.consume()
+    assert b.used == 2 and b.total == 4
+
+
+def test_budget_fixed_lifetime_mode():
+    b = RestartBudget(max_restarts=1, refresh_after=None)
+    for _ in range(100):
+        b.note_success()
+    b.consume(); b.consume()
+    assert b.exhausted
+
+
+# -- backoff -----------------------------------------------------------------
+
+def test_backoff_exponential_with_injected_clock():
+    slept = []
+    b = Backoff(base=0.5, factor=2.0, max_delay=3.0, sleep_fn=slept.append)
+    for _ in range(4):
+        b.wait()
+    assert slept == [0.5, 1.0, 2.0, 3.0]    # doubled, then capped
+    b.reset()
+    b.wait()
+    assert slept[-1] == 0.5
+
+
+def test_backoff_zero_base_never_sleeps():
+    slept = []
+    b = Backoff(base=0.0, sleep_fn=slept.append)
+    b.wait(); b.wait()
+    assert slept == []
+
+
+# -- run_with_restarts -------------------------------------------------------
+
+def test_run_with_restarts_resumes_from_checkpoint():
+    crashed = []
+
+    def step(state, step_no):
+        if step_no == 5 and not crashed:
+            crashed.append(step_no)
+            raise RuntimeError("preempted")
+        return state + 1
+
+    saved = {}
+
+    def on_restart(step_no):
+        return saved["state"], saved["step"]
+
+    def stepper(state, step_no):
+        out = step(state, step_no)
+        saved["state"], saved["step"] = out, step_no + 1
+        return out
+
+    state, restarts = run_with_restarts(lambda: 0, stepper, num_steps=10,
+                                        max_restarts=2,
+                                        on_restart=on_restart)
+    assert state == 10 and restarts == 1
+
+
+def test_run_with_restarts_budget_refreshes_on_progress():
+    """Spaced one-off failures on a long run exceed the nominal budget but
+    never exhaust it; returns the true total restart count."""
+    fails = {10, 25, 40, 55, 70}
+    seen = set()
+
+    def step(state, s):
+        if s in fails and s not in seen:
+            seen.add(s)
+            raise RuntimeError("blip")
+        return state + 1
+
+    state, restarts = run_with_restarts(
+        lambda: 0, step, num_steps=80, max_restarts=2, refresh_after=5,
+        on_restart=lambda s: (s, s))
+    assert state == 80 and restarts == len(fails) > 2
+
+
+def test_run_with_restarts_exhausts_and_reraises():
+    def step(state, s):
+        raise RuntimeError("hard down")
+    with pytest.raises(RuntimeError, match="hard down"):
+        run_with_restarts(lambda: 0, step, num_steps=3, max_restarts=1,
+                          on_restart=lambda s: (0, 0))
+
+
+def test_run_with_restarts_backoff_uses_injected_clock():
+    slept = []
+    calls = []
+
+    def step(state, s):
+        calls.append(s)
+        if len(calls) <= 2:
+            raise RuntimeError("flaky start")
+        return state + 1
+
+    run_with_restarts(lambda: 0, step, num_steps=2, max_restarts=3,
+                      on_restart=lambda s: (0, 0),
+                      backoff_base=1.0, backoff_factor=3.0,
+                      sleep_fn=slept.append)
+    assert slept == [1.0, 3.0]
+
+
+# -- fault plans -------------------------------------------------------------
+
+def test_fault_validation():
+    with pytest.raises(ValueError):
+        Fault(step=0, kind="meteor")
+    with pytest.raises(ValueError):
+        Fault(step=0, kind="corrupt", target="everything")
+    with pytest.raises(ValueError):
+        Fault(step=0, kind="nan", target="weights")
+    with pytest.raises(ValueError):
+        Fault(step=0, kind="device-loss", keep=0)
+
+
+def test_plan_take_is_one_shot_and_records_fired():
+    plan = FaultPlan([Fault(step=2, kind="preempt"),
+                      Fault(step=2, kind="nan", target="x", once=False)])
+    first = plan.take(2)
+    assert [f.kind for f in first] == ["preempt", "nan"]
+    # replaying step 2 (post-rollback) re-fires only the once=False fault
+    assert [f.kind for f in plan.take(2)] == ["nan"]
+    assert plan.take(3) == []
+    assert [r["kind"] for r in plan.fired] == ["preempt", "nan", "nan"]
+    assert [f.kind for f in plan.pending()] == ["nan"]
+
+
+def test_plan_json_round_trip_inline_and_file(tmp_path):
+    plan = FaultPlan([Fault(step=1, kind="corrupt", target="arrays"),
+                      Fault(step=4, kind="device-loss", keep=4)], seed=9)
+    back = FaultPlan.from_json(plan.to_json())           # inline JSON
+    assert [f.to_dict() for f in back.faults] == \
+           [f.to_dict() for f in plan.faults]
+    assert back.seed == 9
+    p = tmp_path / "plan.json"
+    p.write_text(plan.to_json())
+    from_file = FaultPlan.from_json(str(p))              # file path
+    assert [f.to_dict() for f in from_file.faults] == \
+           [f.to_dict() for f in plan.faults]
+    bare = FaultPlan.from_json('[{"step": 0, "kind": "preempt"}]')
+    assert bare.faults[0].kind == "preempt"
+
+
+def test_plan_rng_is_deterministic_per_step():
+    a, b = FaultPlan([], seed=3), FaultPlan([], seed=3)
+    assert a.rng(5).integers(0, 1 << 30) == b.rng(5).integers(0, 1 << 30)
+    assert a.rng(5).integers(0, 1 << 30) != FaultPlan([], seed=4).rng(
+        5).integers(0, 1 << 30)
+
+
+# -- fault application -------------------------------------------------------
+
+def test_corrupt_checkpoint_trips_verify(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"x": jnp.arange(12, dtype=jnp.int32)}
+    ckpt.save(d, 1, tree)
+    ckpt.save(d, 2, tree)
+    path = corrupt_checkpoint(d, "arrays", np.random.default_rng(0))
+    assert "step_00000002" in path
+    assert ckpt.verify(d, 2) != []
+    assert ckpt.verify(d, 1) == []
+    assert ckpt.latest_good_step(d) == 1
+    path = corrupt_checkpoint(d, "manifest")
+    assert path.endswith("manifest.json")
+    assert ckpt.latest_step(d) == 1         # unparseable manifest skipped
+    assert corrupt_checkpoint(str(tmp_path / "empty"), "arrays") == ""
+
+
+def test_inject_state_fault_cache_and_x():
+    from repro.core import engine as engine_lib
+    g = engine_lib.make_workload("hetero-pairs-24").graph
+    eng = engine_lib.make("mgpmh", g, backend="jnp", sweep=2)
+    import jax
+    st = eng.init(jax.random.PRNGKey(0), 4)
+    rng = np.random.default_rng(0)
+    bad = inject_state_fault(st, Fault(step=0, kind="nan", target="cache"),
+                             rng)
+    assert not bool(np.all(np.isfinite(np.asarray(bad.cache))))
+    bad = inject_state_fault(st, Fault(step=0, kind="nan", target="x"), rng)
+    assert np.asarray(bad.x).min() < 0
+    # untouched leaves are bit-identical
+    assert np.array_equal(np.asarray(bad.cache), np.asarray(st.cache))
+
+
+def test_inject_state_fault_recurses_into_adaptive_wrapper():
+    import jax
+    from repro.core import engine as engine_lib
+    g = engine_lib.make_workload("hetero-pairs-24").graph
+    eng = engine_lib.make("gibbs", g, backend="jnp",
+                          schedule=engine_lib.AdaptiveScan(sweep_len=2))
+    st = eng.init(jax.random.PRNGKey(0), 4)
+    assert hasattr(st, "inner")             # wrapper state, x is a property
+    bad = inject_state_fault(st, Fault(step=0, kind="nan", target="x"),
+                             np.random.default_rng(1))
+    assert np.asarray(bad.x).min() < 0
+    assert type(bad) is type(st)
+
+
+def test_simulated_preemption_is_catchable_runtime_error():
+    with pytest.raises(RuntimeError):
+        raise SimulatedPreemption("boom")

@@ -1,0 +1,198 @@
+"""Supervised sampling runtime (runtime/supervisor.py): crash-resume
+bit-exactness under injected preemption / checkpoint corruption, health-guard
+rollback on state corruption, escalation (degrade-to-gibbs), and the elastic
+dp-axis reshard helper.  All single-host jnp here — the forced-8-device dist
+variants live in test_distributed.py."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as engine_lib
+from repro.diagnostics.telemetry import (health_report, state_health,
+                                         telemetry_init, telemetry_update)
+from repro.runtime.faultinject import Fault, FaultPlan
+from repro.runtime.supervisor import (SupervisedRun, SupervisorConfig,
+                                      reshard_dp)
+
+GRAPH = engine_lib.make_workload("hetero-pairs-24").graph
+
+
+def _factory(sweep=4, backend="jnp"):
+    def make_engine(name, devices, **params):
+        return engine_lib.make(name, GRAPH, sweep=sweep, backend=backend,
+                               **params)
+    return make_engine
+
+
+def _cfg(tmp_path, sub, **kw):
+    base = dict(outer_steps=6, sweeps_per_outer=4, chains=8, seed=0,
+                ckpt_dir=str(tmp_path / sub), backoff_base=0.0)
+    base.update(kw)
+    return SupervisorConfig(**base)
+
+
+def _supervised(tmp_path, sub, plan=None, engine="mgpmh", **kw):
+    run = SupervisedRun(engine, _factory(), _cfg(tmp_path, sub, **kw),
+                        plan, sleep_fn=lambda s: None)
+    return run.run()
+
+
+# -- health guards -----------------------------------------------------------
+
+def test_state_health_flags_domain_and_cache():
+    x = jnp.zeros((2, 5), jnp.int32)
+    cache = jnp.zeros((2,), jnp.float32)
+    assert float(state_health(x, cache, 3)) == 0.0
+    assert float(state_health(x.at[0, 1].set(-7), cache, 3)) == 1.0
+    assert float(state_health(x.at[1, 0].set(3), cache, 3)) == 1.0
+    assert float(state_health(x, cache.at[0].set(jnp.nan), 3)) == 1.0
+    assert float(state_health(x, cache.at[1].set(jnp.inf), 3)) == 1.0
+
+
+def test_telemetry_latches_bad_state_and_windows_acceptance():
+    x = jnp.zeros((2, 5), jnp.int32)
+    tel = telemetry_init(x)
+    bad_cache = jnp.asarray([jnp.nan, 0.0], jnp.float32)
+    tel = telemetry_update(tel, x, x, updates=4, cache=bad_cache, n_values=3)
+    # sticky: a later healthy sweep does not clear the flag
+    tel = telemetry_update(tel, x, x, updates=4,
+                           cache=jnp.zeros((2,)), n_values=3)
+    rep = health_report(tel)
+    assert rep["bad_state"]
+    # exact-accept engines report a unit acceptance window
+    assert health_report(tel, exact_accept=True)["win_acceptance"] == 1.0
+    tel2 = telemetry_init(x)
+    tel2 = telemetry_update(tel2, x, x, updates=4,
+                            accept_delta=jnp.ones((2,)), n_values=3)
+    assert health_report(tel2)["win_acceptance"] == pytest.approx(0.25)
+
+
+# -- crash-resume bit-exactness ----------------------------------------------
+
+def test_preempt_resume_is_bit_exact(tmp_path):
+    clean = _supervised(tmp_path, "clean")
+    plan = FaultPlan([Fault(step=3, kind="preempt")])
+    faulted = _supervised(tmp_path, "preempt", plan)
+    assert faulted.restarts == 1
+    assert faulted.outer_steps == clean.outer_steps == 6
+    assert np.array_equal(faulted.marginals, clean.marginals)
+    assert np.array_equal(np.asarray(faulted.state.x),
+                          np.asarray(clean.state.x))
+    assert not plan.pending()
+
+
+def test_corrupt_latest_falls_back_to_previous_step(tmp_path):
+    clean = _supervised(tmp_path, "clean")
+    # damage the newest checkpoint, then die: recovery must quarantine it
+    # and replay from the step before — still ending bit-identical
+    plan = FaultPlan([Fault(step=3, kind="corrupt", target="arrays"),
+                      Fault(step=3, kind="preempt")])
+    faulted = _supervised(tmp_path, "corrupt", plan)
+    assert np.array_equal(faulted.marginals, clean.marginals)
+    corrupt = [d for d in os.listdir(tmp_path / "corrupt")
+               if d.endswith(".corrupt")]
+    assert corrupt, "damaged step dir was not quarantined"
+    restores = [i for i in faulted.incidents if i["kind"] == "restore"]
+    assert any(i["source"] == "step_2" for i in restores)
+
+
+def test_state_corruption_rolls_back_and_recovers_exactly(tmp_path):
+    clean = _supervised(tmp_path, "clean")
+    plan = FaultPlan([Fault(step=2, kind="nan", target="x")])
+    faulted = _supervised(tmp_path, "nan", plan)
+    assert faulted.rollbacks >= 1
+    assert any(i["kind"] == "health" and i["guard"] == "bad_state"
+               for i in faulted.incidents)
+    # the poisoned outer step is discarded (never checkpointed) and replayed
+    # from the last good checkpoint with the one-shot fault spent — the run
+    # ends bit-identical to the fault-free one
+    assert np.array_equal(faulted.marginals, clean.marginals)
+
+
+def test_manifest_corruption_also_recovers(tmp_path):
+    clean = _supervised(tmp_path, "clean")
+    plan = FaultPlan([Fault(step=2, kind="corrupt", target="manifest"),
+                      Fault(step=2, kind="preempt")])
+    faulted = _supervised(tmp_path, "manifest", plan)
+    assert np.array_equal(faulted.marginals, clean.marginals)
+
+
+def test_restart_budget_exhaustion_reraises(tmp_path):
+    plan = FaultPlan([Fault(step=1, kind="preempt", once=False)])
+    with pytest.raises(RuntimeError):
+        _supervised(tmp_path, "doom", plan, max_restarts=2,
+                    refresh_after=None)
+
+
+# -- escalation --------------------------------------------------------------
+
+def test_acceptance_floor_degrades_to_exact_gibbs(tmp_path):
+    """An unreachable acceptance floor trips the windowed guard every outer
+    step; after max_strikes consecutive rollbacks the supervisor swaps in
+    the exact gibbs engine (exempt from the floor) and finishes."""
+    res = _supervised(tmp_path, "degrade", engine="mgpmh",
+                      acceptance_floor=2.0, floor_after=0, max_strikes=1,
+                      retune=False)
+    assert res.engine.name == "gibbs"
+    assert res.outer_steps == 6
+    assert any(i["kind"] == "degrade" for i in res.incidents)
+    assert any(i["kind"] == "health" and i["guard"] == "acceptance_floor"
+               for i in res.incidents)
+    assert res.rollbacks >= 2
+    # degraded estimates are still sane: rows are distributions
+    assert res.marginals.shape == (GRAPH.n, GRAPH.D)
+    np.testing.assert_allclose(res.marginals.sum(-1), 1.0, atol=1e-4)
+
+
+def test_fresh_process_resumes_degraded_engine(tmp_path):
+    """A new SupervisedRun over the same ckpt dir adopts the checkpoint's
+    engine (post-degrade runs resume as gibbs, not the original mgpmh)."""
+    _supervised(tmp_path, "resume", engine="mgpmh", acceptance_floor=2.0,
+                floor_after=0, max_strikes=1, retune=False)
+    run2 = SupervisedRun("mgpmh", _factory(),
+                         _cfg(tmp_path, "resume", outer_steps=8),
+                         sleep_fn=lambda s: None)
+    res2 = run2.run()
+    assert res2.engine.name == "gibbs"
+    assert res2.outer_steps == 8
+
+
+# -- elastic reshard ---------------------------------------------------------
+
+def test_reshard_dp_shrink_and_grow():
+    keys = jnp.arange(16, dtype=jnp.uint32).reshape(8, 2)
+    like4 = jnp.zeros((4, 2), jnp.uint32)
+    out = reshard_dp(keys, like4)
+    assert np.array_equal(np.asarray(out), np.asarray(keys[:4]))
+    # float counters group-sum on divisible shrink: statistics preserved
+    counts = jnp.ones((8, 3), jnp.float32)
+    summed = reshard_dp(counts, jnp.zeros((4, 3), jnp.float32))
+    assert np.array_equal(np.asarray(summed), 2.0 * np.ones((4, 3)))
+    assert float(summed.sum()) == float(counts.sum())
+    # growing repeats rows cyclically
+    grown = reshard_dp(keys[:2], jnp.zeros((5, 2), jnp.uint32))
+    assert grown.shape == (5, 2)
+    assert np.array_equal(np.asarray(grown[4]), np.asarray(keys[0]))
+    # mesh-independent (global) shapes pass through untouched
+    same = reshard_dp(keys, jnp.zeros((8, 2), jnp.uint32))
+    assert same is keys
+    with pytest.raises(ValueError):
+        reshard_dp(jnp.zeros((8, 3)), jnp.zeros((4, 2)))
+
+
+# -- liveness ----------------------------------------------------------------
+
+def test_heartbeat_and_incident_log_written(tmp_path):
+    hb = str(tmp_path / "hb.json")
+    plan = FaultPlan([Fault(step=1, kind="preempt")])
+    res = _supervised(tmp_path, "live", plan, heartbeat=hb)
+    assert os.path.exists(hb)
+    log = tmp_path / "live" / "incidents.jsonl"
+    assert log.exists()
+    import json
+    kinds = [json.loads(l)["kind"] for l in log.read_text().splitlines()]
+    assert "fault" in kinds and "restart" in kinds and "restore" in kinds
+    assert res.watchdog["steps"] >= 6
