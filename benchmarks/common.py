@@ -58,7 +58,10 @@ def timed_steps(eng, state, n_iters: int, n_chains: int,
 #       temp+output allocation from XLA's memory_analysis — the field that
 #       makes draw-stream elimination (chunked jnp streams, in-kernel
 #       PRNG) visible in BENCH records, not just sites/sec
-SCHEMA_VERSION = 3
+#   4 — serving rows (serve_bench): queries_per_sec,
+#       staleness_p50/p99_sweeps, fresh_fraction alongside the engine
+#       identity — the request-path trajectory of the serving layer
+SCHEMA_VERSION = 4
 RECORDS: list = []
 
 

@@ -8,8 +8,8 @@ sites_per_sec and — on telemetry'd rows — mean_acceptance / ess_per_sec /
 max_split_rhat) wrapped as ``{"schema_version": N, "records": [...]}`` so
 the perf trajectory is machine-readable and attributable across PRs.
 ``--smoke`` runs the diagnostics module plus the newly-swept kernel rows
-at CI-smoke scale (CPU minutes): the convergence-telemetry + peak-bytes
-record CI uploads as an artifact."""
+and the serving smoke at CI scale (CPU minutes): the convergence-telemetry
++ peak-bytes + queries/sec records CI uploads as artifacts."""
 import argparse
 import inspect
 import json
@@ -20,7 +20,7 @@ def main() -> None:
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig1,fig2,kernel,roofline,"
-                         "sweep,diag,dist")
+                         "sweep,diag,dist,serve")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all rows as JSON records to PATH")
     ap.add_argument("--smoke", action="store_true",
@@ -30,16 +30,20 @@ def main() -> None:
     import types
 
     from . import (table1_cost, fig1_min_gibbs, fig2_variants, kernel_bench,
-                   roofline, sweep_bench, diagnostics_bench, common)
+                   roofline, sweep_bench, diagnostics_bench, serve_bench,
+                   common)
     mods = {"table1": table1_cost, "fig1": fig1_min_gibbs,
             "fig2": fig2_variants, "kernel": kernel_bench,
             "roofline": roofline, "sweep": sweep_bench,
             "diag": diagnostics_bench,
             # dist-backend rows (one-psum sweep template; BENCH_dist.json
             # comes from ``--json BENCH_dist.json --only dist``)
-            "dist": types.SimpleNamespace(run=sweep_bench.run_dist)}
+            "dist": types.SimpleNamespace(run=sweep_bench.run_dist),
+            # serving-layer rows (queries/sec + staleness percentiles;
+            # BENCH_serve.json comes from ``--json ... --only serve``)
+            "serve": serve_bench}
     if args.smoke:
-        only = ["diag", "sweep", "dist"]
+        only = ["diag", "sweep", "dist", "serve"]
     else:
         only = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")

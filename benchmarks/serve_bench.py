@@ -1,0 +1,73 @@
+"""Serving-layer benchmark: queries/sec and staleness percentiles.
+
+Measures the ChainPool request path on the registered ``hetero-pairs-24``
+workload: lanes warmed past the freshness gate, the background driver
+advancing every lane, then a timed batch of mixed unclamped +
+evidence-clamped marginal queries.  Reported per engine:
+
+  * ``queries_per_sec`` — answered queries over wall time (the whole
+    batch path: routing, lane reads, freshness checks, host-side marginal
+    reduction);
+  * ``staleness_p50/p99_sweeps`` — per-answer sweeps the serving lane had
+    started beyond the snapshot that answered (bounded by the chunk size:
+    the snapshot cadence is the staleness knob);
+  * ``fresh_fraction`` — answers that passed the telemetry gate.
+
+``BENCH_serve.json`` comes from ``--json BENCH_serve.json --only serve``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.diagnostics import FreshnessPolicy
+from repro.serving import ChainPool, Query
+
+from .common import row
+
+WL = "hetero-pairs-24"
+
+
+def _traffic(n: int, n_sites: int, seed: int):
+    """Mixed batch: half unclamped, half clamped over 4 evidence sets."""
+    rng = np.random.default_rng(seed)
+    sigs = [((int(rng.integers(n_sites)), int(rng.integers(2))),)
+            for _ in range(4)]
+    return [Query(WL) if i % 2 == 0 else Query(WL, evidence=sigs[i % 4])
+            for i in range(n)]
+
+
+def run(paper_scale: bool = False, smoke: bool = False) -> None:
+    n_queries = 64 if smoke else 512
+    chains = 16 if smoke else 32
+    chunk = 8
+    policy = FreshnessPolicy(max_rhat=1.2, min_ess_per_site=16.0,
+                             min_samples=8)
+    for name in (["gibbs"] if smoke else ["gibbs", "mgpmh"]):
+        pool = ChainPool(policy=policy, seed=0)
+        w = pool.register(WL, engine=name, backend="jnp", chains=chains,
+                          sweep=24, sweeps_per_chunk=chunk)
+        queries = _traffic(n_queries, w.engine.graph.n, seed=1)
+        # warm: one pass brings every lane past the freshness gate and
+        # compiles the chunk, so the timed pass measures serving, not mixing
+        pool.submit(queries, max_extra_sweeps=50_000)
+        pool.start()
+        try:
+            t0 = time.perf_counter()
+            answers = pool.submit(queries, max_extra_sweeps=50_000)
+            dt = time.perf_counter() - t0
+        finally:
+            pool.stop()
+        stale = np.asarray([a.staleness_sweeps for a in answers])
+        fresh = float(np.mean([a.fresh for a in answers]))
+        qps = n_queries / dt
+        p50, p99 = np.percentile(stale, [50, 99])
+        row(f"serve_{name}", dt * 1e6 / n_queries,
+            f"qps={qps:.1f} p99_staleness_sweeps={p99:.0f} "
+            f"fresh={fresh:.2f}",
+            queries_per_sec=round(qps, 1),
+            staleness_p50_sweeps=float(p50),
+            staleness_p99_sweeps=float(p99),
+            fresh_fraction=fresh, n_queries=n_queries, chains=chains,
+            sweeps_per_chunk=chunk, **w.engine.describe())

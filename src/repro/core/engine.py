@@ -190,6 +190,18 @@ class Engine:
     sweep_stats_fn: Optional[Callable] = dataclasses.field(
         default=None, repr=False)
     exact_accept: bool = False
+    # evidence clamping (the serving layer's per-request conditioning):
+    # True when sweep_fn/sweep_stats_fn accept ``evidence=(ev_mask,
+    # ev_vals)`` — the jnp/pallas gibbs-family schedules.  dist and
+    # local-gibbs do not; Engine.sweep raises rather than silently
+    # sampling the unconditional chain.
+    supports_evidence: bool = False
+    # ``(key, ChainState) -> ChainState`` (single chain; vmapped by
+    # Engine.clamp): re-draws the cached energy estimate at the CURRENT x
+    # — the MIN-Gibbs eps / DoubleMIN xi cache estimates the energy of the
+    # pre-clamp configuration and is stale after evidence overwrites x.
+    refresh_cache_fn: Optional[Callable] = dataclasses.field(
+        default=None, repr=False)
 
     def init(self, key: jax.Array, n_chains: int, **kwargs):
         """Batched initial state for ``n_chains`` chains (cached-estimator
@@ -204,7 +216,7 @@ class Engine:
         from ..diagnostics.telemetry import telemetry_init
         return telemetry_init(state.x, half_at=half_at, lags=lags)
 
-    def sweep(self, state, telemetry=None):
+    def sweep(self, state, telemetry=None, evidence=None):
         """Advance every chain by ``updates_per_call`` site updates.
 
         With ``telemetry=`` (a :class:`~repro.diagnostics.telemetry.
@@ -213,12 +225,29 @@ class Engine:
         updated from the instrumented sweep where available and from state
         diffs otherwise — device-resident, no host sync, safe inside scan.
 
+        With ``evidence=`` (an ``(ev_mask (n,) float32, ev_vals (n,)
+        int32)`` pair of data arrays) the sweep samples the CONDITIONAL
+        chain given ``x[i] = ev_vals[i]`` wherever ``ev_mask[i] == 1``:
+        site selection is redirected through the masked inverse-CDF (the
+        chromatic schedule re-clamps between color classes instead).
+        Evidence is data, not structure — an all-zero mask is the
+        unconditional chain and shares the same jit trace.  The state must
+        already be clamped at the observed sites (:meth:`clamp`).  Raises
+        for engines without ``supports_evidence`` (dist, local-gibbs).
+
         The 'dist' backend DONATES the input state (its buffers are dead
         after the call — rebind, don't reuse: ``st = eng.sweep(st)``); the
         jnp/pallas backends leave the input intact.
         """
+        if evidence is not None and not self.supports_evidence:
+            raise ValueError(
+                f"engine {self.name!r} (backend {self.backend!r}, schedule "
+                f"{self.schedule.describe()}) does not support evidence "
+                f"clamping; serve conditioned queries from a jnp/pallas "
+                f"gibbs-family engine")
+        kw = {} if evidence is None else {"evidence": evidence}
         if telemetry is None:
-            return self.sweep_fn(state)
+            return self.sweep_fn(state, **kw)
         from ..diagnostics.telemetry import telemetry_update
         old_x = state.x
         old_acc = getattr(state, "accepts", None)
@@ -226,9 +255,9 @@ class Engine:
             old_x = jnp.copy(old_x)
             old_acc = None if old_acc is None else jnp.copy(old_acc)
         if self.sweep_stats_fn is not None:
-            new, stats = self.sweep_stats_fn(state)
+            new, stats = self.sweep_stats_fn(state, **kw)
         else:
-            new, stats = self.sweep_fn(state), None
+            new, stats = self.sweep_fn(state, **kw), None
         delta = None if old_acc is None else new.accepts - old_acc
         # health hooks: the state's cached energy + the site domain feed the
         # in-graph guards (bad_state flag, windowed acceptance) riding the
@@ -238,6 +267,31 @@ class Engine:
                                      cache=getattr(new, "cache", None),
                                      n_values=self.graph.D)
         return new, telemetry
+
+    def clamp(self, key: jax.Array, state, evidence):
+        """Overwrite the observed sites of every chain with their evidence
+        values and return the clamped state.
+
+        ``evidence = (ev_mask (n,) float32, ev_vals (n,) int32)``; sites
+        with ``ev_mask == 1`` are set to ``ev_vals``, the rest keep their
+        current value (so a conditioned chain forked from a warm resident
+        snapshot starts from the resident's unobserved coordinates — a far
+        better init than cold-start).  For engines with a cached energy
+        estimate (MIN-Gibbs eps, DoubleMIN xi) the cache is re-drawn at the
+        clamped configuration via ``refresh_cache_fn`` — the old cache
+        estimates the pre-clamp energy and would bias the first accepts.
+        Handles the AdaptiveScan state wrapper transparently.
+        """
+        ev_mask, ev_vals = evidence
+        inner = getattr(state, "inner", None)
+        st = state if inner is None else inner
+        x = jnp.where(ev_mask[None, :] > 0.0,
+                      ev_vals[None, :].astype(st.x.dtype), st.x)
+        st = st._replace(x=x)
+        if self.refresh_cache_fn is not None:
+            ck = jax.random.split(key, x.shape[0])
+            st = jax.vmap(self.refresh_cache_fn)(ck, st)
+        return st if inner is None else state._replace(inner=st)
 
     def describe(self) -> Dict[str, Any]:
         """Machine-readable identity (benchmarks attach this to records)."""
@@ -342,12 +396,15 @@ def _uniform_or_chromatic(graph, schedule, backend, uniform_builder):
 
 
 def _engine(name, backend, schedule, upd, graph, params, init_fn, sweep_fn,
-            stats_fn=None, exact_accept=False):
+            stats_fn=None, exact_accept=False, supports_evidence=False,
+            refresh_cache=None):
     return Engine(name=name, backend=backend, schedule=schedule,
                   updates_per_call=upd, marginal_samples_per_call=1,
                   graph=graph, params=params, init_fn=init_fn,
                   sweep_fn=sweep_fn, sweep_stats_fn=stats_fn,
-                  exact_accept=exact_accept)
+                  exact_accept=exact_accept,
+                  supports_evidence=supports_evidence,
+                  refresh_cache_fn=refresh_cache)
 
 
 def _reject_unknown(name, params):
@@ -378,7 +435,7 @@ def _gibbs_builder(graph, *, schedule, backend, mesh, **params):
                                             collect_stats=cs))
     return _engine("gibbs", backend, schedule, upd, graph, {},
                    _chain_init(graph), sweep_fn, stats_fn=stats_fn,
-                   exact_accept=True)
+                   exact_accept=True, supports_evidence=True)
 
 
 @register("min-gibbs", backends=("jnp", "pallas", "dist"))
@@ -405,13 +462,15 @@ def _min_gibbs_builder(graph, *, schedule, backend, mesh, lam=None,
         return make_adaptive_engine(
             "min-gibbs", graph, schedule, backend, core=build(True),
             chain_init=_chain_init(graph, cache_init),
-            params=dict(lam=lam, capacity=capacity), exact_accept=True)
+            params=dict(lam=lam, capacity=capacity), exact_accept=True,
+            refresh_cache=cache_init)
     _require_uniform("min-gibbs", schedule)
     return _engine(
         "min-gibbs", backend, schedule, schedule.sweep_len, graph,
         dict(lam=lam, capacity=capacity),
         _chain_init(graph, cache_init), build(False), stats_fn=build(True),
-        exact_accept=True)
+        exact_accept=True, supports_evidence=True,
+        refresh_cache=cache_init)
 
 
 @register("local-gibbs", backends=("jnp",))
@@ -452,7 +511,7 @@ def _mgpmh_builder(graph, *, schedule, backend, mesh, lam=None,
     return _engine(
         "mgpmh", backend, schedule, schedule.sweep_len, graph,
         dict(lam=lam, capacity=capacity), _chain_init(graph),
-        build(False), stats_fn=build(True))
+        build(False), stats_fn=build(True), supports_evidence=True)
 
 
 @register("doublemin", backends=("jnp", "pallas", "dist"))
@@ -482,11 +541,13 @@ def _doublemin_builder(graph, *, schedule, backend, mesh, lam1=None,
         from ..diagnostics.adaptive import make_adaptive_engine
         return make_adaptive_engine(
             "doublemin", graph, schedule, backend, core=build(True),
-            chain_init=_chain_init(graph, cache_init), params=params_d)
+            chain_init=_chain_init(graph, cache_init), params=params_d,
+            refresh_cache=cache_init)
     _require_uniform("doublemin", schedule)
     return _engine(
         "doublemin", backend, schedule, schedule.sweep_len, graph, params_d,
-        _chain_init(graph, cache_init), build(False), stats_fn=build(True))
+        _chain_init(graph, cache_init), build(False), stats_fn=build(True),
+        supports_evidence=True, refresh_cache=cache_init)
 
 
 def _require_uniform(name, schedule):

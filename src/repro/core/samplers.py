@@ -63,6 +63,7 @@ __all__ = [
     "gibbs_select",
     "mh_accept",
     "min_gibbs_select",
+    "evidence_cdf",
 ]
 
 
@@ -343,7 +344,7 @@ def min_gibbs_select(eps: jax.Array, cache: jax.Array, xi: jax.Array,
     return v, eps[rows, v]
 
 
-# Sweep builders below take two optional extensions to the plain
+# Sweep builders below take three optional extensions to the plain
 # ``sweep(state) -> state`` contract:
 #   * ``collect_stats=True`` (build time): the sweep additionally returns a
 #     :class:`SweepStats` with per-site proposal/acceptance counters — the
@@ -352,6 +353,51 @@ def min_gibbs_select(eps: jax.Array, cache: jax.Array, xi: jax.Array,
 #     array overriding the builder's i.i.d.-uniform draw — the hook the
 #     AdaptiveScan schedule drives with its non-uniform table.  The
 #     default-path PRNG streams are unchanged either way.
+#   * ``evidence=`` (call time): an ``(ev_mask (n,) float32, ev_vals (n,)
+#     int32)`` pair of DATA arrays; site selection is redirected through
+#     the masked inverse-CDF (:func:`evidence_cdf`) so observed sites are
+#     never resampled — the serving layer's per-request clamping.  An
+#     all-zero mask reproduces the uniform draw exactly, so clamped and
+#     unclamped calls share one jit trace.  The caller must have clamped
+#     ``state.x`` at the observed sites (``Engine.clamp``); the chromatic
+#     sweep instead re-clamps x between color classes.
+
+
+def evidence_cdf(ev_mask: jax.Array) -> jax.Array:
+    """(n,) cumulative site-selection table, uniform over UNOBSERVED sites.
+
+    ``ev_mask`` is (n,) float32 with 1.0 at observed (clamped) sites.  The
+    cdf is normalized so its last entry is exactly 1.0 and zero-mass
+    (observed) sites keep exact ties with their predecessor — a
+    ``searchsorted(cdf, u, side="right")`` draw with u in [0, 1) can then
+    never land on an observed site.  With an all-zero mask this is exactly
+    the uniform cdf, so one compiled sweep serves clamped and unclamped
+    requests (the same in-graph inverse-CDF pattern AdaptiveScan uses)."""
+    c = jnp.cumsum(1.0 - ev_mask)
+    return c / jnp.maximum(c[-1], 1e-30)
+
+
+def _draw_sites(ki, C: int, S: int, n: int, sites, evidence, *,
+                per_chain: bool):
+    """(C, S) site indices for one sweep call: the explicit ``sites``
+    override wins (AdaptiveScan); with ``evidence`` the draw is uniform
+    over unobserved sites via the masked inverse-CDF; default is the plain
+    i.i.d.-uniform draw.  ``per_chain``: ki is a (C, 2) keyset (vmapped
+    per-chain streams, the pallas RNG contract) vs one master key feeding
+    (C, S) draws (the jnp contract)."""
+    if sites is not None:
+        return sites
+    if evidence is not None:
+        cdf = evidence_cdf(evidence[0])
+        if per_chain:
+            u = jax.vmap(lambda k: jax.random.uniform(k, (S,)))(ki)
+        else:
+            u = jax.random.uniform(ki, (C, S))
+        i = jnp.searchsorted(cdf, u, side="right").astype(jnp.int32)
+        return jnp.minimum(i, n - 1)
+    if per_chain:
+        return jax.vmap(lambda k: jax.random.randint(k, (S,), 0, n))(ki)
+    return jax.random.randint(ki, (C, S), 0, n)
 
 
 def _build_gibbs_sweep(graph: MatchGraph, sweep_len: int, *,
@@ -367,13 +413,10 @@ def _build_gibbs_sweep(graph: MatchGraph, sweep_len: int, *,
     _check_impl(impl)
     n, D = graph.n, graph.D
 
-    def sweep(state: ChainState, sites=None):
+    def sweep(state: ChainState, sites=None, evidence=None):
         ki, kg, knew = _batch_keys(state.key, 3)
-        if sites is None:
-            i = jax.vmap(lambda k: jax.random.randint(
-                k, (sweep_len,), 0, n))(ki)                    # (C, S)
-        else:
-            i = sites
+        i = _draw_sites(ki, state.x.shape[0], sweep_len, n, sites, evidence,
+                        per_chain=True)                        # (C, S)
         gumbel = jax.vmap(lambda k: jax.random.gumbel(
             k, (sweep_len, D)))(kg)                            # (C, S, D)
         x = kernel_ops.gibbs_sweep(state.x, graph.W, i, gumbel, D=D,
@@ -416,13 +459,10 @@ def _build_mgpmh_sweep(graph: MatchGraph, lam: float, capacity: int,
     n, D = graph.n, graph.D
     scale = float(graph.L / lam)
 
-    def sweep(state: ChainState, sites=None):
+    def sweep(state: ChainState, sites=None, evidence=None):
         ki, kb, k1, k2, kg, ka, knew = _batch_keys(state.key, 7)
-        if sites is None:
-            i = jax.vmap(lambda k: jax.random.randint(
-                k, (sweep_len,), 0, n))(ki)                    # (C, S)
-        else:
-            i = sites
+        i = _draw_sites(ki, state.x.shape[0], sweep_len, n, sites, evidence,
+                        per_chain=True)                        # (C, S)
         lam_i = lam * graph.row_sum[i] / graph.L               # (C, S)
         B = jax.vmap(lambda k, l: jax.random.poisson(
             k, l, dtype=jnp.int32))(kb, lam_i)
@@ -471,13 +511,12 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
     packed = jnp.stack([graph.row_prob,
                         graph.row_alias.astype(jnp.float32)], axis=-1)
 
-    def sweep(state: ChainState, sites=None):
+    def sweep(state: ChainState, sites=None, evidence=None):
         C = state.x.shape[0]
         rows = jnp.arange(C)
         knew, master = _master_key(state.key)
         ki, kb, k1, kg, ka = jax.random.split(master, 5)
-        i = (jax.random.randint(ki, (C, S), 0, n) if sites is None
-             else sites)
+        i = _draw_sites(ki, C, S, n, sites, evidence, per_chain=False)
         lam_i = lam * graph.row_sum[i] / graph.L
         B = jnp.minimum(jax.random.poisson(kb, lam_i, dtype=jnp.int32), K)
         un = jax.random.uniform(k1, (C, S, K)) * n
@@ -562,13 +601,12 @@ def _build_min_gibbs_sweep(graph: MatchGraph, lam: float, capacity: int,
     F = int(graph.pair_a.shape[0])
     lscale = float(np.log1p(graph.psi / lam))
 
-    def sweep(state: ChainState, sites=None):
+    def sweep(state: ChainState, sites=None, evidence=None):
         C = state.x.shape[0]
         rows = jnp.arange(C)
         knew, master = _master_key(state.key)
         ki, kb, kf, kg = jax.random.split(master, 4)
-        i = (jax.random.randint(ki, (C, S), 0, n) if sites is None
-             else sites)
+        i = _draw_sites(ki, C, S, n, sites, evidence, per_chain=False)
         # D independent global minibatches per sub-step, one per candidate;
         # only the O(C·S·D) Poisson totals are drawn upfront — the O(lam)-
         # sized factor-draw buffers are generated inside the scan body.
@@ -629,13 +667,10 @@ def _build_min_gibbs_sweep_pallas(graph: MatchGraph, lam: float,
     lscale = float(np.log1p(graph.psi / lam))
     node_prob, node_alias = _node_alias_table(graph)
 
-    def sweep(state: ChainState, sites=None):
+    def sweep(state: ChainState, sites=None, evidence=None):
         ki, kb, k1, k2, k3, k4, kg, knew = _batch_keys(state.key, 8)
-        if sites is None:
-            i = jax.vmap(lambda k: jax.random.randint(
-                k, (S,), 0, n))(ki)                        # (C, S)
-        else:
-            i = sites
+        i = _draw_sites(ki, state.x.shape[0], S, n, sites, evidence,
+                        per_chain=True)                    # (C, S)
         B = jnp.minimum(jax.vmap(lambda k: jax.random.poisson(
             k, lam, (S, D), dtype=jnp.int32))(kb), K)
         draw = lambda ks: jax.vmap(lambda k: jax.random.uniform(
@@ -690,13 +725,12 @@ def _build_double_min_sweep(graph: MatchGraph, lam1: float, capacity1: int,
     packed = jnp.stack([graph.row_prob,
                         graph.row_alias.astype(jnp.float32)], axis=-1)
 
-    def sweep(state: ChainState, sites=None):
+    def sweep(state: ChainState, sites=None, evidence=None):
         C = state.x.shape[0]
         rows = jnp.arange(C)
         knew, master = _master_key(state.key)
         ki, kb1, k1, kg, kb2, kf, ka = jax.random.split(master, 7)
-        i = (jax.random.randint(ki, (C, S), 0, n) if sites is None
-             else sites)
+        i = _draw_sites(ki, C, S, n, sites, evidence, per_chain=False)
         # only the O(C·S) streams are drawn upfront; the O(lam)-sized draw
         # buffers are generated one sub-step at a time inside the scan
         lam_i = lam1 * graph.row_sum[i] / graph.L
@@ -769,14 +803,11 @@ def _build_double_min_sweep_pallas(graph: MatchGraph, lam1: float,
     lscale2 = float(np.log1p(graph.psi / lam2))
     node_prob, node_alias = _node_alias_table(graph)
 
-    def sweep(state: ChainState, sites=None):
+    def sweep(state: ChainState, sites=None, evidence=None):
         (ki, kb1, k1, k2, kg, kb2, k3, k4, k5, k6, ka,
          knew) = _batch_keys(state.key, 12)
-        if sites is None:
-            i = jax.vmap(lambda k: jax.random.randint(
-                k, (S,), 0, n))(ki)                        # (C, S)
-        else:
-            i = sites
+        i = _draw_sites(ki, state.x.shape[0], S, n, sites, evidence,
+                        per_chain=True)                    # (C, S)
         lam_i = lam1 * graph.row_sum[i] / graph.L          # (C, S)
         B1 = jnp.minimum(jax.vmap(lambda k, l: jax.random.poisson(
             k, l, dtype=jnp.int32))(kb1, lam_i), K1)
@@ -845,6 +876,16 @@ def _build_chromatic_gibbs_sweep(graph: MatchGraph, colors, *,
     ``gumbel(kv, (C, n, D))`` sliced at the class sites (``categorical``
     IS argmax(logits + gumbel)) — so the two paths match exactly.
     ``updates_per_call`` is n: one call updates every site once.
+
+    ``evidence=`` (an ``(ev_mask, ev_vals)`` pair) re-clamps x after every
+    color-class block: the fused kernel resamples whole classes (including
+    any observed sites in them) and later classes condition on earlier
+    ones, so the clamp must be restored *between* classes, not once at the
+    end.  Same-color sites share no factor, so a temporarily-resampled
+    observed site is never read by its own class; every unobserved update
+    therefore sees exactly the evidence-clamped configuration.  An
+    all-zero mask is the unconditional sweep (bitwise: ``where`` with a
+    false mask is the identity), sharing one jit trace.
     """
     _check_impl(impl)
     n, D = graph.n, graph.D
@@ -852,17 +893,22 @@ def _build_chromatic_gibbs_sweep(graph: MatchGraph, colors, *,
                for s in validate_coloring(graph, colors)]
     n_colors = len(classes)
 
-    def sweep(state: ChainState):
+    def sweep(state: ChainState, evidence=None):
         C = state.x.shape[0]
         knew, master = _master_key(state.key)
         keys = jax.random.split(master, n_colors)
         x = state.x
+        if evidence is not None:
+            obs = evidence[0][None, :] > 0.0                  # (1, n)
+            ev_x = jnp.broadcast_to(evidence[1][None, :], x.shape)
         for c, sites in enumerate(classes):   # static unroll over colors
             kv, = jax.random.split(keys[c], 1)
             gumbel = jax.random.gumbel(kv, (C, n, D))[:, sites, :]
             i_sites = jnp.broadcast_to(sites[None, :], (C, sites.shape[0]))
             x = kernel_ops.gibbs_sweep(x, graph.W, i_sites, gumbel, D=D,
                                        impl=impl)
+            if evidence is not None:
+                x = jnp.where(obs, ev_x, x)
         new = state._replace(x=x, key=knew)
         if not collect_stats:
             return new

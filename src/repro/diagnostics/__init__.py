@@ -8,7 +8,10 @@ Three layers:
     non-uniform site-selection tables, refreshed in-graph) and the lambda
     auto-tuner;
   * :mod:`.exact` — exact references on enumerable graphs (TV distance to
-    exact marginals, spectral gaps via ``core/spectral.py``).
+    exact marginals, evidence-clamped conditional marginals, spectral gaps
+    via ``core/spectral.py``);
+  * :mod:`.freshness` — the serving layer's telemetry-gated serve/refuse
+    predicate (split-R-hat / ESS thresholds over the unobserved sites).
 
 Only :mod:`.telemetry` (pure jnp, no ``repro.core`` imports) loads eagerly;
 ``adaptive`` / ``exact`` resolve lazily so ``repro.core`` modules can import
@@ -26,16 +29,20 @@ __all__ = [
     # lazy (see __getattr__): adaptive control + exact references
     "AdaptiveScan", "AdaptiveState", "make_adaptive_engine",
     "refresh_cdf", "run_with_telemetry", "autotune_lambda",
-    "exact_marginals", "tv_to_exact", "exact_gibbs_gap",
-    "empirical_spectral_gap",
+    "exact_marginals", "exact_conditional_marginals", "tv_to_exact",
+    "exact_gibbs_gap", "empirical_spectral_gap",
+    "FreshnessPolicy", "freshness_report", "fresh",
 ]
 
 _LAZY = {
     "AdaptiveScan": "adaptive", "AdaptiveState": "adaptive",
     "make_adaptive_engine": "adaptive", "refresh_cdf": "adaptive",
     "run_with_telemetry": "adaptive", "autotune_lambda": "adaptive",
-    "exact_marginals": "exact", "tv_to_exact": "exact",
+    "exact_marginals": "exact", "exact_conditional_marginals": "exact",
+    "tv_to_exact": "exact",
     "exact_gibbs_gap": "exact", "empirical_spectral_gap": "exact",
+    "FreshnessPolicy": "freshness", "freshness_report": "freshness",
+    "fresh": "freshness",
 }
 
 

@@ -101,7 +101,8 @@ def _refresh_cdf(tel: Telemetry, n: int, uniform_mix: float,
 def make_adaptive_engine(name: str, graph, schedule: AdaptiveScan,
                          backend: str, *, core, chain_init,
                          params: Dict[str, Any],
-                         exact_accept: bool = False) -> Engine:
+                         exact_accept: bool = False,
+                         refresh_cache=None) -> Engine:
     """Assemble the AdaptiveScan :class:`Engine` for a gibbs-family sampler.
 
     ``core`` is the instrumented fused sweep ``(state, sites) -> (state,
@@ -122,15 +123,24 @@ def make_adaptive_engine(name: str, graph, schedule: AdaptiveScan,
             # Telemetry through Engine.sweep for deep-lag ESS)
             tel=telemetry_init(st.x, lags=1), calls=jnp.int32(0))
 
-    def sweep_fn(ast: AdaptiveState) -> AdaptiveState:
+    def sweep_fn(ast: AdaptiveState, evidence=None) -> AdaptiveState:
         st = ast.inner
         C = st.x.shape[0]
+        cdf = ast.cdf
+        if evidence is not None:
+            # zero out the observed sites' selection mass and renormalize —
+            # the conditional chain never proposes an observed site, and
+            # with an all-zero mask this reproduces the carried cdf exactly
+            # (same jit trace serves clamped and unclamped requests)
+            p = jnp.diff(cdf, prepend=0.0) * (1.0 - evidence[0])
+            c = jnp.cumsum(p)
+            cdf = c / jnp.maximum(c[-1], 1e-30)
         # advance the chain keys once for the site draw; the core sweep
         # advances them again for its own streams (independent splits)
         knew, master = S._master_key(st.key)
         u = jax.random.uniform(jax.random.fold_in(master, 0x5c4e),
                                (C, sweep_len))
-        i = jnp.minimum(jnp.searchsorted(ast.cdf, u, side="right"),
+        i = jnp.minimum(jnp.searchsorted(cdf, u, side="right"),
                         n - 1).astype(jnp.int32)
         new, stats = core(st._replace(key=knew), sites=i)
         delta = new.accepts - st.accepts
@@ -146,7 +156,8 @@ def make_adaptive_engine(name: str, graph, schedule: AdaptiveScan,
         name=name, backend=backend, schedule=schedule,
         updates_per_call=sweep_len, marginal_samples_per_call=1,
         graph=graph, params=params, init_fn=init_fn, sweep_fn=sweep_fn,
-        sweep_stats_fn=None, exact_accept=exact_accept)
+        sweep_stats_fn=None, exact_accept=exact_accept,
+        supports_evidence=True, refresh_cache_fn=refresh_cache)
 
 
 # ---------------------------------------------------------------------------

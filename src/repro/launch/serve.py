@@ -1,63 +1,202 @@
-"""Serving launcher: batched greedy decoding with a KV cache.
+"""Serving launcher: resident sampling chains answering marginal queries.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
-      --batch 4 --prompt-len 32 --gen 32
+The request front of ``repro.serving``: register a workload with a warm
+:class:`~repro.serving.ChainPool`, submit a batch of marginal/MAP queries
+(optionally evidence-clamped), and get freshness-gated answers back as
+JSON.  With ``--supervise`` the resident chains are driven by
+:class:`~repro.runtime.supervisor.SupervisedRun` — verified checkpoints,
+health guards, crash-resume — publishing a pool snapshot after every
+committed outer step, so a restarted server resumes its chains bit-exactly.
+
+  PYTHONPATH=src python -m repro.launch.serve --workload hetero-pairs-24 \
+      --engine gibbs --backend jnp --chains 32 --demo 8 --out answers.json
+  PYTHONPATH=src python -m repro.launch.serve --workload potts-20x20 \
+      --queries queries.json --supervise --ckpt-dir /tmp/serve-ckpt
+
+``--queries`` takes a JSON list of ``{"sites": [...], "evidence":
+[[site, value], ...], "kind": "marginal"|"map"}`` objects; ``--demo N``
+generates N alternating unclamped / single-site-clamped queries instead.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from ..configs.registry import get_arch
-from ..models import transformer as T
+from ..core import engine as engine_lib
+from ..diagnostics.freshness import FreshnessPolicy
+from ..serving import ChainPool, Query
 
 
-def generate(cfg, params, prompts: jax.Array, gen_tokens: int,
-             max_len: int = 0):
-    """Greedy generation.  prompts: (B, S0) int32.  Returns (B, S0+gen)."""
-    B, S0 = prompts.shape
-    max_len = max_len or (S0 + gen_tokens)
-    cache = T.init_cache(cfg, B, max_len)
-    jit_step = jax.jit(lambda p, t, c: T.decode_step(cfg, p, t, c),
-                       donate_argnums=(2,))
-    toks = prompts
-    # prefill token-by-token (simple; a production prefill uses the batched
-    # forward path in steps.make_prefill_step + cache export)
-    logits = None
-    for s in range(S0):
-        logits, cache = jit_step(params, toks[:, s:s + 1], cache)
-    out = [toks]
-    cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    for _ in range(gen_tokens):
-        out.append(cur)
-        logits, cache = jit_step(params, cur, cache)
-        cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    return jnp.concatenate(out, axis=1)
+def _demo_queries(workload: str, graph, n: int, seed: int) -> List[Query]:
+    """N queries alternating unclamped marginals / single-site-clamped
+    marginals at random sites — the smoke-test traffic pattern."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        if i % 2 == 0:
+            out.append(Query(workload))
+        else:
+            s = int(rng.integers(graph.n))
+            v = int(rng.integers(graph.D))
+            out.append(Query(workload, evidence=((s, v),)))
+    return out
+
+
+def _load_queries(workload: str, path: str) -> List[Query]:
+    with open(path) as f:
+        specs = json.load(f)
+    return [Query(workload,
+                  sites=None if q.get("sites") is None
+                  else tuple(q["sites"]),
+                  evidence=tuple((s, v) for s, v in q.get("evidence", [])),
+                  kind=q.get("kind", "marginal"))
+            for q in specs]
+
+
+def serve_batch(workload: str, queries: List[Query], *,
+                engine: str = "gibbs", backend: str = "jnp",
+                chains: int = 32, sweep: int = 0, chunk: int = 16,
+                warmup_chunks: int = 0,
+                max_extra_sweeps: Optional[int] = None,
+                policy: Optional[FreshnessPolicy] = None, seed: int = 0,
+                supervise: bool = False, ckpt_dir: str = "",
+                outer_steps: int = 32, pool: Optional[ChainPool] = None
+                ) -> dict:
+    """Register ``workload``, warm the pool, answer ``queries``; returns a
+    JSON-safe dict (per-answer records + batch summary).
+
+    Plain path: the pool advances its own lanes synchronously (each stale
+    lane sweeps until fresh, bounded by ``max_extra_sweeps``).  Supervised
+    path: ``SupervisedRun`` drives the resident chains for ``outer_steps``
+    committed steps — checkpointing to ``ckpt_dir`` and publishing a pool
+    snapshot after each — then the batch is answered; conditioned lanes
+    still fork from the latest published resident snapshot.
+    """
+    pool = pool or ChainPool(policy=policy or FreshnessPolicy(), seed=seed)
+    w = pool.register(workload, engine=engine, backend=backend,
+                      chains=chains, sweep=sweep or None,
+                      sweeps_per_chunk=chunk, seed=seed)
+    g = w.engine.graph
+    t0 = time.time()
+    if supervise:
+        _drive_supervised(pool, workload, engine, backend, chains,
+                          sweep or g.n, chunk, outer_steps, seed, ckpt_dir)
+    elif warmup_chunks:
+        pool.advance(workload, chunks=warmup_chunks)
+    answers = pool.submit(queries, max_extra_sweeps=max_extra_sweeps)
+    dt = time.time() - t0
+    records = [a.to_dict() for a in answers]
+    n_fresh = sum(r["fresh"] for r in records)
+    return {
+        "workload": workload, "engine": w.engine.describe(),
+        "chains": chains, "sweeps_per_chunk": chunk,
+        "n_queries": len(records), "fresh_fraction":
+        n_fresh / max(len(records), 1),
+        "elapsed_s": dt, "queries_per_sec": len(records) / max(dt, 1e-9),
+        "compiled_traces": pool.compiled_cache_size(workload),
+        "resident_sweeps": w.resident.sweeps,
+        "answers": records,
+    }
+
+
+def _drive_supervised(pool: ChainPool, workload: str, engine: str,
+                      backend: str, chains: int, sweep: int, chunk: int,
+                      outer_steps: int, seed: int, ckpt_dir: str):
+    """Run the resident chains under the supervised runtime, publishing a
+    pool snapshot after every committed outer step."""
+    from ..runtime import supervisor as sup
+
+    g = pool.engine(workload).graph
+
+    def make_engine(name, devices, **params):
+        return engine_lib.make(name, g, sweep=sweep, backend=backend,
+                               **params)
+
+    cfg = sup.SupervisorConfig(outer_steps=outer_steps,
+                               sweeps_per_outer=chunk, chains=chains,
+                               seed=seed, ckpt_dir=ckpt_dir)
+
+    def on_step(step, bundle, tel, eng):
+        pool.publish(workload, bundle.st, tel, bundle.marg, bundle.count,
+                     step * chunk)
+
+    sup.SupervisedRun(engine, make_engine, cfg, on_step=on_step).run()
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--workload", default="hetero-pairs-24",
+                    choices=list(engine_lib.workload_names()))
+    ap.add_argument("--engine", default="gibbs",
+                    choices=["gibbs", "mgpmh", "min-gibbs", "doublemin"])
+    ap.add_argument("--backend", default="jnp",
+                    choices=["jnp", "pallas", "auto"])
+    ap.add_argument("--chains", type=int, default=32)
+    ap.add_argument("--sweep", type=int, default=0,
+                    help="site updates per sweep call (default: n)")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="sweeps per jitted chunk (snapshot cadence)")
+    ap.add_argument("--warmup-chunks", type=int, default=0,
+                    help="chunks to advance the resident lane before "
+                         "answering (stale lanes also self-advance)")
+    ap.add_argument("--max-extra-sweeps", type=int, default=None,
+                    help="per-lane sweep budget to reach freshness before "
+                         "a query is refused")
+    ap.add_argument("--rhat", type=float, default=1.1,
+                    help="freshness gate: max split-R-hat")
+    ap.add_argument("--min-ess", type=float, default=64.0,
+                    help="freshness gate: min per-site ESS")
+    ap.add_argument("--min-samples", type=int, default=16,
+                    help="freshness gate: min telemetry snapshots")
+    ap.add_argument("--queries", default="",
+                    help="JSON file of query specs (see module docstring)")
+    ap.add_argument("--demo", type=int, default=0,
+                    help="generate N demo queries (alternating unclamped / "
+                         "single-site-clamped)")
+    ap.add_argument("--out", default="", help="write answers JSON here")
+    ap.add_argument("--supervise", action="store_true",
+                    help="drive resident chains under SupervisedRun "
+                         "(verified checkpoints, health guards, resume)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--outer-steps", type=int, default=32,
+                    help="supervised outer steps before answering")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    cfg = get_arch(args.arch, smoke=args.smoke)
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 1,
-                                 cfg.vocab_size, dtype=jnp.int32)
-    t0 = time.time()
-    out = generate(cfg, params, prompts, args.gen)
-    dt = time.time() - t0
-    n_new = args.batch * args.gen
-    print(f"[serve] generated {out.shape} in {dt:.2f}s "
-          f"({n_new / dt:.1f} tok/s incl. prefill+compile)")
-    print(out[0, :16])
+    if args.queries and args.demo:
+        ap.error("pass --queries or --demo, not both")
+    if not args.queries and not args.demo:
+        ap.error("no queries: pass --queries FILE or --demo N")
+    if args.ckpt_dir and not args.supervise:
+        ap.error("--ckpt-dir requires --supervise")
+
+    g = engine_lib.make_workload(args.workload).graph
+    queries = (_load_queries(args.workload, args.queries) if args.queries
+               else _demo_queries(args.workload, g, args.demo, args.seed))
+    policy = FreshnessPolicy(max_rhat=args.rhat,
+                             min_ess_per_site=args.min_ess,
+                             min_samples=args.min_samples)
+    res = serve_batch(args.workload, queries, engine=args.engine,
+                      backend=args.backend, chains=args.chains,
+                      sweep=args.sweep, chunk=args.chunk,
+                      warmup_chunks=args.warmup_chunks,
+                      max_extra_sweeps=args.max_extra_sweeps,
+                      policy=policy, seed=args.seed,
+                      supervise=args.supervise, ckpt_dir=args.ckpt_dir,
+                      outer_steps=args.outer_steps)
+    print(f"[serve] {res['n_queries']} queries on {args.workload} "
+          f"({args.engine}/{args.backend}): "
+          f"fresh={res['fresh_fraction']:.2f} "
+          f"{res['queries_per_sec']:.1f} q/s "
+          f"traces={res['compiled_traces']} "
+          f"resident_sweeps={res['resident_sweeps']}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"[serve] wrote {args.out}")
 
 
 if __name__ == "__main__":

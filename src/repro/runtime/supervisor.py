@@ -121,8 +121,14 @@ class SupervisedRun:
                  make_engine: Callable[..., Any],
                  config: SupervisorConfig,
                  fault_plan: Optional[FaultPlan] = None, *,
-                 sleep_fn: Callable[[float], None] = time.sleep):
+                 sleep_fn: Callable[[float], None] = time.sleep,
+                 on_step: Optional[Callable[..., Any]] = None):
         self.cfg = config
+        # ``on_step(step, bundle, telemetry, engine)`` fires after every
+        # COMMITTED outer step (health-checked, checkpointed) — the serving
+        # layer publishes pool snapshots from it; return False to stop the
+        # run early (the serving front's drain path)
+        self._on_step = on_step
         self.make_engine = make_engine
         self.engine_name = engine_name
         self.plan = fault_plan
@@ -348,6 +354,10 @@ class SupervisedRun:
                 if cfg.ckpt_dir and (step % cfg.ckpt_every == 0
                                      or step == cfg.outer_steps):
                     self._save(step, bundle)
+                if (self._on_step is not None
+                        and self._on_step(step, bundle, tel,
+                                          self.engine) is False):
+                    break
             except Exception as e:     # noqa: BLE001 — supervision boundary
                 self._budget.consume()
                 if self._budget.exhausted:

@@ -1,0 +1,20 @@
+"""Marginal-inference serving: warm resident chains answering live queries.
+
+The paper's cheap single-site updates make it viable to keep hot Markov
+chains resident on large graphical models and amortize their sweeps across
+many concurrent queries — this package is that serving surface:
+
+  * :mod:`.query` — the :class:`Query` / :class:`Answer` request types
+    (per-request evidence, marginal or MAP, freshness + staleness back);
+  * :mod:`.pool` — :class:`ChainPool`, the warm pool: one Engine + ONE
+    compiled sweep chunk per workload, evidence clamping as data (no
+    recompile between clamped/unclamped requests), telemetry-gated
+    freshness, non-perturbing snapshot reads.
+
+The request front is ``repro.launch.serve`` (batched submission, workload
+routing, SupervisedRun-wrapped drivers for crash-resume).
+"""
+from .query import Query, Answer
+from .pool import ChainPool, PoolWorkload
+
+__all__ = ["Query", "Answer", "ChainPool", "PoolWorkload"]

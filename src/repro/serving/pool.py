@@ -1,0 +1,371 @@
+"""ChainPool: warm resident chains multiplexing live marginal queries.
+
+One registered workload owns one Engine, ONE jitted sweep chunk, and a set
+of lanes — the resident unconditional lane plus an LRU of conditioned
+lanes, one per distinct evidence set currently being queried.  The design
+invariants:
+
+  * **One compiled sweep per workload.**  The chunk takes the evidence
+    mask/values as DATA arguments; the resident lane passes the all-zero
+    mask, conditioned lanes pass theirs, and every lane — clamped or not —
+    reuses the same jit trace (``compiled_cache_size`` stays 1; asserted
+    in tests).  Conditioning a new evidence set costs a clamp + cache
+    refresh, never a recompile.
+  * **Snapshot reads are free and non-perturbing.**  Each chunk publishes
+    an immutable ``_Snapshot`` (state, telemetry carry, running marginal
+    sums); answering a query reads the latest snapshot — no host sync is
+    added to the sweep path, and serving traffic cannot perturb the chain
+    (jnp/pallas sweeps do not donate their inputs; the resident lane's
+    trajectory is bit-identical with or without serving, asserted in
+    tests).
+  * **Freshness-gated answers.**  Every answer passes the
+    :class:`~repro.diagnostics.freshness.FreshnessPolicy` gate over the
+    lane's UNOBSERVED sites before it is served; a lane that cannot get
+    fresh within the query's sweep budget refuses (``fresh=False``,
+    ``marginals=None``) rather than serving a biased estimate.
+  * **Conditioned lanes fork warm.**  A new evidence set clamps the
+    resident lane's latest snapshot (:meth:`Engine.clamp` — observed
+    coordinates overwritten, MIN-Gibbs/DoubleMIN energy caches re-drawn)
+    and folds a signature-derived tag into the chain keys so lanes draw
+    independent streams; the unobserved coordinates start from the warm
+    resident configuration instead of a cold init.
+
+Drive the pool three ways: synchronously (:meth:`advance`), on the
+background daemon driver (:meth:`start`/:meth:`stop`), or externally by an
+owner loop that pushes snapshots via :meth:`publish` — the supervised
+serving front (``launch/serve.py``) does the latter so resident chains get
+checkpoint crash-resume from :class:`~repro.runtime.supervisor.
+SupervisedRun` for free.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+import zlib
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import engine as engine_lib
+from ..diagnostics.freshness import FreshnessPolicy, freshness_report
+from .query import Query, Answer
+
+__all__ = ["ChainPool", "PoolWorkload"]
+
+Signature = Tuple[Tuple[int, int], ...]
+
+
+class _Snapshot(NamedTuple):
+    """Immutable published view of a lane after some chunk: everything an
+    answer needs, read without touching the advancing chain."""
+    st: Any
+    tel: Any
+    marg: jax.Array      # (C, n, D) running one-hot sums
+    count: jax.Array     # () snapshots accumulated
+    sweeps: int          # lane sweeps completed at publish time
+
+
+class _Lane:
+    """One (workload, evidence-signature) chain group."""
+
+    def __init__(self, signature: Signature, evidence, site_mask, snap):
+        self.signature = signature
+        self.evidence = evidence          # (ev_mask, ev_vals) device arrays
+        self.site_mask = site_mask        # (n,) bool, True = unobserved
+        self.snap: _Snapshot = snap
+        self.sweeps = snap.sweeps         # sweeps STARTED (>= snap.sweeps)
+        self.lock = threading.Lock()
+
+
+def _fold_keys(state, tag: int):
+    """Fork the per-chain PRNG streams with a lane-signature tag (handles
+    the AdaptiveScan state wrapper)."""
+    inner = getattr(state, "inner", None)
+    st = state if inner is None else inner
+    st = st._replace(key=jax.vmap(
+        lambda k: jax.random.fold_in(k, tag))(st.key))
+    return st if inner is None else state._replace(inner=st)
+
+
+class PoolWorkload:
+    """Everything the pool holds per registered workload: the Engine, the
+    one jitted chunk, the resident lane, and the conditioned-lane LRU."""
+
+    def __init__(self, name: str, eng, chunk, resident: _Lane, *,
+                 policy: FreshnessPolicy, sweeps_per_chunk: int,
+                 max_conditioned: int, seed: int):
+        self.name = name
+        self.engine = eng
+        self.chunk = chunk
+        self.resident = resident
+        self.policy = policy
+        self.sweeps_per_chunk = sweeps_per_chunk
+        self.max_conditioned = max_conditioned
+        self.seed = seed
+        self.lanes: "collections.OrderedDict[Signature, _Lane]" = \
+            collections.OrderedDict()
+
+
+def _zero_evidence(n: int):
+    return (jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.int32))
+
+
+class ChainPool:
+    """The warm pool: register workloads, advance their chains, answer
+    batched queries (see the module docstring for the design)."""
+
+    def __init__(self, *, policy: Optional[FreshnessPolicy] = None,
+                 seed: int = 0):
+        self.policy = policy or FreshnessPolicy()
+        self.seed = seed
+        self._workloads: Dict[str, PoolWorkload] = {}
+        self._lock = threading.Lock()
+        self._driver: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, name: str, *, graph=None, engine: str = "gibbs",
+                 backend: str = "jnp", chains: int = 32,
+                 sweep: Optional[int] = None, schedule=None,
+                 sweeps_per_chunk: int = 8,
+                 policy: Optional[FreshnessPolicy] = None,
+                 max_conditioned: int = 8, seed: Optional[int] = None,
+                 **params) -> PoolWorkload:
+        """Register workload ``name``: build its Engine, compile its chunk,
+        init the resident lane.  ``name`` doubles as the registry workload
+        name when ``graph`` is omitted.  The engine must support evidence
+        clamping (jnp/pallas gibbs-family)."""
+        if name in self._workloads:
+            raise ValueError(f"workload {name!r} already registered")
+        if graph is None:
+            graph = engine_lib.make_workload(name).graph
+        if sweep is None and schedule is None:
+            sweep = graph.n
+        eng = engine_lib.make(engine, graph, sweep=sweep, schedule=schedule,
+                              backend=backend, **params)
+        if not eng.supports_evidence:
+            raise ValueError(
+                f"engine {engine!r} ({eng.backend}/"
+                f"{eng.schedule.describe()}) cannot serve conditioned "
+                f"queries; pick a jnp/pallas gibbs-family engine")
+        seed = self.seed if seed is None else seed
+        st = eng.init(jax.random.PRNGKey(seed), chains)
+        tel = eng.init_telemetry(st)
+        marg = jnp.zeros((chains, graph.n, graph.D), jnp.float32)
+        snap = _Snapshot(st=st, tel=tel, marg=marg,
+                         count=jnp.float32(0.0), sweeps=0)
+        resident = _Lane((), _zero_evidence(graph.n),
+                         np.ones((graph.n,), bool), snap)
+        w = PoolWorkload(name, eng, _make_chunk(eng, sweeps_per_chunk),
+                         resident, policy=policy or self.policy,
+                         sweeps_per_chunk=sweeps_per_chunk,
+                         max_conditioned=max_conditioned, seed=seed)
+        with self._lock:
+            self._workloads[name] = w
+        return w
+
+    def workload(self, name: str) -> PoolWorkload:
+        try:
+            return self._workloads[name]
+        except KeyError:
+            raise KeyError(f"workload {name!r} not registered; have "
+                           f"{sorted(self._workloads)}") from None
+
+    def engine(self, name: str):
+        return self.workload(name).engine
+
+    def snapshot(self, name: str,
+                 signature: Signature = ()) -> _Snapshot:
+        """The latest published snapshot of a lane (resident by default)."""
+        w = self.workload(name)
+        if signature == ():
+            return w.resident.snap
+        return w.lanes[signature].snap
+
+    def compiled_cache_size(self, name: str) -> int:
+        """Traces compiled for this workload's sweep chunk — stays 1 across
+        clamped and unclamped lanes (the no-recompile acceptance check)."""
+        return self.workload(name).chunk._cache_size()
+
+    # -- lanes --------------------------------------------------------------
+
+    def _lane_for(self, w: PoolWorkload, signature: Signature) -> _Lane:
+        if signature == ():
+            return w.resident
+        with self._lock:
+            lane = w.lanes.get(signature)
+            if lane is not None:
+                w.lanes.move_to_end(signature)
+                return lane
+            g = w.engine.graph
+            sites = np.asarray([s for s, _ in signature], np.int64)
+            vals = np.asarray([v for _, v in signature], np.int64)
+            if sites.size and (sites.min() < 0 or sites.max() >= g.n):
+                raise ValueError(f"evidence sites out of range [0, {g.n})")
+            if vals.size and (vals.min() < 0 or vals.max() >= g.D):
+                raise ValueError(f"evidence values out of range [0, {g.D})")
+            if sites.size >= g.n:
+                raise ValueError("evidence observes every site; nothing "
+                                 "left to sample — compute it directly")
+            mask = np.zeros((g.n,), np.float32)
+            mask[sites] = 1.0
+            ev_vals = np.zeros((g.n,), np.int32)
+            ev_vals[sites] = vals
+            ev = (jnp.asarray(mask), jnp.asarray(ev_vals))
+            # fork warm from the resident snapshot: clamp + cache refresh
+            # + signature-tagged independent key streams
+            tag = zlib.crc32(repr(signature).encode())
+            fork_key = jax.random.fold_in(jax.random.PRNGKey(w.seed), tag)
+            st = w.engine.clamp(fork_key, w.resident.snap.st, ev)
+            st = _fold_keys(st, tag & 0x7FFFFFFF)
+            tel = w.engine.init_telemetry(st)
+            snap = _Snapshot(
+                st=st, tel=tel, marg=jnp.zeros_like(w.resident.snap.marg),
+                count=jnp.float32(0.0), sweeps=0)
+            lane = _Lane(signature, ev, mask == 0.0, snap)
+            w.lanes[signature] = lane
+            while len(w.lanes) > w.max_conditioned:   # LRU eviction
+                w.lanes.popitem(last=False)
+            return lane
+
+    def _advance_lane(self, w: PoolWorkload, lane: _Lane, chunks: int = 1):
+        with lane.lock:
+            for _ in range(chunks):
+                snap = lane.snap
+                lane.sweeps += w.sweeps_per_chunk
+                st, tel, marg, count = w.chunk(snap.st, snap.tel, snap.marg,
+                                               snap.count, *lane.evidence)
+                lane.snap = _Snapshot(st=st, tel=tel, marg=marg,
+                                      count=count, sweeps=lane.sweeps)
+
+    def advance(self, name: Optional[str] = None, chunks: int = 1):
+        """Synchronously advance every lane of ``name`` (or of every
+        workload) by ``chunks`` jitted chunks."""
+        names = [name] if name is not None else list(self._workloads)
+        for nm in names:
+            w = self.workload(nm)
+            for lane in [w.resident, *list(w.lanes.values())]:
+                self._advance_lane(w, lane, chunks)
+
+    def publish(self, name: str, st, tel, marg, count, sweeps: int):
+        """External-driver path: an owner loop (the supervised serving
+        front) pushes the resident lane's new snapshot after each of its
+        own steps.  Do not mix with :meth:`start` on the same workload."""
+        w = self.workload(name)
+        lane = w.resident
+        with lane.lock:
+            lane.sweeps = int(sweeps)
+            lane.snap = _Snapshot(st=st, tel=tel, marg=marg, count=count,
+                                  sweeps=int(sweeps))
+
+    # -- background driver --------------------------------------------------
+
+    def start(self, interval_s: float = 0.0):
+        """Start the daemon driver: round-robin one chunk per lane per
+        round, ``interval_s`` sleep between rounds."""
+        if self._driver is not None:
+            raise RuntimeError("driver already running")
+        self._stop.clear()
+
+        def drive():
+            while not self._stop.is_set():
+                for nm in list(self._workloads):
+                    w = self._workloads.get(nm)
+                    if w is None:
+                        continue
+                    for lane in [w.resident, *list(w.lanes.values())]:
+                        if self._stop.is_set():
+                            return
+                        self._advance_lane(w, lane, 1)
+                if interval_s:
+                    self._stop.wait(interval_s)
+
+        self._driver = threading.Thread(target=drive, name="chainpool-driver",
+                                        daemon=True)
+        self._driver.start()
+
+    def stop(self):
+        if self._driver is None:
+            return
+        self._stop.set()
+        self._driver.join()
+        self._driver = None
+
+    # -- answering ----------------------------------------------------------
+
+    def submit(self, queries: Sequence[Query], *,
+               max_extra_sweeps: Optional[int] = None,
+               serve_stale: bool = False) -> List[Answer]:
+        """Answer a batch of queries; returns answers in request order.
+
+        Queries are grouped by (workload, evidence signature) so one lane
+        read serves the whole group.  A lane that fails the freshness gate
+        is advanced — at most ``max_extra_sweeps`` extra sweeps (default:
+        64 chunks' worth) — and refused if still stale, unless
+        ``serve_stale=True`` (estimate returned, ``fresh=False`` kept)."""
+        answers: List[Optional[Answer]] = [None] * len(queries)
+        groups: Dict[Tuple[str, Signature], List[int]] = {}
+        for idx, q in enumerate(queries):
+            groups.setdefault((q.workload, q.signature), []).append(idx)
+        for (wname, sig), idxs in groups.items():
+            w = self.workload(wname)
+            lane = self._lane_for(w, sig)
+            budget = (64 * w.sweeps_per_chunk if max_extra_sweeps is None
+                      else max_extra_sweeps)
+            spent = 0
+            while True:
+                snap = lane.snap
+                rep = freshness_report(snap.tel, w.policy,
+                                       site_mask=lane.site_mask)
+                if rep["fresh"] or spent + w.sweeps_per_chunk > budget:
+                    break
+                self._advance_lane(w, lane, 1)
+                spent += w.sweeps_per_chunk
+            staleness = lane.sweeps - snap.sweeps
+            marg = None
+            if rep["fresh"] or serve_stale:
+                cnt = max(float(np.asarray(snap.count)), 1.0)
+                C = snap.marg.shape[0]
+                marg = (np.asarray(snap.marg, np.float64).sum(0)
+                        / (cnt * C))
+            for idx in idxs:
+                answers[idx] = _answer(queries[idx], rep, staleness,
+                                       snap.sweeps, marg)
+        return answers    # type: ignore[return-value]
+
+
+def _answer(q: Query, rep, staleness: int, sweeps: int,
+            marg: Optional[np.ndarray]) -> Answer:
+    ans = Answer(query=q, fresh=bool(rep["fresh"]), report=dict(rep),
+                 staleness_sweeps=staleness, sweeps=sweeps)
+    if marg is None:
+        return ans
+    sel = marg if q.sites is None else marg[np.asarray(q.sites, np.int64)]
+    if q.kind == "map":
+        ans.map_values = np.argmax(sel, axis=-1)
+    else:
+        ans.marginals = sel
+    return ans
+
+
+def _make_chunk(eng, sweeps_per_chunk: int):
+    """THE one compiled function per workload: ``sweeps_per_chunk`` fused
+    telemetry'd sweeps + snapshot-marginal accumulation, evidence as data."""
+    D = eng.graph.D
+
+    @jax.jit
+    def chunk(st, tel, marg, count, ev_mask, ev_vals):
+        def body(carry, _):
+            st, tel, marg, count = carry
+            st, tel = eng.sweep(st, tel, evidence=(ev_mask, ev_vals))
+            marg = marg + jax.nn.one_hot(st.x, D, dtype=jnp.float32)
+            return (st, tel, marg, count + 1.0), None
+        (st, tel, marg, count), _ = jax.lax.scan(
+            body, (st, tel, marg, count), None, length=sweeps_per_chunk)
+        return st, tel, marg, count
+
+    return chunk

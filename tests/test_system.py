@@ -2,14 +2,14 @@
 fault injection; serving loop; paper-experiment pipeline."""
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs.registry import get_arch
 from repro.launch.train import train
-from repro.launch.serve import generate
-from repro.models import transformer as T
+from repro.launch.serve import serve_batch
 from repro.core import engine, make_potts_graph, run_marginal_experiment
+from repro.diagnostics import FreshnessPolicy
+from repro.serving import Query
 
 
 def test_train_loop_loss_decreases(tmp_path):
@@ -40,13 +40,24 @@ def test_train_resume_after_failure(tmp_path):
     assert loss_resumed == pytest.approx(loss_ref, rel=1e-3)
 
 
-def test_serve_generates(tmp_path):
-    cfg = get_arch("tinyllama-1.1b", smoke=True)
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
-    prompts = jnp.ones((2, 4), jnp.int32)
-    out = generate(cfg, params, prompts, gen_tokens=4)
-    assert out.shape == (2, 8)
-    assert bool(jnp.all((out >= 0) & (out < T._pad_vocab(cfg.vocab_size))))
+def test_serve_pipeline_answers_queries():
+    """The serving front end to end: a batch of unclamped + clamped queries
+    through serve_batch, all freshness-gated, one compiled trace."""
+    wl = "hetero-pairs-24"
+    queries = [Query(wl), Query(wl, evidence=((0, 1),)),
+               Query(wl, sites=(1,), evidence=((0, 1),), kind="map")]
+    res = serve_batch(wl, queries, engine="gibbs", backend="jnp",
+                      chains=16, sweep=24, chunk=16,
+                      max_extra_sweeps=20_000,
+                      policy=FreshnessPolicy(max_rhat=1.2,
+                                             min_ess_per_site=16.0,
+                                             min_samples=8))
+    assert res["n_queries"] == 3
+    assert res["fresh_fraction"] == 1.0
+    assert res["compiled_traces"] == 1
+    clamped = res["answers"][1]
+    assert clamped["marginals"][0] == [0.0, 1.0]      # observed site: delta
+    assert res["answers"][2]["map_values"] == [1]     # strong partner matches
 
 
 def test_paper_experiment_pipeline():
