@@ -61,7 +61,12 @@ def timed_steps(eng, state, n_iters: int, n_chains: int,
 #   4 — serving rows (serve_bench): queries_per_sec,
 #       staleness_p50/p99_sweeps, fresh_fraction alongside the engine
 #       identity — the request-path trajectory of the serving layer
-SCHEMA_VERSION = 4
+#   5 — roofline rows: timing breakdown (seconds_per_call, calls) read
+#       from obs metrics snapshots plus analytic flops/bytes per call,
+#       achieved_gflops / achieved_gbs / arithmetic_intensity, and the
+#       dist collective payload fields (psum_payload_bytes,
+#       collectives_per_sweep) on every roofline record
+SCHEMA_VERSION = 5
 RECORDS: list = []
 
 
@@ -89,6 +94,10 @@ def row(name: str, us: float, derived: str, **extra):
     print(f"{name},{us:.3f},{derived}", flush=True)
     RECORDS.append({"name": name, "us_per_call": round(us, 3),
                     "derived": derived, **extra})
+    # mirror into the active obs recorder (no-op unless `run.py
+    # --metrics-dir/--trace` configured one): bench rows become gauges
+    from repro.obs import get_recorder
+    get_recorder().gauge("bench_us_per_call", us, bench=name)
 
 
 def bench_graphs(paper_scale: bool):

@@ -1,43 +1,90 @@
-"""Roofline reporter: reads results/dryrun/*.json and prints the per-cell
-three-term roofline table (also consumed by EXPERIMENTS.md §Roofline)."""
+"""Roofline rows for the fused sweep engines, driven by obs metrics.
+
+For each (engine, workload) cell this builds the current Engine, times a
+block of fused sweep calls inside an ``obs.Recorder`` span, and reads the
+achieved seconds back out of the metrics snapshot (``span_seconds_total``
+/ ``span_calls_total``) instead of a private stopwatch — the same series
+a production run exports.  Analytic flops/bytes per call come from the
+``sweep_flops_per_call`` / ``sweep_bytes_per_call`` gauges that
+``Recorder.register_engine`` publishes (``repro/obs/costmodel.py``), and
+the dist collective payload fields ride along from ``psum_footprint`` so
+every record carries the full schema-v5 breakdown:
+
+  seconds_per_call, calls, flops_per_call, bytes_per_call,
+  achieved_gflops, achieved_gbs, arithmetic_intensity,
+  psum_payload_bytes, collectives_per_sweep
+
+The jnp cells are measured; one analytic dist row per algorithm reports
+the collective payload a mesh run would move (BENCH_dist.json holds the
+measured dist timings).
+"""
 from __future__ import annotations
 
-import glob
-import json
-import os
+import jax
 
-from .common import row
-
-HEADERS = ("arch", "shape", "mesh", "t_compute_s", "t_memory_s",
-           "t_collective_s", "bottleneck", "model_flops_ratio")
+from .common import row, bench_graphs
 
 
-def load_records(out_dir: str = "results/dryrun"):
-    recs = []
-    for path in sorted(glob.glob(os.path.join(out_dir, "*", "*.json"))):
-        with open(path) as f:
-            recs.append(json.load(f))
-    return recs
+def _measure_cell(name: str, eng, wname: str, *, chains: int, calls: int):
+    """Time ``calls`` sweep calls through a recorder span; returns the
+    schema-v5 roofline fields read back from the metrics snapshot."""
+    from repro import obs
+
+    rec = obs.Recorder()               # in-memory: no files, no global
+    labels = rec.register_engine(eng, workload=wname, chains=chains)
+    st = eng.init(jax.random.PRNGKey(0), chains)
+    st = eng.sweep(st)                 # compile + warm outside the span
+    jax.block_until_ready(st.x)
+    with rec.span("sweep_chunk", **labels):
+        for _ in range(calls):
+            st = eng.sweep(st)
+        jax.block_until_ready(st.x)    # the span closes on synced work
+    sec = rec.metrics.value("span_seconds_total", span="sweep_chunk")
+    n = rec.metrics.value("span_calls_total", span="sweep_chunk")
+    flops = rec.metrics.value("sweep_flops_per_call", **labels)
+    bytes_ = rec.metrics.value("sweep_bytes_per_call", **labels)
+    sec_per_call = sec / (n * calls)   # n spans of `calls` sweeps each
+    return {
+        "seconds_per_call": sec_per_call, "calls": calls,
+        "flops_per_call": flops, "bytes_per_call": bytes_,
+        "achieved_gflops": flops / sec_per_call / 1e9,
+        "achieved_gbs": bytes_ / sec_per_call / 1e9,
+        "arithmetic_intensity": flops / max(bytes_, 1.0),
+        "psum_payload_bytes": rec.metrics.value("psum_payload_bytes",
+                                                **labels),
+        "collectives_per_sweep": rec.metrics.value("collectives_per_sweep",
+                                                   **labels),
+    }
 
 
-def run(paper_scale: bool = False, out_dir: str = "results/dryrun"):
-    recs = load_records(out_dir)
-    ok = [r for r in recs if r.get("status") == "ok"]
-    for r in ok:
-        rl = r.get("roofline", {})
-        dom = rl.get("bottleneck", "-")
-        tmax = max(rl.get("t_compute_s", 0), rl.get("t_memory_s", 0),
-                   rl.get("t_collective_s", 0))
-        frac = (rl.get("t_compute_s", 0.0) / tmax) if tmax else 0.0
-        mfr = r.get("model_flops_ratio")
-        row(f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}",
-            tmax * 1e6,
-            f"bneck={dom};compute_frac={frac:.3f};"
-            f"model_flops_ratio={mfr if mfr is None else round(mfr, 3)};"
-            f"tc={rl.get('t_compute_s', 0):.3e};"
-            f"tm={rl.get('t_memory_s', 0):.3e};"
-            f"tx={rl.get('t_collective_s', 0):.3e}")
-    n_err = sum(1 for r in recs if r.get("status") == "error")
-    n_skip = sum(1 for r in recs if r.get("status") == "skipped")
-    row("roofline/summary", 0.0,
-        f"cells_ok={len(ok)};errors={n_err};skipped={n_skip}")
+def run(paper_scale: bool = False, smoke: bool = False):
+    from repro.core import engine as engine_lib
+    from repro.runtime.dist_gibbs import psum_footprint
+
+    ising, potts = bench_graphs(paper_scale)
+    chains = 8 if smoke else 32
+    calls = 4 if smoke else 16
+    sweep = 32 if smoke else 64
+    cells = [("gibbs", ising, "ising"), ("gibbs", potts, "potts"),
+             ("mgpmh", ising, "ising")]
+    if not smoke:
+        cells += [("mgpmh", potts, "potts"), ("min-gibbs", ising, "ising")]
+    for algo, g, wname in cells:
+        eng = engine_lib.make(algo, g, sweep=sweep, backend="jnp")
+        m = _measure_cell(algo, eng, wname, chains=chains, calls=calls)
+        row(f"roofline/{algo}/{wname}", m["seconds_per_call"] * 1e6,
+            f"gflops={m['achieved_gflops']:.3f};"
+            f"gbs={m['achieved_gbs']:.3f};"
+            f"ai={m['arithmetic_intensity']:.2f}",
+            **m, **eng.describe())
+    # analytic dist payload rows: what one sweep call moves over the mesh
+    # (C sharded over data axes; measured dist timings live in
+    # BENCH_dist.json — these rows make payload visible in every bench run)
+    D = ising.D
+    for algo in ("gibbs", "mgpmh", "min-gibbs", "doublemin"):
+        foot = psum_footprint(algo, C=chains, D=D, S=sweep)
+        row(f"roofline/dist-payload/{algo}", 0.0,
+            f"psum_bytes={foot['psum_payload_bytes']};"
+            f"collectives={foot['collectives_per_sweep']}",
+            **foot, engine=algo, backend="dist", chains=chains,
+            sweep=sweep, D=D)

@@ -26,8 +26,17 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: diagnostics + newly-swept kernel rows, "
                          "tiny scales")
+    ap.add_argument("--metrics-dir", default="",
+                    help="export bench metrics (metrics.jsonl/.prom) here")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto trace-event JSON here")
     args = ap.parse_args()
     import types
+
+    from repro import obs
+    rec = obs.configure(metrics_dir=args.metrics_dir or None,
+                        trace_path=args.trace or None,
+                        process_name="repro.bench")
 
     from . import (table1_cost, fig1_min_gibbs, fig2_variants, kernel_bench,
                    roofline, sweep_bench, diagnostics_bench, serve_bench,
@@ -43,7 +52,7 @@ def main() -> None:
             # BENCH_serve.json comes from ``--json ... --only serve``)
             "serve": serve_bench}
     if args.smoke:
-        only = ["diag", "sweep", "dist", "serve"]
+        only = ["diag", "sweep", "dist", "serve", "roofline"]
     else:
         only = args.only.split(",") if args.only else list(mods)
     print("name,us_per_call,derived")
@@ -62,6 +71,7 @@ def main() -> None:
                            "records": common.RECORDS}, f, indent=1)
             print(f"# wrote {len(common.RECORDS)} records to {args.json}",
                   flush=True)
+        rec.close()
 
 
 if __name__ == '__main__':

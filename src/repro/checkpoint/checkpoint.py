@@ -88,6 +88,18 @@ def _write(directory: str, step: int, host: Dict[str, np.ndarray],
     """The ONE checkpoint writer: tmp dir -> arrays.npz + manifest.json ->
     atomic rename.  Serialized per directory so concurrent saves of the
     same step can't interleave their rm/rename (last writer wins)."""
+    from ..obs import get_recorder
+    rec = get_recorder()
+    nbytes = sum(int(v.nbytes) for v in host.values())
+    with rec.span("checkpoint/save", step=step, bytes=nbytes):
+        out = _write_locked(directory, step, host, extra)
+    rec.count("checkpoint_saves_total", 1)
+    rec.count("checkpoint_bytes_total", nbytes)
+    return out
+
+
+def _write_locked(directory: str, step: int, host: Dict[str, np.ndarray],
+                  extra: Optional[dict]) -> str:
     with _dir_lock(directory):
         os.makedirs(directory, exist_ok=True)
         final = os.path.join(directory, f"step_{step:08d}")
@@ -160,6 +172,12 @@ def verify(directory: str, step: int) -> List[str]:
     loadable, key sets match, per-array shape/dtype match the manifest,
     and (when the manifest carries them — all checkpoints written since
     checksums landed do) per-array crc32 checksums."""
+    from ..obs import get_recorder
+    with get_recorder().span("checkpoint/verify", step=step):
+        return _verify_inner(directory, step)
+
+
+def _verify_inner(directory: str, step: int) -> List[str]:
     path = os.path.join(directory, f"step_{step:08d}")
     problems: List[str] = []
     try:
@@ -243,6 +261,12 @@ def restore(directory: str, step: int, like,
     ``shardings``: optional matching pytree of jax.sharding.Sharding — leaves
     are device_put with them (this is the elastic-reshard path: the target
     mesh may differ from the one that wrote the checkpoint)."""
+    from ..obs import get_recorder
+    with get_recorder().span("checkpoint/restore", step=step):
+        return _restore_inner(directory, step, like, shardings)
+
+
+def _restore_inner(directory: str, step: int, like, shardings=None) -> Any:
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)

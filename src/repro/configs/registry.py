@@ -6,14 +6,13 @@ from typing import Dict
 
 from .base import ModelConfig, ShapeSpec, SHAPES
 from . import (mixtral_8x7b, deepseek_v2_lite_16b, falcon_mamba_7b,
-               pixtral_12b, gemma3_12b, tinyllama_1_1b, h2o_danube3_4b,
+               gemma3_12b, tinyllama_1_1b, h2o_danube3_4b,
                starcoder2_7b, hymba_1_5b, whisper_tiny)
 
 _MODULES = {
     "mixtral-8x7b": mixtral_8x7b,
     "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
     "falcon-mamba-7b": falcon_mamba_7b,
-    "pixtral-12b": pixtral_12b,
     "gemma3-12b": gemma3_12b,
     "tinyllama-1.1b": tinyllama_1_1b,
     "h2o-danube-3-4b": h2o_danube3_4b,
@@ -39,7 +38,7 @@ def get_arch(name: str, smoke: bool = False) -> ModelConfig:
 
 
 def cells(include_skipped: bool = False):
-    """All (arch, shape) dry-run cells — 40 total; skipped ones carry the
+    """All (arch, shape) dry-run cells — 36 total; skipped ones carry the
     skip reason from the config."""
     out = []
     for aname, cfg in ARCHS.items():

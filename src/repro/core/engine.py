@@ -246,27 +246,30 @@ class Engine:
                 f"clamping; serve conditioned queries from a jnp/pallas "
                 f"gibbs-family engine")
         kw = {} if evidence is None else {"evidence": evidence}
-        if telemetry is None:
-            return self.sweep_fn(state, **kw)
-        from ..diagnostics.telemetry import telemetry_update
-        old_x = state.x
-        old_acc = getattr(state, "accepts", None)
-        if self.backend == "dist":        # sweep donates the input buffers
-            old_x = jnp.copy(old_x)
-            old_acc = None if old_acc is None else jnp.copy(old_acc)
-        if self.sweep_stats_fn is not None:
-            new, stats = self.sweep_stats_fn(state, **kw)
-        else:
-            new, stats = self.sweep_fn(state, **kw), None
-        delta = None if old_acc is None else new.accepts - old_acc
-        # health hooks: the state's cached energy + the site domain feed the
-        # in-graph guards (bad_state flag, windowed acceptance) riding the
-        # telemetry carry — no host sync on this path
-        telemetry = telemetry_update(telemetry, old_x, new.x,
-                                     self.updates_per_call, delta, stats,
-                                     cache=getattr(new, "cache", None),
-                                     n_values=self.graph.D)
-        return new, telemetry
+        from ..obs import annotate
+        with annotate(f"repro.sweep/{self.name}/{self.backend}"):
+            if telemetry is None:
+                return self.sweep_fn(state, **kw)
+            from ..diagnostics.telemetry import telemetry_update
+            old_x = state.x
+            old_acc = getattr(state, "accepts", None)
+            if self.backend == "dist":    # sweep donates the input buffers
+                old_x = jnp.copy(old_x)
+                old_acc = None if old_acc is None else jnp.copy(old_acc)
+            if self.sweep_stats_fn is not None:
+                new, stats = self.sweep_stats_fn(state, **kw)
+            else:
+                new, stats = self.sweep_fn(state, **kw), None
+            delta = None if old_acc is None else new.accepts - old_acc
+            # health hooks: the state's cached energy + the site domain feed
+            # the in-graph guards (bad_state flag, windowed acceptance)
+            # riding the telemetry carry — no host sync on this path
+            with annotate("repro.sweep/telemetry"):
+                telemetry = telemetry_update(
+                    telemetry, old_x, new.x, self.updates_per_call, delta,
+                    stats, cache=getattr(new, "cache", None),
+                    n_values=self.graph.D)
+            return new, telemetry
 
     def clamp(self, key: jax.Array, state, evidence):
         """Overwrite the observed sites of every chain with their evidence

@@ -387,17 +387,19 @@ def _draw_sites(ki, C: int, S: int, n: int, sites, evidence, *,
     (C, S) draws (the jnp contract)."""
     if sites is not None:
         return sites
-    if evidence is not None:
-        cdf = evidence_cdf(evidence[0])
+    with jax.named_scope("repro.phase/site_draws"):
+        if evidence is not None:
+            cdf = evidence_cdf(evidence[0])
+            if per_chain:
+                u = jax.vmap(lambda k: jax.random.uniform(k, (S,)))(ki)
+            else:
+                u = jax.random.uniform(ki, (C, S))
+            i = jnp.searchsorted(cdf, u, side="right").astype(jnp.int32)
+            return jnp.minimum(i, n - 1)
         if per_chain:
-            u = jax.vmap(lambda k: jax.random.uniform(k, (S,)))(ki)
-        else:
-            u = jax.random.uniform(ki, (C, S))
-        i = jnp.searchsorted(cdf, u, side="right").astype(jnp.int32)
-        return jnp.minimum(i, n - 1)
-    if per_chain:
-        return jax.vmap(lambda k: jax.random.randint(k, (S,), 0, n))(ki)
-    return jax.random.randint(ki, (C, S), 0, n)
+            return jax.vmap(
+                lambda k: jax.random.randint(k, (S,), 0, n))(ki)
+        return jax.random.randint(ki, (C, S), 0, n)
 
 
 def _build_gibbs_sweep(graph: MatchGraph, sweep_len: int, *,
@@ -517,18 +519,21 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
         knew, master = _master_key(state.key)
         ki, kb, k1, kg, ka = jax.random.split(master, 5)
         i = _draw_sites(ki, C, S, n, sites, evidence, per_chain=False)
-        lam_i = lam * graph.row_sum[i] / graph.L
-        B = jnp.minimum(jax.random.poisson(kb, lam_i, dtype=jnp.int32), K)
-        un = jax.random.uniform(k1, (C, S, K)) * n
-        idx = jnp.minimum(un.astype(jnp.int32), n - 1)
-        pk = packed[i[..., None], idx]                         # (C, S, K, 2)
-        j = jnp.where(un - idx < pk[..., 0], idx,
-                      pk[..., 1].astype(jnp.int32))
-        # sentinel n for draws past B: they gather the pad column (value D)
-        # and land in no bucket
-        j = jnp.where(jnp.arange(K)[None, None, :] < B[..., None], j, n)
-        gumbel = jax.random.gumbel(kg, (C, S, D))
-        logu = jnp.log(jax.random.uniform(ka, (C, S)))
+        with jax.named_scope("repro.phase/minibatch_draws"):
+            lam_i = lam * graph.row_sum[i] / graph.L
+            B = jnp.minimum(
+                jax.random.poisson(kb, lam_i, dtype=jnp.int32), K)
+            un = jax.random.uniform(k1, (C, S, K)) * n
+            idx = jnp.minimum(un.astype(jnp.int32), n - 1)
+            pk = packed[i[..., None], idx]                     # (C, S, K, 2)
+            j = jnp.where(un - idx < pk[..., 0], idx,
+                          pk[..., 1].astype(jnp.int32))
+            # sentinel n for draws past B: they gather the pad column
+            # (value D) and land in no bucket
+            j = jnp.where(
+                jnp.arange(K)[None, None, :] < B[..., None], j, n)
+            gumbel = jax.random.gumbel(kg, (C, S, D))
+            logu = jnp.log(jax.random.uniform(ka, (C, S)))
         xp = jnp.pad(state.x, ((0, 0), (0, 1)), constant_values=D)
 
         def substep(carry, s):
@@ -553,8 +558,10 @@ def _make_mgpmh_sweep_jnp(graph: MatchGraph, lam: float, capacity: int,
             return (xp, acc + accept.astype(jnp.int32), sa), None
 
         sa0 = jnp.zeros((n if collect_stats else 0,), jnp.float32)
-        (xp, acc, sa), _ = jax.lax.scan(
-            substep, (xp, jnp.zeros((C,), jnp.int32), sa0), jnp.arange(S))
+        with jax.named_scope("repro.phase/substeps"):
+            (xp, acc, sa), _ = jax.lax.scan(
+                substep, (xp, jnp.zeros((C,), jnp.int32), sa0),
+                jnp.arange(S))
         new = state._replace(x=xp[:, :n], key=knew,
                              accepts=state.accepts + acc)
         if not collect_stats:

@@ -23,6 +23,20 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def _named(scope: str):
+    """Trace-time ``jax.named_scope`` around a sweep wrapper so kernel time
+    attributes to a named phase in profiler captures.  Applied *under*
+    ``jax.jit`` (scopes the traced computation, costs nothing at run time).
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with jax.named_scope(scope):
+                return fn(*args, **kwargs)
+        return wrapper
+    return deco
+
+
 @functools.partial(jax.jit, static_argnames=("D", "impl"))
 def bucket_energy(w: jax.Array, v: jax.Array, D: int,
                   impl: str = "auto") -> jax.Array:
@@ -91,6 +105,7 @@ def _pad_square(t, Np):
 
 
 @functools.partial(jax.jit, static_argnames=("D", "scale", "impl"))
+@_named("repro.kernel/mgpmh_sweep")
 def mgpmh_sweep(x, W, row_prob, row_alias, i_sites, B, u_idx, u_alias,
                 gumbel, logu, *, D: int, scale: float, impl: str = "auto"):
     """S fused sequential MGPMH site updates per chain (see kernels/ref.py
@@ -133,6 +148,7 @@ def mgpmh_sweep(x, W, row_prob, row_alias, i_sites, B, u_idx, u_alias,
 
 
 @functools.partial(jax.jit, static_argnames=("D", "impl"))
+@_named("repro.kernel/gibbs_sweep")
 def gibbs_sweep(x, W, i_sites, gumbel, *, D: int, impl: str = "auto"):
     """S fused sequential vanilla-Gibbs site updates per chain (exact
     conditionals; see kernels/ref.py ``gibbs_sweep_ref``).
@@ -188,6 +204,7 @@ def _pad_node_table(t, n, Np):
 
 
 @functools.partial(jax.jit, static_argnames=("D", "lscale", "impl"))
+@_named("repro.kernel/min_gibbs_sweep")
 def min_gibbs_sweep(x, node_prob, node_alias, row_prob, row_alias, i_sites,
                     B, u_node, u_nacc, u_row, u_racc, gumbel, cache, *,
                     D: int, lscale: float, impl: str = "auto"):
@@ -233,6 +250,7 @@ def min_gibbs_sweep(x, node_prob, node_alias, row_prob, row_alias, i_sites,
 
 @functools.partial(jax.jit, static_argnames=("D", "scale1", "lscale2",
                                              "impl"))
+@_named("repro.kernel/double_min_sweep")
 def double_min_sweep(x, row_prob, row_alias, node_prob, node_alias, i_sites,
                      B1, u_idx, u_alias, gumbel, B2, u_node, u_nacc, u_row,
                      u_racc, logu, cache, *, D: int, scale1: float,

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import engine as engine_lib
 from ..checkpoint import checkpoint as ckpt
 from .mesh import make_device_mesh, compat_shard_map
@@ -88,7 +89,7 @@ def run_supervised(config: str, engine: str, steps: int, chains: int,
     cfg = sup.SupervisorConfig(
         outer_steps=-(-steps // chunk), sweeps_per_outer=chunk,
         chains=chains, seed=seed, ckpt_dir=ckpt_dir,
-        max_restarts=max_restarts,
+        max_restarts=max_restarts, workload=config,
         heartbeat=os.path.join(ckpt_dir, "heartbeat.json")
         if ckpt_dir else "")
     plan = FaultPlan.from_json(fault_plan) if fault_plan else None
@@ -111,6 +112,8 @@ def run(config: str, engine: str, steps: int, chains: int,
                            adaptive)
     upd_per_step = eng.updates_per_call
     dist = eng.backend == "dist"
+    rec = obs.get_recorder()
+    labels = rec.register_engine(eng, workload=config, chains=chains)
 
     st = eng.init(jax.random.PRNGKey(seed), chains)
     tel = eng.init_telemetry(st) if telemetry else None
@@ -128,13 +131,17 @@ def run(config: str, engine: str, steps: int, chains: int,
         print(f"[gibbs] resumed at step {start}")
 
     t0 = time.time()
+    last_logged = 0
     for s in range(start, steps):
-        if tel is None:
-            st = eng.sweep(st)
-        else:
-            st, tel = eng.sweep(st, tel)
-        if not dist:
-            marg = marg + jax.nn.one_hot(st.x, g.D, dtype=jnp.float32)
+        # span brackets one compiled sweep launch (dispatch only — the
+        # host read below at the log boundary is the loop's only sync)
+        with rec.span("sweep_chunk", **labels):
+            if tel is None:
+                st = eng.sweep(st)
+            else:
+                st, tel = eng.sweep(st, tel)
+            if not dist:
+                marg = marg + jax.nn.one_hot(st.x, g.D, dtype=jnp.float32)
         if (s + 1) % log_every == 0 or s == steps - 1:
             # samples accumulated since step 0 (marg and accepts are both
             # cumulative across restarts on every backend)
@@ -156,6 +163,15 @@ def run(config: str, engine: str, steps: int, chains: int,
                 line += (f" rhat={ts['max_split_rhat']:.3f} "
                          f"ess/s={ts.get('ess_per_sec', 0.0):.1f}")
             print(line, flush=True)
+            # piggyback the log boundary's host read for metric export
+            rec.count("sweeps_total", s + 1 - start - last_logged, **labels)
+            rec.count("updates_total",
+                      (s + 1 - start - last_logged) * chains * upd_per_step,
+                      **labels)
+            last_logged = s + 1 - start
+            rec.gauge("acceptance", acc, **labels)
+            rec.gauge("marginal_err", err, **labels)
+            rec.snapshot()
             if ckpt_dir:
                 ckpt.save(ckpt_dir, s + 1, st if dist else (st, marg))
     return st
@@ -196,6 +212,13 @@ def main():
                     help="sweep calls per supervised outer step (health "
                          "check + checkpoint cadence)")
     ap.add_argument("--max-restarts", type=int, default=5)
+    ap.add_argument("--metrics-dir", default="",
+                    help="write metrics.jsonl / metrics.prom / "
+                         "events.jsonl here")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto trace-event JSON here")
+    ap.add_argument("--profile", default="",
+                    help="capture a jax.profiler trace into this dir")
     args = ap.parse_args()
     # reject impossible combinations with a usage message, not a traceback
     supported = engine_lib.backends(args.engine)
@@ -209,18 +232,25 @@ def main():
                  f"engines, not {args.engine!r}")
     if args.fault_plan and not args.supervise:
         ap.error("--fault-plan requires --supervise")
-    if args.supervise:
-        run_supervised(args.config, args.engine, args.steps, args.chains,
-                       ckpt_dir=args.ckpt_dir, mp_shards=args.mp_shards,
-                       sweep=args.sweep, backend=args.backend,
-                       adaptive=args.adaptive, fault_plan=args.fault_plan,
-                       chunk=args.supervise_chunk,
-                       max_restarts=args.max_restarts)
-        return
-    run(args.config, args.engine, args.steps, args.chains,
-        ckpt_dir=args.ckpt_dir, mp_shards=args.mp_shards, sweep=args.sweep,
-        backend=args.backend, adaptive=args.adaptive,
-        telemetry=args.telemetry)
+    rec = obs.configure(metrics_dir=args.metrics_dir or None,
+                        trace_path=args.trace or None,
+                        profile_dir=args.profile or None,
+                        process_name="repro.gibbs")
+    with rec.profile():
+        if args.supervise:
+            run_supervised(args.config, args.engine, args.steps,
+                           args.chains, ckpt_dir=args.ckpt_dir,
+                           mp_shards=args.mp_shards, sweep=args.sweep,
+                           backend=args.backend, adaptive=args.adaptive,
+                           fault_plan=args.fault_plan,
+                           chunk=args.supervise_chunk,
+                           max_restarts=args.max_restarts)
+        else:
+            run(args.config, args.engine, args.steps, args.chains,
+                ckpt_dir=args.ckpt_dir, mp_shards=args.mp_shards,
+                sweep=args.sweep, backend=args.backend,
+                adaptive=args.adaptive, telemetry=args.telemetry)
+    rec.close()
 
 
 if __name__ == "__main__":

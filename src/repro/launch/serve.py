@@ -26,6 +26,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from .. import obs
 from ..core import engine as engine_lib
 from ..diagnostics.freshness import FreshnessPolicy
 from ..serving import ChainPool, Query
@@ -64,8 +65,8 @@ def serve_batch(workload: str, queries: List[Query], *,
                 max_extra_sweeps: Optional[int] = None,
                 policy: Optional[FreshnessPolicy] = None, seed: int = 0,
                 supervise: bool = False, ckpt_dir: str = "",
-                outer_steps: int = 32, pool: Optional[ChainPool] = None
-                ) -> dict:
+                outer_steps: int = 32, pool: Optional[ChainPool] = None,
+                fault_plan=None) -> dict:
     """Register ``workload``, warm the pool, answer ``queries``; returns a
     JSON-safe dict (per-answer records + batch summary).
 
@@ -84,11 +85,13 @@ def serve_batch(workload: str, queries: List[Query], *,
     t0 = time.time()
     if supervise:
         _drive_supervised(pool, workload, engine, backend, chains,
-                          sweep or g.n, chunk, outer_steps, seed, ckpt_dir)
+                          sweep or g.n, chunk, outer_steps, seed, ckpt_dir,
+                          fault_plan)
     elif warmup_chunks:
         pool.advance(workload, chunks=warmup_chunks)
     answers = pool.submit(queries, max_extra_sweeps=max_extra_sweeps)
     dt = time.time() - t0
+    obs.get_recorder().snapshot()     # batch end: an existing sync point
     records = [a.to_dict() for a in answers]
     n_fresh = sum(r["fresh"] for r in records)
     return {
@@ -105,7 +108,8 @@ def serve_batch(workload: str, queries: List[Query], *,
 
 def _drive_supervised(pool: ChainPool, workload: str, engine: str,
                       backend: str, chains: int, sweep: int, chunk: int,
-                      outer_steps: int, seed: int, ckpt_dir: str):
+                      outer_steps: int, seed: int, ckpt_dir: str,
+                      fault_plan=None):
     """Run the resident chains under the supervised runtime, publishing a
     pool snapshot after every committed outer step."""
     from ..runtime import supervisor as sup
@@ -118,13 +122,15 @@ def _drive_supervised(pool: ChainPool, workload: str, engine: str,
 
     cfg = sup.SupervisorConfig(outer_steps=outer_steps,
                                sweeps_per_outer=chunk, chains=chains,
-                               seed=seed, ckpt_dir=ckpt_dir)
+                               seed=seed, ckpt_dir=ckpt_dir,
+                               workload=workload)
 
     def on_step(step, bundle, tel, eng):
         pool.publish(workload, bundle.st, tel, bundle.marg, bundle.count,
                      step * chunk)
 
-    sup.SupervisedRun(engine, make_engine, cfg, on_step=on_step).run()
+    sup.SupervisedRun(engine, make_engine, cfg, on_step=on_step,
+                      fault_plan=fault_plan).run()
 
 
 def main():
@@ -164,7 +170,17 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--outer-steps", type=int, default=32,
                     help="supervised outer steps before answering")
+    ap.add_argument("--fault-plan", default="",
+                    help="inline JSON or path: deterministic fault "
+                         "injection into the supervised driver")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-dir", default="",
+                    help="write metrics.jsonl / metrics.prom / "
+                         "events.jsonl here")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto trace-event JSON here")
+    ap.add_argument("--profile", default="",
+                    help="capture a jax.profiler trace into this dir")
     args = ap.parse_args()
     if args.queries and args.demo:
         ap.error("pass --queries or --demo, not both")
@@ -172,21 +188,34 @@ def main():
         ap.error("no queries: pass --queries FILE or --demo N")
     if args.ckpt_dir and not args.supervise:
         ap.error("--ckpt-dir requires --supervise")
+    if args.fault_plan and not args.supervise:
+        ap.error("--fault-plan requires --supervise")
 
+    rec = obs.configure(metrics_dir=args.metrics_dir or None,
+                        trace_path=args.trace or None,
+                        profile_dir=args.profile or None,
+                        process_name="repro.serve")
+    fault_plan = None
+    if args.fault_plan:
+        from ..runtime.faultinject import FaultPlan
+        fault_plan = FaultPlan.from_json(args.fault_plan)
     g = engine_lib.make_workload(args.workload).graph
     queries = (_load_queries(args.workload, args.queries) if args.queries
                else _demo_queries(args.workload, g, args.demo, args.seed))
     policy = FreshnessPolicy(max_rhat=args.rhat,
                              min_ess_per_site=args.min_ess,
                              min_samples=args.min_samples)
-    res = serve_batch(args.workload, queries, engine=args.engine,
-                      backend=args.backend, chains=args.chains,
-                      sweep=args.sweep, chunk=args.chunk,
-                      warmup_chunks=args.warmup_chunks,
-                      max_extra_sweeps=args.max_extra_sweeps,
-                      policy=policy, seed=args.seed,
-                      supervise=args.supervise, ckpt_dir=args.ckpt_dir,
-                      outer_steps=args.outer_steps)
+    with rec.profile():
+        res = serve_batch(args.workload, queries, engine=args.engine,
+                          backend=args.backend, chains=args.chains,
+                          sweep=args.sweep, chunk=args.chunk,
+                          warmup_chunks=args.warmup_chunks,
+                          max_extra_sweeps=args.max_extra_sweeps,
+                          policy=policy, seed=args.seed,
+                          supervise=args.supervise, ckpt_dir=args.ckpt_dir,
+                          outer_steps=args.outer_steps,
+                          fault_plan=fault_plan)
+    rec.close()
     print(f"[serve] {res['n_queries']} queries on {args.workload} "
           f"({args.engine}/{args.backend}): "
           f"fresh={res['fresh_fraction']:.2f} "

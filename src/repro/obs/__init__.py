@@ -1,0 +1,28 @@
+"""Unified observability: metrics export, trace spans, profiler hooks.
+
+One recorder object (:class:`Recorder`, default :class:`NullRecorder`)
+is the emit point for every layer — engine sweeps, the supervised
+runtime, the serving pool, benchmarks.  Design invariant: nothing in
+this package adds a host sync to the sweep path; metrics snapshots and
+span closes happen only at host-sync boundaries the caller already has
+(DESIGN.md §observability).
+
+Typical wiring::
+
+    from repro import obs
+    rec = obs.configure(metrics_dir="m", trace_path="m/trace.json")
+    labels = rec.register_engine(eng, workload="hetero-pairs-24", chains=16)
+    with rec.span("sweep_chunk", **labels):
+        state, tel = chunk(state, tel)
+        ok = bool(tel_ready(tel))          # the existing host read
+    rec.snapshot()                         # piggybacks that read
+    rec.close()
+"""
+from .metrics import MetricsRegistry, prometheus_escape
+from .trace import TraceBuffer
+from .recorder import (Recorder, NullRecorder, annotate, configure,
+                       get_recorder, set_recorder, using)
+
+__all__ = ["MetricsRegistry", "prometheus_escape", "TraceBuffer",
+           "Recorder", "NullRecorder", "annotate", "configure",
+           "get_recorder", "set_recorder", "using"]

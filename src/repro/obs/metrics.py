@@ -1,0 +1,109 @@
+"""Labeled counters/gauges with JSONL and Prometheus text exposition.
+
+The registry is deliberately dumb: a dict of ``(name, labels) -> float``
+updated under one lock, snapshotted on an explicit cadence by the
+:class:`~repro.obs.recorder.Recorder`.  Nothing here ever touches a jax
+array — callers read device values at a host-sync boundary that already
+exists (the supervisor's one health read per outer step, the serving
+layer's freshness read, a benchmark's ``block_until_ready``) and hand
+plain floats in.  That is the whole design: metrics piggyback existing
+host syncs and never add one (DESIGN.md §observability).
+
+Export formats:
+  * ``snapshot()``  — a JSON-safe list of series, one dict per labeled
+    series; the Recorder appends one ``{"ts": ..., "series": [...]}`` line
+    per snapshot to ``metrics.jsonl``;
+  * ``to_prometheus()`` — the text exposition format (one ``# HELP`` /
+    ``# TYPE`` header per metric, label-escaped sample lines), rewritten
+    atomically to ``metrics.prom`` each snapshot so a node exporter /
+    file-sd scraper always sees a complete file.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["MetricsRegistry", "prometheus_escape"]
+
+LabelSet = Tuple[Tuple[str, str], ...]
+
+
+def prometheus_escape(v: str) -> str:
+    """Escape a label value for the text exposition format."""
+    return v.replace("\\", r"\\").replace("\n", r"\n").replace('"', r'\"')
+
+
+def _labelset(labels: Dict[str, object]) -> LabelSet:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+class MetricsRegistry:
+    """Thread-safe labeled counter/gauge store.
+
+    ``count`` accumulates (monotone, Prometheus ``counter``); ``gauge``
+    overwrites (``gauge``).  A metric name keeps one kind for its lifetime
+    — mixing kinds under one name raises, so the exposition stays honest.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._kinds: Dict[str, str] = {}
+        self._help: Dict[str, str] = {}
+        self._vals: Dict[Tuple[str, LabelSet], float] = {}
+
+    def _touch(self, name: str, kind: str, help_: Optional[str]):
+        have = self._kinds.get(name)
+        if have is None:
+            self._kinds[name] = kind
+        elif have != kind:
+            raise ValueError(f"metric {name!r} is a {have}, not a {kind}")
+        if help_:
+            self._help.setdefault(name, help_)
+
+    def count(self, name: str, value: float = 1.0, *,
+              help: Optional[str] = None, **labels):
+        """Add ``value`` to counter ``name`` for this label set."""
+        with self._lock:
+            self._touch(name, "counter", help)
+            key = (name, _labelset(labels))
+            self._vals[key] = self._vals.get(key, 0.0) + float(value)
+
+    def gauge(self, name: str, value: float, *,
+              help: Optional[str] = None, **labels):
+        """Set gauge ``name`` to ``value`` for this label set."""
+        with self._lock:
+            self._touch(name, "gauge", help)
+            self._vals[(name, _labelset(labels))] = float(value)
+
+    def value(self, name: str, **labels) -> Optional[float]:
+        """Current value of one labeled series (None if never written)."""
+        with self._lock:
+            return self._vals.get((name, _labelset(labels)))
+
+    def snapshot(self) -> List[dict]:
+        """JSON-safe view: one dict per labeled series."""
+        with self._lock:
+            return [{"name": name, "kind": self._kinds[name],
+                     "labels": dict(ls), "value": val}
+                    for (name, ls), val in sorted(self._vals.items())]
+
+    def to_prometheus(self, prefix: str = "repro_") -> str:
+        """Text exposition; every metric name gets ``prefix`` prepended."""
+        with self._lock:
+            by_name: Dict[str, List[Tuple[LabelSet, float]]] = {}
+            for (name, ls), val in sorted(self._vals.items()):
+                by_name.setdefault(name, []).append((ls, val))
+            lines: List[str] = []
+            for name, series in by_name.items():
+                full = prefix + name
+                help_ = self._help.get(name, name.replace("_", " "))
+                lines.append(f"# HELP {full} {help_}")
+                lines.append(f"# TYPE {full} {self._kinds[name]}")
+                for ls, val in series:
+                    if ls:
+                        lbl = ",".join(
+                            f'{k}="{prometheus_escape(v)}"' for k, v in ls)
+                        lines.append(f"{full}{{{lbl}}} {val:g}")
+                    else:
+                        lines.append(f"{full} {val:g}")
+            return "\n".join(lines) + "\n"

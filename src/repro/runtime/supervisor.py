@@ -52,6 +52,7 @@ import numpy as np
 
 from ..checkpoint import checkpoint as ckpt
 from ..diagnostics.telemetry import health_report, state_health
+from ..obs import get_recorder
 from .fault import RestartBudget, Backoff, StepWatchdog, Heartbeat
 from .faultinject import (FaultPlan, SimulatedPreemption, SimulatedDeviceLoss,
                           corrupt_checkpoint, inject_state_fault)
@@ -90,6 +91,7 @@ class SupervisorConfig:
     retune_target: tuple = (0.5, 0.9)
     heartbeat: str = ""               # liveness file path (optional)
     incident_log: str = ""            # default: <ckpt_dir>/incidents.jsonl
+    workload: str = ""                # metric/trace label only
 
 
 @dataclasses.dataclass
@@ -149,6 +151,8 @@ class SupervisedRun:
         self._incident_path = config.incident_log or (
             os.path.join(config.ckpt_dir, "incidents.jsonl")
             if config.ckpt_dir else "")
+        self._labels = get_recorder().register_engine(
+            self.engine, workload=config.workload, chains=config.chains)
 
     # -- incident log -------------------------------------------------------
 
@@ -157,6 +161,11 @@ class SupervisedRun:
         self.incidents.append(rec)
         print(f"[supervisor] {kind}: "
               f"{json.dumps({k: v for k, v in info.items()})}", flush=True)
+        # unified event stream: trace instant + events_total counter +
+        # events.jsonl line through the active recorder ...
+        get_recorder().event(kind, **info)
+        # ... plus a one-release shim keeping the old incidents.jsonl path
+        # (the CI chaos smoke and external post-mortem scripts parse it)
         if self._incident_path:
             parent = os.path.dirname(self._incident_path)
             if parent:
@@ -227,6 +236,8 @@ class SupervisedRun:
         self.engine_name = name
         self.engine = self.make_engine(name, self.devices, **params)
         self._chunk = None
+        self._labels = get_recorder().register_engine(
+            self.engine, workload=self.cfg.workload, chains=self.cfg.chains)
         if note != "resume":
             self._incident(note, engine=name,
                            devices=len(self.devices), **params)
@@ -287,8 +298,10 @@ class SupervisedRun:
                                            bundle.count)
         return Bundle(st=st, marg=marg, count=count), tel
 
-    def _healthy(self, bundle: Bundle, tel, step: int) -> bool:
-        """ONE host read per outer step of the device-resident guards."""
+    def _healthy(self, bundle: Bundle, tel, step: int):
+        """ONE host read per outer step of the device-resident guards.
+        Returns ``(ok, report)`` — the report is the same host read, so
+        metric gauges piggyback it for free."""
         eng = self.engine
         boundary = state_health(bundle.st.x,
                                 getattr(bundle.st, "cache", None),
@@ -298,14 +311,14 @@ class SupervisedRun:
             eng.exact_accept)
         if rep["bad_state"]:
             self._incident("health", guard="bad_state", outer_step=step)
-            return False
+            return False, rep
         if (not eng.exact_accept and step >= self.cfg.floor_after
                 and rep["win_acceptance"] < self.cfg.acceptance_floor):
             self._incident("health", guard="acceptance_floor",
                            outer_step=step,
                            win_acceptance=rep["win_acceptance"])
-            return False
-        return True
+            return False, rep
+        return True, rep
 
     def _apply_faults(self, bundle: Bundle, step: int) -> Bundle:
         if self.plan is None:
@@ -331,18 +344,27 @@ class SupervisedRun:
 
     def run(self) -> RunResult:
         cfg = self.cfg
+        rec = get_recorder()
         bundle, tel, step = self._recover("start")
         while step < cfg.outer_steps:
             try:
                 bundle = self._apply_faults(bundle, step)
-                with self._watchdog:
-                    new_bundle, new_tel = self._outer_step(bundle, tel)
-                if not self._healthy(new_bundle, new_tel, step):
+                # one span per outer step: the chunk dispatch plus the
+                # health read that retires it (the loop's ONE host sync,
+                # which metric gauges below piggyback)
+                with rec.span("sweep_chunk", step=step, **self._labels):
+                    with self._watchdog:
+                        new_bundle, new_tel = self._outer_step(bundle, tel)
+                    ok, rep = self._healthy(new_bundle, new_tel, step)
+                if not ok:
                     self._strikes += 1
                     self.rollbacks += 1
+                    rec.count("rollbacks_total", 1, **self._labels)
                     if self._strikes > cfg.max_strikes:
                         self._escalate()
-                    bundle, tel, step = self._recover("rollback")
+                    with rec.span("rollback_recover", **self._labels):
+                        bundle, tel, step = self._recover("rollback")
+                    rec.snapshot()
                     continue
                 bundle, tel = new_bundle, new_tel
                 step += 1
@@ -351,9 +373,20 @@ class SupervisedRun:
                 self._backoff.reset()
                 if self._heartbeat is not None:
                     self._heartbeat.beat(step)
+                eng = self.engine
+                rec.count("sweeps_total", cfg.sweeps_per_outer,
+                          **self._labels)
+                rec.count("updates_total",
+                          cfg.sweeps_per_outer * eng.updates_per_call,
+                          **self._labels)
+                rec.gauge("acceptance",
+                          1.0 if eng.exact_accept
+                          else float(rep["win_acceptance"]), **self._labels)
+                rec.gauge("heartbeat_step", step, **self._labels)
                 if cfg.ckpt_dir and (step % cfg.ckpt_every == 0
                                      or step == cfg.outer_steps):
                     self._save(step, bundle)
+                rec.snapshot()
                 if (self._on_step is not None
                         and self._on_step(step, bundle, tel,
                                           self.engine) is False):
@@ -366,12 +399,15 @@ class SupervisedRun:
                 self._incident("restart", outer_step=step, error=repr(e),
                                restart=self._budget.used,
                                backoff_s=self._backoff.next_delay())
+                rec.count("restarts_total", 1, **self._labels)
                 self._backoff.wait()
                 if isinstance(e, SimulatedDeviceLoss):
                     self.devices = self.devices[:e.keep]
                     self._swap_engine(self.engine_name, note="elastic",
                                       **self.engine.params)
-                bundle, tel, step = self._recover("restart")
+                with rec.span("restart_recover", **self._labels):
+                    bundle, tel, step = self._recover("restart")
+                rec.snapshot()
         ckpt.wait_pending()
         return RunResult(
             state=bundle.st, marginals=self._marginals(bundle),

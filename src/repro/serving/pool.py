@@ -51,6 +51,7 @@ import numpy as np
 
 from ..core import engine as engine_lib
 from ..diagnostics.freshness import FreshnessPolicy, freshness_report
+from ..obs import get_recorder
 from .query import Query, Answer
 
 __all__ = ["ChainPool", "PoolWorkload"]
@@ -107,6 +108,9 @@ class PoolWorkload:
         self.seed = seed
         self.lanes: "collections.OrderedDict[Signature, _Lane]" = \
             collections.OrderedDict()
+        # standard metric/trace label set for this workload's series
+        self.labels = get_recorder().register_engine(
+            eng, workload=name, chains=int(resident.snap.marg.shape[0]))
 
 
 def _zero_evidence(n: int):
@@ -218,11 +222,15 @@ class ChainPool:
             ev = (jnp.asarray(mask), jnp.asarray(ev_vals))
             # fork warm from the resident snapshot: clamp + cache refresh
             # + signature-tagged independent key streams
-            tag = zlib.crc32(repr(signature).encode())
-            fork_key = jax.random.fold_in(jax.random.PRNGKey(w.seed), tag)
-            st = w.engine.clamp(fork_key, w.resident.snap.st, ev)
-            st = _fold_keys(st, tag & 0x7FFFFFFF)
-            tel = w.engine.init_telemetry(st)
+            rec = get_recorder()
+            with rec.span("lane_fork", n_evidence=len(signature),
+                          **w.labels):
+                tag = zlib.crc32(repr(signature).encode())
+                fork_key = jax.random.fold_in(
+                    jax.random.PRNGKey(w.seed), tag)
+                st = w.engine.clamp(fork_key, w.resident.snap.st, ev)
+                st = _fold_keys(st, tag & 0x7FFFFFFF)
+                tel = w.engine.init_telemetry(st)
             snap = _Snapshot(
                 st=st, tel=tel, marg=jnp.zeros_like(w.resident.snap.marg),
                 count=jnp.float32(0.0), sweeps=0)
@@ -230,17 +238,27 @@ class ChainPool:
             w.lanes[signature] = lane
             while len(w.lanes) > w.max_conditioned:   # LRU eviction
                 w.lanes.popitem(last=False)
+                rec.count("lane_evictions_total", 1, **w.labels)
+            rec.gauge("pool_lanes", 1 + len(w.lanes), **w.labels)
             return lane
 
     def _advance_lane(self, w: PoolWorkload, lane: _Lane, chunks: int = 1):
+        rec = get_recorder()
         with lane.lock:
-            for _ in range(chunks):
-                snap = lane.snap
-                lane.sweeps += w.sweeps_per_chunk
-                st, tel, marg, count = w.chunk(snap.st, snap.tel, snap.marg,
-                                               snap.count, *lane.evidence)
-                lane.snap = _Snapshot(st=st, tel=tel, marg=marg,
-                                      count=count, sweeps=lane.sweeps)
+            # the span brackets chunk *dispatch* (jnp/pallas sweeps are
+            # async): no host sync is added to the sweep path
+            with rec.span("sweep_chunk", chunks=chunks,
+                          conditioned=bool(lane.signature), **w.labels):
+                for _ in range(chunks):
+                    snap = lane.snap
+                    lane.sweeps += w.sweeps_per_chunk
+                    st, tel, marg, count = w.chunk(
+                        snap.st, snap.tel, snap.marg, snap.count,
+                        *lane.evidence)
+                    lane.snap = _Snapshot(st=st, tel=tel, marg=marg,
+                                          count=count, sweeps=lane.sweeps)
+            rec.count("sweeps_total", chunks * w.sweeps_per_chunk,
+                      **w.labels)
 
     def advance(self, name: Optional[str] = None, chunks: int = 1):
         """Synchronously advance every lane of ``name`` (or of every
@@ -307,34 +325,49 @@ class ChainPool:
         is advanced — at most ``max_extra_sweeps`` extra sweeps (default:
         64 chunks' worth) — and refused if still stale, unless
         ``serve_stale=True`` (estimate returned, ``fresh=False`` kept)."""
+        rec = get_recorder()
+        t_submit = rec.now_us()
         answers: List[Optional[Answer]] = [None] * len(queries)
         groups: Dict[Tuple[str, Signature], List[int]] = {}
         for idx, q in enumerate(queries):
             groups.setdefault((q.workload, q.signature), []).append(idx)
         for (wname, sig), idxs in groups.items():
             w = self.workload(wname)
-            lane = self._lane_for(w, sig)
-            budget = (64 * w.sweeps_per_chunk if max_extra_sweeps is None
-                      else max_extra_sweeps)
-            spent = 0
-            while True:
-                snap = lane.snap
-                rep = freshness_report(snap.tel, w.policy,
-                                       site_mask=lane.site_mask)
-                if rep["fresh"] or spent + w.sweeps_per_chunk > budget:
-                    break
-                self._advance_lane(w, lane, 1)
-                spent += w.sweeps_per_chunk
-            staleness = lane.sweeps - snap.sweeps
-            marg = None
-            if rep["fresh"] or serve_stale:
-                cnt = max(float(np.asarray(snap.count)), 1.0)
-                C = snap.marg.shape[0]
-                marg = (np.asarray(snap.marg, np.float64).sum(0)
-                        / (cnt * C))
-            for idx in idxs:
-                answers[idx] = _answer(queries[idx], rep, staleness,
-                                       snap.sweeps, marg)
+            # groups run sequentially: time since submit is this group's
+            # queue wait (an explicit-timestamp span, no extra sync)
+            rec.complete("queue_wait", t_submit,
+                         rec.now_us() - t_submit, n_queries=len(idxs),
+                         **w.labels)
+            with rec.span("query", n_queries=len(idxs),
+                          conditioned=bool(sig), **w.labels):
+                lane = self._lane_for(w, sig)
+                budget = (64 * w.sweeps_per_chunk
+                          if max_extra_sweeps is None else max_extra_sweeps)
+                spent = 0
+                with rec.span("freshness_sweeps", **w.labels):
+                    while True:
+                        snap = lane.snap
+                        rep = freshness_report(snap.tel, w.policy,
+                                               site_mask=lane.site_mask)
+                        if (rep["fresh"]
+                                or spent + w.sweeps_per_chunk > budget):
+                            break
+                        self._advance_lane(w, lane, 1)
+                        spent += w.sweeps_per_chunk
+                staleness = lane.sweeps - snap.sweeps
+                marg = None
+                if rep["fresh"] or serve_stale:
+                    cnt = max(float(np.asarray(snap.count)), 1.0)
+                    C = snap.marg.shape[0]
+                    marg = (np.asarray(snap.marg, np.float64).sum(0)
+                            / (cnt * C))
+                for idx in idxs:
+                    answers[idx] = _answer(queries[idx], rep, staleness,
+                                           snap.sweeps, marg)
+            rec.count("queries_total", len(idxs),
+                      fresh=bool(rep["fresh"]), **w.labels)
+            rec.count("sweeps_to_fresh_total", spent, **w.labels)
+            rec.count("sweeps_to_fresh_count", 1, **w.labels)
         return answers    # type: ignore[return-value]
 
 
