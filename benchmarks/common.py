@@ -66,7 +66,12 @@ def timed_steps(eng, state, n_iters: int, n_chains: int,
 #       achieved_gflops / achieved_gbs / arithmetic_intensity, and the
 #       dist collective payload fields (psum_payload_bytes,
 #       collectives_per_sweep) on every roofline record
-SCHEMA_VERSION = 5
+#   6 — serve rows add per-query latency percentiles
+#       (latency_p50_us/latency_p99_us, read from the obs
+#       serving-latency histogram) and the ``serve_resilience`` row:
+#       the armed answer path (admission + breakers) under a lane fault
+#       — degraded/shed counts, breaker_opens, recovered_fresh
+SCHEMA_VERSION = 6
 RECORDS: list = []
 
 

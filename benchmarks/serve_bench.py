@@ -1,4 +1,4 @@
-"""Serving-layer benchmark: queries/sec and staleness percentiles.
+"""Serving-layer benchmark: queries/sec, latency, staleness percentiles.
 
 Measures the ChainPool request path on the registered ``hetero-pairs-24``
 workload: lanes warmed past the freshness gate, the background driver
@@ -6,12 +6,22 @@ advancing every lane, then a timed batch of mixed unclamped +
 evidence-clamped marginal queries.  Reported per engine:
 
   * ``queries_per_sec`` — answered queries over wall time (the whole
-    batch path: routing, lane reads, freshness checks, host-side marginal
-    reduction);
+    batch path: admission, routing, lane reads, freshness checks,
+    host-side marginal reduction);
+  * ``latency_p50/p99_us`` — per-query serving latency, read back from
+    the obs layer's ``serving_latency_seconds`` histogram (the same
+    series Prometheus scrapes in production);
   * ``staleness_p50/p99_sweeps`` — per-answer sweeps the serving lane had
     started beyond the snapshot that answered (bounded by the chunk size:
     the snapshot cadence is the staleness knob);
   * ``fresh_fraction`` — answers that passed the telemetry gate.
+
+The ``serve_resilience`` row times the armed answer path under a lane
+fault: admission + per-lane breakers enabled, one lane's snapshot
+poisoned, a degraded pass (breaker opens, stale/exact answers) followed
+by a recovery pass (half-open probe re-closes).  Derived fields count
+degraded/shed answers and breaker opens — the cost and behavior of the
+degradation ladder in one record.
 
 ``BENCH_serve.json`` comes from ``--json BENCH_serve.json --only serve``.
 """
@@ -22,11 +32,15 @@ import time
 import numpy as np
 
 from repro.diagnostics import FreshnessPolicy
-from repro.serving import ChainPool, Query
+from repro.obs import Recorder, using
+from repro.serving import (AdmissionPolicy, BreakerPolicy, ChainPool,
+                           Query)
 
 from .common import row
 
 WL = "hetero-pairs-24"
+POLICY = FreshnessPolicy(max_rhat=1.2, min_ess_per_site=16.0,
+                         min_samples=8)
 
 
 def _traffic(n: int, n_sites: int, seed: int):
@@ -38,36 +52,111 @@ def _traffic(n: int, n_sites: int, seed: int):
             for i in range(n)]
 
 
+def _latency_us(rec: Recorder, q: float) -> float:
+    """Quantile of the pooled serving-latency histogram, aggregated
+    across lane series by summing bucket counts."""
+    agg_counts = None
+    agg_bounds = None
+    total = 0.0
+    for series in rec.metrics.snapshot():
+        if series.get("name") != "serving_latency_seconds":
+            continue
+        h = series
+        if agg_counts is None:
+            agg_counts = list(h["counts"])
+            agg_bounds = list(h["buckets"])
+        else:
+            agg_counts = [a + b for a, b in zip(agg_counts, h["counts"])]
+        total += h["count"]
+    if not agg_counts or total == 0:
+        return float("nan")
+    target = q * total
+    acc = 0.0
+    for i, c in enumerate(agg_counts):
+        if acc + c >= target and c > 0:
+            hi = (agg_bounds[i] if i < len(agg_bounds)
+                  else agg_bounds[-1])
+            lo = agg_bounds[i - 1] if i > 0 else 0.0
+            return (lo + (hi - lo) * max(target - acc, 0.0) / c) * 1e6
+        acc += c
+    return agg_bounds[-1] * 1e6
+
+
 def run(paper_scale: bool = False, smoke: bool = False) -> None:
     n_queries = 64 if smoke else 512
     chains = 16 if smoke else 32
     chunk = 8
-    policy = FreshnessPolicy(max_rhat=1.2, min_ess_per_site=16.0,
-                             min_samples=8)
     for name in (["gibbs"] if smoke else ["gibbs", "mgpmh"]):
-        pool = ChainPool(policy=policy, seed=0)
-        w = pool.register(WL, engine=name, backend="jnp", chains=chains,
-                          sweep=24, sweeps_per_chunk=chunk)
+        pool = ChainPool(policy=POLICY, seed=0)
+        w = pool.register(WL, engine=name, backend="jnp",
+                          chains=chains, sweep=24,
+                          sweeps_per_chunk=chunk)
         queries = _traffic(n_queries, w.engine.graph.n, seed=1)
         # warm: one pass brings every lane past the freshness gate and
-        # compiles the chunk, so the timed pass measures serving, not mixing
+        # compiles the chunk, so the timed pass measures serving, not
+        # mixing; the fresh recorder below sees only the timed pass's
+        # latency histogram
         pool.submit(queries, max_extra_sweeps=50_000)
+        rec = Recorder()
         pool.start()
         try:
-            t0 = time.perf_counter()
-            answers = pool.submit(queries, max_extra_sweeps=50_000)
-            dt = time.perf_counter() - t0
+            with using(rec):
+                t0 = time.perf_counter()
+                answers = pool.submit(queries, max_extra_sweeps=50_000)
+                dt = time.perf_counter() - t0
         finally:
             pool.stop()
         stale = np.asarray([a.staleness_sweeps for a in answers])
         fresh = float(np.mean([a.fresh for a in answers]))
         qps = n_queries / dt
         p50, p99 = np.percentile(stale, [50, 99])
+        lat50 = _latency_us(rec, 0.5)
+        lat99 = _latency_us(rec, 0.99)
         row(f"serve_{name}", dt * 1e6 / n_queries,
-            f"qps={qps:.1f} p99_staleness_sweeps={p99:.0f} "
-            f"fresh={fresh:.2f}",
+            f"qps={qps:.1f} lat_p99={lat99:.0f}us "
+            f"p99_staleness_sweeps={p99:.0f} fresh={fresh:.2f}",
             queries_per_sec=round(qps, 1),
+            latency_p50_us=round(lat50, 1), latency_p99_us=round(lat99, 1),
             staleness_p50_sweeps=float(p50),
             staleness_p99_sweeps=float(p99),
             fresh_fraction=fresh, n_queries=n_queries, chains=chains,
             sweeps_per_chunk=chunk, **w.engine.describe())
+    _resilience_row(n_queries=n_queries, chains=chains, chunk=chunk)
+
+
+def _resilience_row(*, n_queries: int, chains: int, chunk: int) -> None:
+    """The armed path under chaos: poisoned lane, breaker open + probe
+    recovery, admission shedding — timed end to end."""
+    rec = Recorder()
+    with using(rec):
+        pool = ChainPool(policy=POLICY, seed=0,
+                         admission=AdmissionPolicy(
+                             max_pending=max(n_queries // 2, 8)),
+                         breaker=BreakerPolicy(open_after=2,
+                                               cooldown_s=0.0))
+        w = pool.register(WL, engine="gibbs", backend="jnp",
+                          chains=chains, sweep=24, sweeps_per_chunk=chunk)
+        queries = _traffic(n_queries, w.engine.graph.n, seed=1)
+        pool.submit(queries, max_extra_sweeps=50_000)        # warm + fresh
+        pool.inject_lane_fault(WL, target="cache")
+        pool.advance(WL, chunks=1)                           # latch guard
+        t0 = time.perf_counter()
+        answers = []
+        for _ in range(3):   # strikes -> open -> probe recovery
+            answers += pool.submit(queries, max_extra_sweeps=0)
+        dt = time.perf_counter() - t0
+    n = len(answers)
+    degraded = sum(a.source in ("stale", "exact") for a in answers)
+    shed = sum(a.status == "shed" for a in answers)
+    refused = sum(a.status == "refused" for a in answers)
+    opens = w.resident.breaker.open_count
+    recovered = w.resident.breaker.state == "closed"
+    qps = n / dt
+    row("serve_resilience", dt * 1e6 / n,
+        f"qps={qps:.1f} degraded={degraded}/{n} shed={shed} "
+        f"breaker_opens={opens} recovered={recovered}",
+        queries_per_sec=round(qps, 1), n_queries=n,
+        degraded_answers=degraded, shed_answers=shed,
+        refused_answers=refused, breaker_opens=opens,
+        recovered_fresh=bool(recovered), chains=chains,
+        sweeps_per_chunk=chunk, **w.engine.describe())

@@ -21,7 +21,7 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
-from .telemetry import Telemetry, split_rhat, ess_per_site
+from .telemetry import Telemetry, split_rhat, ess_per_site, health_report
 
 __all__ = ["FreshnessPolicy", "freshness_report", "fresh"]
 
@@ -49,8 +49,9 @@ class FreshnessPolicy:
 
 
 def freshness_report(tel: Telemetry, policy: FreshnessPolicy, *,
-                     site_mask: Optional[np.ndarray] = None
-                     ) -> Dict[str, Any]:
+                     site_mask: Optional[np.ndarray] = None,
+                     include_health: bool = False,
+                     exact_accept: bool = False) -> Dict[str, Any]:
     """Evaluate ``policy`` against the telemetry; one host sync.
 
     ``site_mask``: optional (n,) boolean — True at sites the gate should
@@ -59,11 +60,23 @@ def freshness_report(tel: Telemetry, policy: FreshnessPolicy, *,
     ``reason`` (None when fresh, else which threshold failed), ``samples``,
     and the measured ``max_rhat`` / ``min_ess`` over the inspected sites
     (None before ``min_samples``, when they are not computed).
+
+    ``include_health=True`` additionally folds the in-graph health guards
+    into the same host read (``bad_state`` sticky flag, ``win_acceptance``
+    windowed acceptance — see :func:`~.telemetry.health_report`), the one
+    boundary where the serving layer's circuit breakers take their
+    committed-chunk verdicts; a latched ``bad_state`` also forces
+    ``fresh=False`` (a degenerate chain must never pass the gate).
     """
     samples = int(np.asarray(tel.samples))
     out: Dict[str, Any] = {"fresh": False, "reason": None,
                            "samples": samples, "max_rhat": None,
                            "min_ess": None}
+    if include_health:
+        out.update(health_report(tel, exact_accept=exact_accept))
+        if out["bad_state"]:
+            out["reason"] = "bad_state latched (degenerate chain state)"
+            return out
     if samples < policy.min_samples:
         out["reason"] = (f"samples {samples} < min_samples "
                          f"{policy.min_samples}")

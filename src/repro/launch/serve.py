@@ -6,7 +6,9 @@ The request front of ``repro.serving``: register a workload with a warm
 JSON.  With ``--supervise`` the resident chains are driven by
 :class:`~repro.runtime.supervisor.SupervisedRun` — verified checkpoints,
 health guards, crash-resume — publishing a pool snapshot after every
-committed outer step, so a restarted server resumes its chains bit-exactly.
+committed outer step (and fencing the pool's lanes on every rollback), so
+a restarted server resumes its chains bit-exactly and never serves a lane
+forked from a discarded chunk.
 
   PYTHONPATH=src python -m repro.launch.serve --workload hetero-pairs-24 \
       --engine gibbs --backend jnp --chains 32 --demo 8 --out answers.json
@@ -14,8 +16,15 @@ committed outer step, so a restarted server resumes its chains bit-exactly.
       --queries queries.json --supervise --ckpt-dir /tmp/serve-ckpt
 
 ``--queries`` takes a JSON list of ``{"sites": [...], "evidence":
-[[site, value], ...], "kind": "marginal"|"map"}`` objects; ``--demo N``
-generates N alternating unclamped / single-site-clamped queries instead.
+[[site, value], ...], "kind": "marginal"|"map", "deadline_ms": ...,
+"priority": ...}`` objects — validated against the workload's graph
+(site/value domains) with a clear error BEFORE any chain work starts;
+``--demo N`` generates N alternating unclamped / single-site-clamped
+queries instead.  ``--max-pending`` / ``--deadline-ms`` /
+``--breaker-open-after`` set the resilience policies;
+``--chaos-lane-fault`` runs the chaos drill: poison one lane's snapshot
+after the first batch, re-submit until the breaker opens (degraded
+answers), then once more to watch the half-open probe recover it.
 """
 from __future__ import annotations
 
@@ -29,7 +38,7 @@ import numpy as np
 from .. import obs
 from ..core import engine as engine_lib
 from ..diagnostics.freshness import FreshnessPolicy
-from ..serving import ChainPool, Query
+from ..serving import AdmissionPolicy, BreakerPolicy, ChainPool, Query
 
 
 def _demo_queries(workload: str, graph, n: int, seed: int) -> List[Query]:
@@ -47,15 +56,67 @@ def _demo_queries(workload: str, graph, n: int, seed: int) -> List[Query]:
     return out
 
 
-def _load_queries(workload: str, path: str) -> List[Query]:
-    with open(path) as f:
-        specs = json.load(f)
-    return [Query(workload,
-                  sites=None if q.get("sites") is None
-                  else tuple(q["sites"]),
-                  evidence=tuple((s, v) for s, v in q.get("evidence", [])),
-                  kind=q.get("kind", "marginal"))
-            for q in specs]
+def _load_queries(workload: str, path: str, graph) -> List[Query]:
+    """Parse + validate a ``--queries`` JSON file against the workload's
+    graph.  Every malformed entry dies here with a clear message naming
+    the file, the entry index, and the offending field — never a
+    traceback mid-batch after chains have already burned sweeps."""
+    def die(msg: str):
+        raise SystemExit(f"--queries {path}: {msg}")
+
+    try:
+        with open(path) as f:
+            specs = json.load(f)
+    except OSError as e:
+        die(f"cannot read file ({e})")
+    except json.JSONDecodeError as e:
+        die(f"malformed JSON ({e})")
+    if not isinstance(specs, list):
+        die(f"top level must be a JSON list of query objects, "
+            f"got {type(specs).__name__}")
+    out = []
+    for i, q in enumerate(specs):
+        where = f"queries[{i}]"
+        if not isinstance(q, dict):
+            die(f"{where}: must be an object, got {type(q).__name__}")
+        unknown = set(q) - {"sites", "evidence", "kind", "deadline_ms",
+                            "priority"}
+        if unknown:
+            die(f"{where}: unknown fields {sorted(unknown)}")
+        sites = q.get("sites")
+        if sites is not None:
+            if (not isinstance(sites, list)
+                    or not all(isinstance(s, int) for s in sites)):
+                die(f"{where}: 'sites' must be a list of ints")
+            bad = [s for s in sites if not 0 <= s < graph.n]
+            if bad:
+                die(f"{where}: sites {bad} out of range [0, {graph.n})")
+        ev = q.get("evidence", [])
+        if (not isinstance(ev, list)
+                or not all(isinstance(e, (list, tuple)) and len(e) == 2
+                           and all(isinstance(x, int) for x in e)
+                           for e in ev)):
+            die(f"{where}: 'evidence' must be a list of [site, value] "
+                f"int pairs")
+        bad = [s for s, _ in ev if not 0 <= s < graph.n]
+        if bad:
+            die(f"{where}: evidence sites {bad} out of range "
+                f"[0, {graph.n})")
+        bad = [v for _, v in ev if not 0 <= v < graph.D]
+        if bad:
+            die(f"{where}: evidence values {bad} out of range "
+                f"[0, {graph.D})")
+        try:
+            out.append(Query(
+                workload,
+                sites=None if sites is None else tuple(sites),
+                evidence=tuple((s, v) for s, v in ev),
+                kind=q.get("kind", "marginal"),
+                deadline_ms=q.get("deadline_ms"),
+                priority=q.get("priority", 0)))
+        except (ValueError, TypeError) as e:
+            die(f"{where}: {e}")
+    return out
 
 
 def serve_batch(workload: str, queries: List[Query], *,
@@ -66,18 +127,29 @@ def serve_batch(workload: str, queries: List[Query], *,
                 policy: Optional[FreshnessPolicy] = None, seed: int = 0,
                 supervise: bool = False, ckpt_dir: str = "",
                 outer_steps: int = 32, pool: Optional[ChainPool] = None,
-                fault_plan=None) -> dict:
+                fault_plan=None, max_pending: int = 0,
+                deadline_ms: Optional[float] = None,
+                breaker_open_after: int = 0,
+                chaos_lane_fault: bool = False) -> dict:
     """Register ``workload``, warm the pool, answer ``queries``; returns a
     JSON-safe dict (per-answer records + batch summary).
 
     Plain path: the pool advances its own lanes synchronously (each stale
-    lane sweeps until fresh, bounded by ``max_extra_sweeps``).  Supervised
-    path: ``SupervisedRun`` drives the resident chains for ``outer_steps``
-    committed steps — checkpointing to ``ckpt_dir`` and publishing a pool
-    snapshot after each — then the batch is answered; conditioned lanes
-    still fork from the latest published resident snapshot.
-    """
-    pool = pool or ChainPool(policy=policy or FreshnessPolicy(), seed=seed)
+    lane sweeps until fresh, bounded by ``max_extra_sweeps`` and the
+    queries' deadlines).  Supervised path: ``SupervisedRun`` drives the
+    resident chains for ``outer_steps`` committed steps — checkpointing
+    to ``ckpt_dir``, publishing a pool snapshot after each, fencing the
+    pool's lane epochs on every rollback — then the batch is answered.
+    ``chaos_lane_fault`` runs the chaos drill after the first batch (see
+    module docstring); its summary lands under ``"chaos"``."""
+    if pool is None:
+        admission = AdmissionPolicy(
+            max_pending=max_pending or 1024,
+            default_deadline_ms=deadline_ms)
+        breaker = (BreakerPolicy(open_after=breaker_open_after)
+                   if breaker_open_after else BreakerPolicy())
+        pool = ChainPool(policy=policy or FreshnessPolicy(), seed=seed,
+                         admission=admission, breaker=breaker)
     w = pool.register(workload, engine=engine, backend=backend,
                       chains=chains, sweep=sweep or None,
                       sweeps_per_chunk=chunk, seed=seed)
@@ -90,19 +162,66 @@ def serve_batch(workload: str, queries: List[Query], *,
     elif warmup_chunks:
         pool.advance(workload, chunks=warmup_chunks)
     answers = pool.submit(queries, max_extra_sweeps=max_extra_sweeps)
+    chaos = None
+    if chaos_lane_fault:
+        chaos = _chaos_drill(pool, w, workload, queries)
     dt = time.time() - t0
     obs.get_recorder().snapshot()     # batch end: an existing sync point
     records = [a.to_dict() for a in answers]
     n_fresh = sum(r["fresh"] for r in records)
-    return {
+    status_counts: dict = {}
+    source_counts: dict = {}
+    for r in records:
+        status_counts[r["status"]] = status_counts.get(r["status"], 0) + 1
+        if r["source"]:
+            source_counts[r["source"]] = \
+                source_counts.get(r["source"], 0) + 1
+    out = {
         "workload": workload, "engine": w.engine.describe(),
         "chains": chains, "sweeps_per_chunk": chunk,
         "n_queries": len(records), "fresh_fraction":
         n_fresh / max(len(records), 1),
+        "status_counts": status_counts, "source_counts": source_counts,
         "elapsed_s": dt, "queries_per_sec": len(records) / max(dt, 1e-9),
         "compiled_traces": pool.compiled_cache_size(workload),
         "resident_sweeps": w.resident.sweeps,
         "answers": records,
+    }
+    if chaos is not None:
+        out["chaos"] = chaos
+    return out
+
+
+def _chaos_drill(pool: ChainPool, w, workload: str,
+                 queries: List[Query]) -> dict:
+    """Poison one lane's snapshot, re-submit until the breaker opens
+    (every answer must stay structured and degraded, never an exception),
+    then submit once more so the half-open probe recovers the lane."""
+    target_sig = next(iter(w.lanes), ())
+    lane = w.resident if target_sig == () else w.lanes[target_sig]
+    pool.inject_lane_fault(workload, target_sig, target="cache")
+    pool.advance(workload, chunks=1)          # latch the in-graph guard
+    degraded_statuses: List[str] = []
+    degraded_sources: List[str] = []
+    opens = 0
+    for _ in range(max(pool.breaker_policy.open_after, 1) + 1):
+        batch = pool.submit(queries, max_extra_sweeps=0)
+        degraded_statuses += [a.status for a in batch]
+        degraded_sources += [a.source for a in batch
+                             if a.query.signature == target_sig]
+        opens = lane.breaker.open_count
+        if opens:
+            break
+    recovered = pool.submit(queries)          # half-open probe path
+    return {
+        "target_lane": ("resident" if target_sig == ()
+                        else [list(e) for e in target_sig]),
+        "breaker_opens": opens,
+        "breaker_state_after": lane.breaker.state,
+        "degraded_statuses": degraded_statuses,
+        "degraded_sources": degraded_sources,
+        "recovered_sources": [a.source for a in recovered],
+        "recovered_statuses": [a.status for a in recovered],
     }
 
 
@@ -111,7 +230,8 @@ def _drive_supervised(pool: ChainPool, workload: str, engine: str,
                       outer_steps: int, seed: int, ckpt_dir: str,
                       fault_plan=None):
     """Run the resident chains under the supervised runtime, publishing a
-    pool snapshot after every committed outer step."""
+    pool snapshot after every committed outer step and fencing the pool's
+    lane epochs on every rollback/restart recovery."""
     from ..runtime import supervisor as sup
 
     g = pool.engine(workload).graph
@@ -129,7 +249,16 @@ def _drive_supervised(pool: ChainPool, workload: str, engine: str,
         pool.publish(workload, bundle.st, tel, bundle.marg, bundle.count,
                      step * chunk)
 
+    def on_rollback(step, bundle, tel, eng):
+        # the published lineage rewound: fence lanes forked from the
+        # discarded chunks, then re-publish the restored snapshot (which
+        # closes the fence with a second epoch bump)
+        pool.invalidate(workload)
+        pool.publish(workload, bundle.st, tel, bundle.marg, bundle.count,
+                     step * chunk)
+
     sup.SupervisedRun(engine, make_engine, cfg, on_step=on_step,
+                      on_rollback=on_rollback,
                       fault_plan=fault_plan).run()
 
 
@@ -151,13 +280,27 @@ def main():
                          "answering (stale lanes also self-advance)")
     ap.add_argument("--max-extra-sweeps", type=int, default=None,
                     help="per-lane sweep budget to reach freshness before "
-                         "a query is refused")
+                         "the answer degrades")
     ap.add_argument("--rhat", type=float, default=1.1,
                     help="freshness gate: max split-R-hat")
     ap.add_argument("--min-ess", type=float, default=64.0,
                     help="freshness gate: min per-site ESS")
     ap.add_argument("--min-samples", type=int, default=16,
                     help="freshness gate: min telemetry snapshots")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="admission control: in-flight query budget "
+                         "(overflow is shed lowest-priority first; "
+                         "0 = default 1024)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="default per-query deadline (queries may carry "
+                         "their own deadline_ms)")
+    ap.add_argument("--breaker-open-after", type=int, default=0,
+                    help="per-lane circuit breaker: consecutive unhealthy "
+                         "chunks before opening (0 = default policy)")
+    ap.add_argument("--chaos-lane-fault", action="store_true",
+                    help="chaos drill: poison one lane after the first "
+                         "batch, assert degraded answers + breaker "
+                         "recovery (summary under 'chaos' in --out)")
     ap.add_argument("--queries", default="",
                     help="JSON file of query specs (see module docstring)")
     ap.add_argument("--demo", type=int, default=0,
@@ -200,7 +343,9 @@ def main():
         from ..runtime.faultinject import FaultPlan
         fault_plan = FaultPlan.from_json(args.fault_plan)
     g = engine_lib.make_workload(args.workload).graph
-    queries = (_load_queries(args.workload, args.queries) if args.queries
+    # queries are parsed and domain-validated BEFORE any pool/chain work
+    queries = (_load_queries(args.workload, args.queries, g)
+               if args.queries
                else _demo_queries(args.workload, g, args.demo, args.seed))
     policy = FreshnessPolicy(max_rhat=args.rhat,
                              min_ess_per_site=args.min_ess,
@@ -214,11 +359,16 @@ def main():
                           policy=policy, seed=args.seed,
                           supervise=args.supervise, ckpt_dir=args.ckpt_dir,
                           outer_steps=args.outer_steps,
-                          fault_plan=fault_plan)
+                          fault_plan=fault_plan,
+                          max_pending=args.max_pending,
+                          deadline_ms=args.deadline_ms,
+                          breaker_open_after=args.breaker_open_after,
+                          chaos_lane_fault=args.chaos_lane_fault)
     rec.close()
     print(f"[serve] {res['n_queries']} queries on {args.workload} "
           f"({args.engine}/{args.backend}): "
           f"fresh={res['fresh_fraction']:.2f} "
+          f"statuses={res['status_counts']} "
           f"{res['queries_per_sec']:.1f} q/s "
           f"traces={res['compiled_traces']} "
           f"resident_sweeps={res['resident_sweeps']}", flush=True)

@@ -67,6 +67,9 @@ class NullRecorder:
     def gauge(self, name: str, value: float, **labels):
         pass
 
+    def histogram(self, name: str, value: float, **labels):
+        pass
+
     def register_engine(self, eng, *, workload: str = "",
                         chains: int = 0) -> Dict[str, str]:
         return {"engine": getattr(eng, "name", ""),
@@ -157,6 +160,9 @@ class Recorder(NullRecorder):
 
     def gauge(self, name: str, value: float, **labels):
         self.metrics.gauge(name, value, **labels)
+
+    def histogram(self, name: str, value: float, **labels):
+        self.metrics.histogram(name, value, **labels)
 
     def register_engine(self, eng, *, workload: str = "",
                         chains: int = 0) -> Dict[str, str]:

@@ -29,10 +29,11 @@ with everything the bare launcher loop lacks:
     the smaller mesh — global array shapes are mesh-independent, and the
     few per-data-shard leaves (PRNG keys, adaptive counters) are re-binned
     by :func:`reshard_dp`;
-  * **heartbeat + step watchdog + incident log**: liveness for external
-    monitors, straggler counters, and one JSON line per incident
-    (restart / rollback / retune / degrade / fault) for post-mortems and
-    the CI chaos smoke.
+  * **heartbeat + step watchdog + incident events**: liveness for external
+    monitors, straggler counters, and one structured event per incident
+    (restart / rollback / retune / degrade / fault) through the active
+    recorder's ``events.jsonl`` stream for post-mortems and the CI chaos
+    smoke.
 
 Fault injection (``runtime/faultinject.py``) plugs in as a scripted
 :class:`FaultPlan`, making every recovery path above deterministically
@@ -90,7 +91,6 @@ class SupervisorConfig:
     retune: bool = True               # try autotune_lambda before degrading
     retune_target: tuple = (0.5, 0.9)
     heartbeat: str = ""               # liveness file path (optional)
-    incident_log: str = ""            # default: <ckpt_dir>/incidents.jsonl
     workload: str = ""                # metric/trace label only
 
 
@@ -124,13 +124,21 @@ class SupervisedRun:
                  config: SupervisorConfig,
                  fault_plan: Optional[FaultPlan] = None, *,
                  sleep_fn: Callable[[float], None] = time.sleep,
-                 on_step: Optional[Callable[..., Any]] = None):
+                 on_step: Optional[Callable[..., Any]] = None,
+                 on_rollback: Optional[Callable[..., Any]] = None):
         self.cfg = config
         # ``on_step(step, bundle, telemetry, engine)`` fires after every
         # COMMITTED outer step (health-checked, checkpointed) — the serving
         # layer publishes pool snapshots from it; return False to stop the
         # run early (the serving front's drain path)
         self._on_step = on_step
+        # ``on_rollback(step, bundle, telemetry, engine)`` fires after any
+        # recovery that REWINDS the published lineage (rollback or restart
+        # restore): downstream consumers of on_step snapshots must fence
+        # anything derived from the now-discarded steps (the serving pool
+        # invalidates lanes forked from them) before the restored bundle
+        # is re-published
+        self._on_rollback = on_rollback
         self.make_engine = make_engine
         self.engine_name = engine_name
         self.plan = fault_plan
@@ -148,9 +156,6 @@ class SupervisedRun:
         self._watchdog = StepWatchdog()
         self._heartbeat = (Heartbeat(config.heartbeat, interval_s=0.0)
                            if config.heartbeat else None)
-        self._incident_path = config.incident_log or (
-            os.path.join(config.ckpt_dir, "incidents.jsonl")
-            if config.ckpt_dir else "")
         self._labels = get_recorder().register_engine(
             self.engine, workload=config.workload, chains=config.chains)
 
@@ -162,16 +167,9 @@ class SupervisedRun:
         print(f"[supervisor] {kind}: "
               f"{json.dumps({k: v for k, v in info.items()})}", flush=True)
         # unified event stream: trace instant + events_total counter +
-        # events.jsonl line through the active recorder ...
+        # events.jsonl line through the active recorder (the legacy
+        # incidents.jsonl shim is gone — consumers read events.jsonl)
         get_recorder().event(kind, **info)
-        # ... plus a one-release shim keeping the old incidents.jsonl path
-        # (the CI chaos smoke and external post-mortem scripts parse it)
-        if self._incident_path:
-            parent = os.path.dirname(self._incident_path)
-            if parent:
-                os.makedirs(parent, exist_ok=True)
-            with open(self._incident_path, "a") as f:
-                f.write(json.dumps(rec) + "\n")
 
     # -- bundle lifecycle ---------------------------------------------------
 
@@ -364,6 +362,8 @@ class SupervisedRun:
                         self._escalate()
                     with rec.span("rollback_recover", **self._labels):
                         bundle, tel, step = self._recover("rollback")
+                    if self._on_rollback is not None:
+                        self._on_rollback(step, bundle, tel, self.engine)
                     rec.snapshot()
                     continue
                 bundle, tel = new_bundle, new_tel
@@ -407,6 +407,8 @@ class SupervisedRun:
                                       **self.engine.params)
                 with rec.span("restart_recover", **self._labels):
                     bundle, tel, step = self._recover("restart")
+                if self._on_rollback is not None:
+                    self._on_rollback(step, bundle, tel, self.engine)
                 rec.snapshot()
         ckpt.wait_pending()
         return RunResult(

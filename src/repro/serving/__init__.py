@@ -5,16 +5,26 @@ chains resident on large graphical models and amortize their sweeps across
 many concurrent queries — this package is that serving surface:
 
   * :mod:`.query` — the :class:`Query` / :class:`Answer` request types
-    (per-request evidence, marginal or MAP, freshness + staleness back);
+    (per-request evidence, marginal or MAP, deadlines/priorities in,
+    freshness + staleness + degradation rung back);
   * :mod:`.pool` — :class:`ChainPool`, the warm pool: one Engine + ONE
     compiled sweep chunk per workload, evidence clamping as data (no
     recompile between clamped/unclamped requests), telemetry-gated
-    freshness, non-perturbing snapshot reads.
+    freshness, non-perturbing snapshot reads;
+  * :mod:`.resilience` — the serving-resilience policies: bounded
+    admission control, per-lane circuit breakers over the committed-chunk
+    health guards, the graceful-degradation ladder bounds, and the
+    supervised background driver.
 
 The request front is ``repro.launch.serve`` (batched submission, workload
 routing, SupervisedRun-wrapped drivers for crash-resume).
 """
 from .query import Query, Answer
 from .pool import ChainPool, PoolWorkload
+from .resilience import (AdmissionController, AdmissionPolicy,
+                         BreakerPolicy, CircuitBreaker, DegradePolicy,
+                         SupervisedDriver)
 
-__all__ = ["Query", "Answer", "ChainPool", "PoolWorkload"]
+__all__ = ["Query", "Answer", "ChainPool", "PoolWorkload",
+           "AdmissionController", "AdmissionPolicy", "BreakerPolicy",
+           "CircuitBreaker", "DegradePolicy", "SupervisedDriver"]

@@ -18,20 +18,36 @@ invariants:
     (jnp/pallas sweeps do not donate their inputs; the resident lane's
     trajectory is bit-identical with or without serving, asserted in
     tests).
-  * **Freshness-gated answers.**  Every answer passes the
-    :class:`~repro.diagnostics.freshness.FreshnessPolicy` gate over the
-    lane's UNOBSERVED sites before it is served; a lane that cannot get
-    fresh within the query's sweep budget refuses (``fresh=False``,
-    ``marginals=None``) rather than serving a biased estimate.
-  * **Conditioned lanes fork warm.**  A new evidence set clamps the
-    resident lane's latest snapshot (:meth:`Engine.clamp` — observed
-    coordinates overwritten, MIN-Gibbs/DoubleMIN energy caches re-drawn)
-    and folds a signature-derived tag into the chain keys so lanes draw
-    independent streams; the unobserved coordinates start from the warm
-    resident configuration instead of a cold init.
+  * **Every query gets a structured answer.**  ``submit`` runs through
+    bounded admission (overload sheds lowest-priority queries with
+    ``status='shed'``), honors per-query deadlines (past the deadline the
+    pool stops sweeping for freshness and degrades), and walks a
+    graceful-degradation ladder — fresh snapshot → bounded-staleness
+    snapshot → exact conditional enumeration (small components) →
+    structured refusal — recording the rung on ``Answer.source``.  Never
+    an unhandled exception or a hang.
+  * **Per-lane circuit breakers.**  Each lane's committed-chunk health
+    (sticky ``bad_state`` + windowed acceptance, read at the freshness
+    gate's existing host-sync boundary — zero new syncs on the sweep
+    path) feeds a closed → open → half-open breaker
+    (:mod:`.resilience`).  An open breaker quarantines the lane — the
+    last healthy snapshot keeps serving stale answers, the degenerate
+    state is never advanced or served — until a half-open probe chunk
+    proves recovery.
+  * **Conditioned lanes fork warm, behind an epoch fence.**  A new
+    evidence set clamps the resident lane's latest snapshot
+    (:meth:`Engine.clamp`) and folds a signature-derived tag into the
+    chain keys so lanes draw independent streams.  Lanes remember the
+    workload epoch they forked at; :meth:`invalidate` (called by the
+    supervised owner on rollback) bumps the epoch so every lane forked
+    from since-discarded chunks is atomically dropped and re-forked from
+    the restored snapshot — no answer is ever computed from a rolled-back
+    ancestor.
 
 Drive the pool three ways: synchronously (:meth:`advance`), on the
-background daemon driver (:meth:`start`/:meth:`stop`), or externally by an
+supervised background driver (:meth:`start`/:meth:`stop` — a
+:class:`~.resilience.SupervisedDriver` with watchdog heartbeat and
+budgeted restarts, not a silently-dying daemon), or externally by an
 owner loop that pushes snapshots via :meth:`publish` — the supervised
 serving front (``launch/serve.py``) does the latter so resident chains get
 checkpoint crash-resume from :class:`~repro.runtime.supervisor.
@@ -50,9 +66,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import engine as engine_lib
+from ..diagnostics.exact import exact_conditional_marginals
 from ..diagnostics.freshness import FreshnessPolicy, freshness_report
+from ..diagnostics.telemetry import clear_health
 from ..obs import get_recorder
 from .query import Query, Answer
+from .resilience import (AdmissionController, AdmissionPolicy, BreakerPolicy,
+                         CircuitBreaker, DegradePolicy, SupervisedDriver)
 
 __all__ = ["ChainPool", "PoolWorkload"]
 
@@ -72,13 +92,25 @@ class _Snapshot(NamedTuple):
 class _Lane:
     """One (workload, evidence-signature) chain group."""
 
-    def __init__(self, signature: Signature, evidence, site_mask, snap):
+    def __init__(self, signature: Signature, evidence, site_mask, snap, *,
+                 breaker: CircuitBreaker, fork_epoch: int = 0):
         self.signature = signature
         self.evidence = evidence          # (ev_mask, ev_vals) device arrays
         self.site_mask = site_mask        # (n,) bool, True = unobserved
         self.snap: _Snapshot = snap
         self.sweeps = snap.sweeps         # sweeps STARTED (>= snap.sweeps)
         self.lock = threading.Lock()
+        self.breaker = breaker
+        self.fork_epoch = fork_epoch      # workload epoch at fork time
+        self.last_good: Optional[_Snapshot] = None  # last healthy snapshot
+        self.quarantined = False          # open breaker: serve last_good
+
+
+def _lane_tag(signature: Signature) -> str:
+    """Bounded-cardinality lane label for metrics/events."""
+    if signature == ():
+        return "resident"
+    return f"{zlib.crc32(repr(signature).encode()):08x}"
 
 
 def _fold_keys(state, tag: int):
@@ -108,6 +140,13 @@ class PoolWorkload:
         self.seed = seed
         self.lanes: "collections.OrderedDict[Signature, _Lane]" = \
             collections.OrderedDict()
+        # snapshot-epoch fence: bumped by invalidate() on a supervised
+        # rollback; lanes forked at an older epoch are dropped, not served
+        self.epoch = 0
+        self.fence_pending = False
+        # per-signature cache of exact conditional marginals (the ladder's
+        # enumeration rung; computing them is pure host work)
+        self.exact_cache: Dict[Signature, np.ndarray] = {}
         # standard metric/trace label set for this workload's series
         self.labels = get_recorder().register_engine(
             eng, workload=name, chains=int(resident.snap.marg.shape[0]))
@@ -119,16 +158,28 @@ def _zero_evidence(n: int):
 
 class ChainPool:
     """The warm pool: register workloads, advance their chains, answer
-    batched queries (see the module docstring for the design)."""
+    batched queries (see the module docstring for the design).
+
+    ``admission``/``breaker``/``degrade`` set the resilience policies
+    (:mod:`.resilience`); ``clock`` is the monotonic time source every
+    deadline/cooldown decision reads — injectable so tests never sleep.
+    """
 
     def __init__(self, *, policy: Optional[FreshnessPolicy] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 admission: Optional[AdmissionPolicy] = None,
+                 breaker: Optional[BreakerPolicy] = None,
+                 degrade: Optional[DegradePolicy] = None,
+                 clock=time.monotonic):
         self.policy = policy or FreshnessPolicy()
         self.seed = seed
+        self.clock = clock
+        self.admission = AdmissionController(admission or AdmissionPolicy())
+        self.breaker_policy = breaker or BreakerPolicy()
+        self.degrade = degrade or DegradePolicy()
         self._workloads: Dict[str, PoolWorkload] = {}
         self._lock = threading.Lock()
-        self._driver: Optional[threading.Thread] = None
-        self._stop = threading.Event()
+        self.driver: Optional[SupervisedDriver] = None
 
     # -- registration -------------------------------------------------------
 
@@ -163,7 +214,8 @@ class ChainPool:
         snap = _Snapshot(st=st, tel=tel, marg=marg,
                          count=jnp.float32(0.0), sweeps=0)
         resident = _Lane((), _zero_evidence(graph.n),
-                         np.ones((graph.n,), bool), snap)
+                         np.ones((graph.n,), bool), snap,
+                         breaker=self._new_breaker())
         w = PoolWorkload(name, eng, _make_chunk(eng, sweeps_per_chunk),
                          resident, policy=policy or self.policy,
                          sweeps_per_chunk=sweeps_per_chunk,
@@ -171,6 +223,9 @@ class ChainPool:
         with self._lock:
             self._workloads[name] = w
         return w
+
+    def _new_breaker(self) -> CircuitBreaker:
+        return CircuitBreaker(self.breaker_policy, clock=self.clock)
 
     def workload(self, name: str) -> PoolWorkload:
         try:
@@ -197,14 +252,32 @@ class ChainPool:
 
     # -- lanes --------------------------------------------------------------
 
+    def _fork_snap(self, w: PoolWorkload, signature: Signature,
+                   ev) -> _Snapshot:
+        """Fork a conditioned snapshot warm from the resident lane: clamp
+        + cache refresh + signature-tagged independent key streams."""
+        tag = zlib.crc32(repr(signature).encode())
+        fork_key = jax.random.fold_in(jax.random.PRNGKey(w.seed), tag)
+        st = w.engine.clamp(fork_key, w.resident.snap.st, ev)
+        st = _fold_keys(st, tag & 0x7FFFFFFF)
+        tel = w.engine.init_telemetry(st)
+        return _Snapshot(st=st, tel=tel,
+                         marg=jnp.zeros_like(w.resident.snap.marg),
+                         count=jnp.float32(0.0), sweeps=0)
+
     def _lane_for(self, w: PoolWorkload, signature: Signature) -> _Lane:
         if signature == ():
             return w.resident
         with self._lock:
             lane = w.lanes.get(signature)
-            if lane is not None:
+            if lane is not None and lane.fork_epoch == w.epoch:
                 w.lanes.move_to_end(signature)
                 return lane
+            if lane is not None:
+                # forked before the last rollback fence: its ancestor
+                # chunks were discarded — drop and re-fork from the
+                # restored resident snapshot
+                del w.lanes[signature]
             g = w.engine.graph
             sites = np.asarray([s for s, _ in signature], np.int64)
             vals = np.asarray([v for _, v in signature], np.int64)
@@ -220,21 +293,12 @@ class ChainPool:
             ev_vals = np.zeros((g.n,), np.int32)
             ev_vals[sites] = vals
             ev = (jnp.asarray(mask), jnp.asarray(ev_vals))
-            # fork warm from the resident snapshot: clamp + cache refresh
-            # + signature-tagged independent key streams
             rec = get_recorder()
             with rec.span("lane_fork", n_evidence=len(signature),
                           **w.labels):
-                tag = zlib.crc32(repr(signature).encode())
-                fork_key = jax.random.fold_in(
-                    jax.random.PRNGKey(w.seed), tag)
-                st = w.engine.clamp(fork_key, w.resident.snap.st, ev)
-                st = _fold_keys(st, tag & 0x7FFFFFFF)
-                tel = w.engine.init_telemetry(st)
-            snap = _Snapshot(
-                st=st, tel=tel, marg=jnp.zeros_like(w.resident.snap.marg),
-                count=jnp.float32(0.0), sweeps=0)
-            lane = _Lane(signature, ev, mask == 0.0, snap)
+                snap = self._fork_snap(w, signature, ev)
+            lane = _Lane(signature, ev, mask == 0.0, snap,
+                         breaker=self._new_breaker(), fork_epoch=w.epoch)
             w.lanes[signature] = lane
             while len(w.lanes) > w.max_conditioned:   # LRU eviction
                 w.lanes.popitem(last=False)
@@ -269,6 +333,26 @@ class ChainPool:
             for lane in [w.resident, *list(w.lanes.values())]:
                 self._advance_lane(w, lane, chunks)
 
+    # -- epoch fence (rollback integration) ---------------------------------
+
+    def invalidate(self, name: str):
+        """Fence the workload's snapshot lineage: a supervised owner calls
+        this when it rolls back, BEFORE publishing the restored snapshot.
+        Bumps the epoch and drops every conditioned lane (they forked from
+        since-discarded chunks); the fence stays pending until the next
+        :meth:`publish`, which bumps again so lanes forked in the window
+        between rollback and restore are also invalidated."""
+        w = self.workload(name)
+        with self._lock:
+            w.epoch += 1
+            w.fence_pending = True
+            dropped = len(w.lanes)
+            w.lanes.clear()
+        rec = get_recorder()
+        rec.event("epoch_fence", workload=name, epoch=w.epoch,
+                  dropped_lanes=dropped)
+        rec.gauge("pool_lanes", 1, **w.labels)
+
     def publish(self, name: str, st, tel, marg, count, sweeps: int):
         """External-driver path: an owner loop (the supervised serving
         front) pushes the resident lane's new snapshot after each of its
@@ -279,39 +363,78 @@ class ChainPool:
             lane.sweeps = int(sweeps)
             lane.snap = _Snapshot(st=st, tel=tel, marg=marg, count=count,
                                   sweeps=int(sweeps))
+        if w.fence_pending:
+            # the owner published the restored snapshot: close the fence
+            # (second epoch bump catches lanes forked inside the window)
+            # and reset the resident breaker — pre-rollback verdicts
+            # described a state that no longer exists
+            with self._lock:
+                w.epoch += 1
+                w.fence_pending = False
+                w.lanes.clear()
+            lane.breaker = self._new_breaker()
+            lane.quarantined = False
+            lane.last_good = None
 
     # -- background driver --------------------------------------------------
 
-    def start(self, interval_s: float = 0.0):
-        """Start the daemon driver: round-robin one chunk per lane per
-        round, ``interval_s`` sleep between rounds."""
-        if self._driver is not None:
+    def start(self, interval_s: float = 0.0, *, budget=None, backoff=None):
+        """Start the supervised driver: round-robin one chunk per healthy
+        lane per round, ``interval_s`` sleep between rounds.  The drive
+        loop runs under :class:`~.resilience.SupervisedDriver` — a crash
+        is a structured event + budgeted restart, not a silent death."""
+        if self.driver is not None:
             raise RuntimeError("driver already running")
-        self._stop.clear()
 
-        def drive():
-            while not self._stop.is_set():
+        def body(stop: threading.Event):
+            while not stop.is_set():
+                self.driver.beat()
                 for nm in list(self._workloads):
                     w = self._workloads.get(nm)
                     if w is None:
                         continue
                     for lane in [w.resident, *list(w.lanes.values())]:
-                        if self._stop.is_set():
+                        if stop.is_set():
                             return
+                        if lane.quarantined:
+                            continue    # open breaker: probe path only
                         self._advance_lane(w, lane, 1)
+                self.driver.note_progress()
                 if interval_s:
-                    self._stop.wait(interval_s)
+                    stop.wait(interval_s)
 
-        self._driver = threading.Thread(target=drive, name="chainpool-driver",
-                                        daemon=True)
-        self._driver.start()
+        self.driver = SupervisedDriver(body, budget=budget, backoff=backoff,
+                                       clock=self.clock,
+                                       recorder=get_recorder())
+        self.driver.start()
 
     def stop(self):
-        if self._driver is None:
+        if self.driver is None:
             return
-        self._stop.set()
-        self._driver.join()
-        self._driver = None
+        self.driver.stop()
+        self.driver = None
+
+    # -- chaos hook ---------------------------------------------------------
+
+    def inject_lane_fault(self, name: str, signature: Signature = (), *,
+                          target: str = "cache", mode: str = "nan",
+                          seed: int = 0):
+        """Corrupt a lane's published snapshot state in place (tests/CI
+        chaos drills).  Host round-trip at a quiescent boundary — the
+        in-graph health guard latches on the next committed chunk and the
+        lane's breaker takes it from there."""
+        from ..runtime.faultinject import Fault, inject_state_fault
+        w = self.workload(name)
+        lane = w.resident if signature == () \
+            else w.lanes[tuple(signature)]
+        fault = Fault(step=0, kind="nan", target=target, mode=mode)
+        rng = np.random.default_rng(seed)
+        with lane.lock:
+            st = inject_state_fault(lane.snap.st, fault, rng)
+            lane.snap = lane.snap._replace(st=st)
+        get_recorder().event("fault", target=target,
+                             lane=_lane_tag(tuple(signature)),
+                             injected="lane_snapshot", **w.labels)
 
     # -- answering ----------------------------------------------------------
 
@@ -320,61 +443,250 @@ class ChainPool:
                serve_stale: bool = False) -> List[Answer]:
         """Answer a batch of queries; returns answers in request order.
 
-        Queries are grouped by (workload, evidence signature) so one lane
-        read serves the whole group.  A lane that fails the freshness gate
-        is advanced — at most ``max_extra_sweeps`` extra sweeps (default:
-        64 chunks' worth) — and refused if still stale, unless
-        ``serve_stale=True`` (estimate returned, ``fresh=False`` kept)."""
+        The batch first passes admission control (overload sheds
+        lowest-priority queries: ``status='shed'``, no work done).
+        Admitted queries are grouped by (workload, evidence signature) so
+        one lane read serves the whole group; each group takes its lane's
+        committed-chunk health verdict, feeds the circuit breaker, then
+        walks the degradation ladder (module docstring).  A healthy lane
+        that fails the freshness gate is advanced — at most
+        ``max_extra_sweeps`` extra sweeps (default: 64 chunks' worth) and
+        never past the group's earliest deadline.  ``serve_stale=True``
+        lets the stale rung serve below ``min_samples`` (legacy flag).
+
+        Malformed queries (unknown workload, out-of-domain evidence)
+        raise — caller bugs, not serving failures; any *other* exception
+        is converted to ``status='error'`` answers for its group."""
         rec = get_recorder()
         t_submit = rec.now_us()
+        t0 = self.clock()
         answers: List[Optional[Answer]] = [None] * len(queries)
-        groups: Dict[Tuple[str, Signature], List[int]] = {}
-        for idx, q in enumerate(queries):
-            groups.setdefault((q.workload, q.signature), []).append(idx)
-        for (wname, sig), idxs in groups.items():
-            w = self.workload(wname)
-            # groups run sequentially: time since submit is this group's
-            # queue wait (an explicit-timestamp span, no extra sync)
-            rec.complete("queue_wait", t_submit,
-                         rec.now_us() - t_submit, n_queries=len(idxs),
-                         **w.labels)
-            with rec.span("query", n_queries=len(idxs),
-                          conditioned=bool(sig), **w.labels):
-                lane = self._lane_for(w, sig)
-                budget = (64 * w.sweeps_per_chunk
-                          if max_extra_sweeps is None else max_extra_sweeps)
-                spent = 0
+        with rec.span("admission", n_queries=len(queries)):
+            admitted, shed = self.admission.admit(
+                [q.priority for q in queries])
+        for i in shed:
+            q = queries[i]
+            rec.count("shed_total", 1, workload=q.workload)
+            answers[i] = Answer(
+                query=q, fresh=False, staleness_sweeps=0, sweeps=0,
+                status="shed",
+                report={"fresh": False, "samples": 0,
+                        "reason": "shed: admission queue full (max_pending="
+                                  f"{self.admission.policy.max_pending})"})
+        if not admitted:
+            return answers    # type: ignore[return-value]
+        try:
+            groups: Dict[Tuple[str, Signature], List[int]] = {}
+            for idx in admitted:
+                q = queries[idx]
+                groups.setdefault((q.workload, q.signature), []).append(idx)
+            for (wname, sig), idxs in groups.items():
+                w = self.workload(wname)
+                # groups run sequentially: time since submit is this
+                # group's queue wait (explicit-timestamp span, no sync)
+                wait_us = rec.now_us() - t_submit
+                rec.complete("queue_wait", t_submit, wait_us,
+                             n_queries=len(idxs), **w.labels)
+                rec.histogram("queue_wait_seconds", wait_us / 1e6,
+                              lane=_lane_tag(sig), **w.labels)
+                try:
+                    self._serve_group(w, sig, idxs, queries, answers,
+                                      t0=t0, rec=rec,
+                                      max_extra_sweeps=max_extra_sweeps,
+                                      serve_stale=serve_stale)
+                except (KeyError, ValueError):
+                    raise             # malformed request: caller contract
+                except Exception as e:  # noqa: BLE001 — answer, don't die
+                    rec.event("serve_error", error=repr(e), **w.labels)
+                    for idx in idxs:
+                        answers[idx] = Answer(
+                            query=queries[idx], fresh=False,
+                            staleness_sweeps=0, sweeps=0, status="error",
+                            report={"fresh": False,
+                                    "reason": f"error: {e!r}"})
+                dur_us = rec.now_us() - t_submit
+                for _ in idxs:
+                    rec.histogram("serving_latency_seconds", dur_us / 1e6,
+                                  lane=_lane_tag(sig), **w.labels)
+        finally:
+            self.admission.release(len(admitted))
+        return answers    # type: ignore[return-value]
+
+    # -- the per-group serve: health, breaker, freshness, ladder ------------
+
+    def _lane_report(self, w: PoolWorkload, lane: _Lane, snap: _Snapshot):
+        """Freshness + health verdict of one snapshot: THE host-sync
+        boundary (already existed as the freshness gate); the breaker's
+        committed-chunk verdicts ride the same read."""
+        return freshness_report(snap.tel, w.policy,
+                                site_mask=lane.site_mask,
+                                include_health=True,
+                                exact_accept=w.engine.exact_accept)
+
+    def _feed_breaker(self, w: PoolWorkload, lane: _Lane, healthy: bool,
+                      rec, tag: str):
+        change = lane.breaker.record(healthy)
+        if change == "open":
+            lane.quarantined = True
+            rec.event("breaker_open", lane=tag,
+                      strikes=lane.breaker.strikes, **w.labels)
+        elif change == "close":
+            lane.quarantined = False
+            rec.event("breaker_close", lane=tag, **w.labels)
+        rec.gauge("breaker_state", lane.breaker.gauge, lane=tag, **w.labels)
+        return change
+
+    def _probe(self, w: PoolWorkload, lane: _Lane, rec, tag: str) -> bool:
+        """Half-open probe: rewind to the last healthy snapshot (or
+        re-fork a conditioned lane warm from the resident), advance ONE
+        chunk, verdict.  Returns True when the breaker re-closed."""
+        with rec.span("breaker_probe", lane=tag, **w.labels):
+            with lane.lock:
+                src = lane.last_good
+                if src is not None:
+                    lane.snap = src._replace(tel=clear_health(src.tel))
+                    lane.sweeps = src.sweeps
+                elif lane.signature:
+                    lane.snap = self._fork_snap(w, lane.signature,
+                                                lane.evidence)
+                    lane.sweeps = 0
+                # else: resident with no healthy history — advance in
+                # place (a supervised owner may have published a repaired
+                # snapshot since the breaker opened)
+            self._advance_lane(w, lane, 1)
+            snap = lane.snap
+            rep = self._lane_report(w, lane, snap)
+            healthy = not lane.breaker.unhealthy(rep)
+            self._feed_breaker(w, lane, healthy, rec, tag)
+            if healthy:
+                lane.last_good = snap
+            return healthy
+
+    def _serve_group(self, w: PoolWorkload, sig: Signature,
+                     idxs: List[int], queries: Sequence[Query],
+                     answers: List[Optional[Answer]], *, t0: float, rec,
+                     max_extra_sweeps: Optional[int], serve_stale: bool):
+        lane = self._lane_for(w, sig)
+        tag = _lane_tag(sig)
+        budget = (64 * w.sweeps_per_chunk
+                  if max_extra_sweeps is None else max_extra_sweeps)
+        dls = [q.deadline_ms if q.deadline_ms is not None
+               else self.admission.policy.default_deadline_ms
+               for q in (queries[i] for i in idxs)]
+        dls = [d for d in dls if d is not None]
+        deadline_at = (t0 + min(dls) / 1e3) if dls else None
+        with rec.span("query", n_queries=len(idxs),
+                      conditioned=bool(sig), **w.labels):
+            healthy = False
+            snap = rep = None
+            spent = 0
+            deadline_missed = False
+            if lane.breaker.state == CircuitBreaker.OPEN \
+                    and lane.breaker.allow_probe():
+                self._probe(w, lane, rec, tag)
+            if lane.breaker.state != CircuitBreaker.OPEN:
                 with rec.span("freshness_sweeps", **w.labels):
                     while True:
                         snap = lane.snap
-                        rep = freshness_report(snap.tel, w.policy,
-                                               site_mask=lane.site_mask)
-                        if (rep["fresh"]
-                                or spent + w.sweeps_per_chunk > budget):
+                        rep = self._lane_report(w, lane, snap)
+                        healthy = not lane.breaker.unhealthy(rep)
+                        self._feed_breaker(w, lane, healthy, rec, tag)
+                        if healthy:
+                            lane.last_good = snap
+                        if not healthy or rep["fresh"]:
+                            break
+                        if spent + w.sweeps_per_chunk > budget:
+                            break
+                        if deadline_at is not None \
+                                and self.clock() >= deadline_at:
+                            deadline_missed = True
                             break
                         self._advance_lane(w, lane, 1)
                         spent += w.sweeps_per_chunk
-                staleness = lane.sweeps - snap.sweeps
-                marg = None
-                if rep["fresh"] or serve_stale:
-                    cnt = max(float(np.asarray(snap.count)), 1.0)
-                    C = snap.marg.shape[0]
-                    marg = (np.asarray(snap.marg, np.float64).sum(0)
-                            / (cnt * C))
-                for idx in idxs:
-                    answers[idx] = _answer(queries[idx], rep, staleness,
-                                           snap.sweeps, marg)
-            rec.count("queries_total", len(idxs),
-                      fresh=bool(rep["fresh"]), **w.labels)
-            rec.count("sweeps_to_fresh_total", spent, **w.labels)
-            rec.count("sweeps_to_fresh_count", 1, **w.labels)
-        return answers    # type: ignore[return-value]
+
+            # -- degradation ladder --------------------------------------
+            if healthy:
+                serve_snap, serve_rep = snap, dict(rep)
+            else:
+                # quarantined (or mid-strike unhealthy): the degenerate
+                # snapshot is never served — fall back to the last
+                # healthy one (one extra host read, unhealthy path only)
+                serve_snap = lane.last_good
+                serve_rep = (self._lane_report(w, lane, serve_snap)
+                             if serve_snap is not None
+                             else {"fresh": False, "samples": 0,
+                                   "reason": "no healthy snapshot"})
+                serve_rep["quarantined"] = True
+            serve_rep["breaker"] = lane.breaker.state
+            if deadline_missed:
+                serve_rep["deadline_missed"] = True
+                rec.count("deadline_miss_total", len(idxs), **w.labels)
+
+            staleness = (lane.sweeps - serve_snap.sweeps
+                         if serve_snap is not None else 0)
+            marg = source = None
+            status = "ok"
+            fresh_out = False
+            if healthy and serve_rep["fresh"]:
+                source, fresh_out = "fresh", True
+                marg = _snap_marginals(serve_snap)
+            elif (serve_snap is not None
+                    and float(np.asarray(serve_snap.count)) > 0
+                    and (serve_rep["samples"] >= w.policy.min_samples
+                         or serve_stale)
+                    and staleness <= self.degrade.max_stale_sweeps):
+                source = "stale"
+                marg = _snap_marginals(serve_snap)
+            else:
+                try:
+                    with rec.span("degrade", rung="exact", lane=tag,
+                                  **w.labels):
+                        marg = self._exact_marginals(w, sig)
+                    source = "exact"
+                except ValueError as e:
+                    status = "refused"
+                    serve_rep.setdefault(
+                        "reason", "every ladder rung exhausted")
+                    serve_rep["exact_refused"] = str(e)
+            if source in ("stale", "exact"):
+                rec.count("degraded_total", len(idxs), source=source,
+                          **w.labels)
+            for idx in idxs:
+                answers[idx] = _answer(queries[idx], serve_rep, staleness,
+                                       serve_snap.sweeps if serve_snap
+                                       else 0, marg,
+                                       status=status, source=source,
+                                       fresh=fresh_out)
+        rec.count("queries_total", len(idxs), fresh=fresh_out, **w.labels)
+        rec.count("sweeps_to_fresh_total", spent, **w.labels)
+        rec.count("sweeps_to_fresh_count", 1, **w.labels)
+
+    def _exact_marginals(self, w: PoolWorkload, sig: Signature
+                         ) -> np.ndarray:
+        """The ladder's enumeration rung, cached per evidence signature
+        (pure host work; raises ValueError on oversized components)."""
+        got = w.exact_cache.get(sig)
+        if got is None:
+            got = exact_conditional_marginals(
+                w.engine.graph,
+                [s for s, _ in sig], [v for _, v in sig],
+                max_states=self.degrade.exact_max_states)
+            w.exact_cache[sig] = got
+        return got
+
+
+def _snap_marginals(snap: _Snapshot) -> np.ndarray:
+    cnt = max(float(np.asarray(snap.count)), 1.0)
+    C = snap.marg.shape[0]
+    return np.asarray(snap.marg, np.float64).sum(0) / (cnt * C)
 
 
 def _answer(q: Query, rep, staleness: int, sweeps: int,
-            marg: Optional[np.ndarray]) -> Answer:
-    ans = Answer(query=q, fresh=bool(rep["fresh"]), report=dict(rep),
-                 staleness_sweeps=staleness, sweeps=sweeps)
+            marg: Optional[np.ndarray], *, status: str = "ok",
+            source: Optional[str] = None, fresh: bool = False) -> Answer:
+    ans = Answer(query=q, fresh=fresh, report=dict(rep),
+                 staleness_sweeps=staleness, sweeps=sweeps,
+                 status=status, source=source)
     if marg is None:
         return ans
     sel = marg if q.sites is None else marg[np.asarray(q.sites, np.int64)]

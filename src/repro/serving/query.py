@@ -28,17 +28,28 @@ class Query:
     queries with the same evidence set share one conditioned lane
     regardless of ordering, so evidence is normalized to a sorted tuple.
     ``kind``: 'marginal' (full (|sites|, D) distributions) or 'map'
-    (argmax values only).
+    (argmax values only).  ``deadline_ms``: answer-by budget measured from
+    submit; past it the pool stops sweeping for freshness and degrades
+    (it never blocks past the deadline to polish an answer).
+    ``priority``: higher sheds later under admission pressure.
     """
     workload: str
     sites: Optional[Tuple[int, ...]] = None
     evidence: Tuple[Tuple[int, int], ...] = ()
     kind: str = "marginal"
+    deadline_ms: Optional[float] = None
+    priority: int = 0
 
     def __post_init__(self):
         if self.kind not in _KINDS:
             raise ValueError(f"kind must be one of {_KINDS}, "
                              f"got {self.kind!r}")
+        if self.deadline_ms is not None:
+            if not float(self.deadline_ms) >= 0.0:
+                raise ValueError(f"deadline_ms must be >= 0, "
+                                 f"got {self.deadline_ms!r}")
+            object.__setattr__(self, "deadline_ms", float(self.deadline_ms))
+        object.__setattr__(self, "priority", int(self.priority))
         ev = tuple(sorted((int(s), int(v)) for s, v in self.evidence))
         if len({s for s, _ in ev}) != len(ev):
             raise ValueError(f"duplicate evidence sites in {ev}")
@@ -59,11 +70,18 @@ class Answer:
     """What the pool returns for one :class:`Query`.
 
     ``fresh`` is the telemetry gate's verdict (``report`` holds the full
-    measurements); a refused answer (``fresh=False`` after the sweep
-    budget) carries ``marginals=None`` — never a silently biased estimate.
+    measurements); a refused answer (``status='refused'``) carries
+    ``marginals=None`` — never a silently biased estimate.
     ``staleness_sweeps`` counts sweeps the serving lane has started since
     the snapshot answering this query was published; ``sweeps`` is the
     lane's total at that snapshot.
+
+    ``status`` is the structural outcome: 'ok' (an estimate, fresh or
+    degraded), 'shed' (admission control dropped it before any work),
+    'refused' (every ladder rung exhausted), or 'error' (an unexpected
+    exception was converted into a structured answer).  ``source`` names
+    the degradation-ladder rung that produced the estimate: 'fresh',
+    'stale', or 'exact' (None when there is no estimate).
     """
     query: Query
     fresh: bool
@@ -72,6 +90,8 @@ class Answer:
     sweeps: int
     marginals: Optional[np.ndarray] = None    # (|sites|, D) float64
     map_values: Optional[np.ndarray] = None   # (|sites|,) int64
+    status: str = "ok"
+    source: Optional[str] = None
 
     def to_dict(self) -> Dict[str, Any]:
         """JSON-safe rendering (the launcher's --out / CI artifact)."""
@@ -89,4 +109,6 @@ class Answer:
             else np.asarray(self.marginals).tolist(),
             "map_values": None if self.map_values is None
             else np.asarray(self.map_values).tolist(),
+            "status": self.status,
+            "source": self.source,
         }

@@ -290,17 +290,15 @@ def test_supervised_trace_and_metrics_golden(tmp_path):
                                                    "rollbacks_total"}
 
 
-def test_events_jsonl_mirrors_incident_log(tmp_path):
-    """The unified events.jsonl carries the same incident stream as the
-    supervisor's legacy incidents.jsonl (one-release shim)."""
+def test_events_jsonl_is_the_incident_stream(tmp_path):
+    """The unified events.jsonl carries the supervisor's full incident
+    stream (the legacy incidents.jsonl shim is gone — nothing writes it)."""
     plan = FaultPlan([Fault(step=2, kind="nan", target="x")])
     res, rec, root = _supervised_with_recorder(tmp_path, plan)
     ev_kinds = [json.loads(l)["kind"] for l in
                 (root / "metrics" / "events.jsonl").read_text().splitlines()]
-    legacy = root / "ckpt" / "incidents.jsonl"
-    legacy_kinds = [json.loads(l)["kind"]
-                    for l in legacy.read_text().splitlines()]
-    assert ev_kinds == legacy_kinds
+    assert not (root / "ckpt" / "incidents.jsonl").exists()
+    assert ev_kinds == [i["kind"] for i in res.incidents]
     assert "fault" in ev_kinds and "health" in ev_kinds
     assert ev_kinds.count("health") == len(
         [i for i in res.incidents if i["kind"] == "health"])

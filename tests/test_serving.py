@@ -168,7 +168,12 @@ def test_freshness_gate_refuses_then_serves():
     q = Query(WL)
     cold = pool.submit([q], max_extra_sweeps=0)[0]
     assert not cold.fresh
-    assert cold.marginals is None                # refusal, not a biased guess
+    # a cold lane no longer refuses outright: the degradation ladder falls
+    # through to exact conditional enumeration (tractable on this workload)
+    assert cold.status == "ok" and cold.source == "exact"
+    exact = exact_conditional_marginals(
+        engine.make_workload(WL).graph, [], [])
+    np.testing.assert_allclose(cold.marginals, exact, atol=1e-12)
     assert cold.report["reason"]
     warm = pool.submit([q], max_extra_sweeps=30_000)[0]
     assert warm.fresh

@@ -185,14 +185,22 @@ def test_reshard_dp_shrink_and_grow():
 
 # -- liveness ----------------------------------------------------------------
 
-def test_heartbeat_and_incident_log_written(tmp_path):
+def test_heartbeat_and_incident_events_recorded(tmp_path):
+    """Incidents flow through the recorder's events.jsonl (the legacy
+    incidents.jsonl shim is gone) and stay in res.incidents."""
+    import json
+
+    from repro.obs import Recorder, using
+
     hb = str(tmp_path / "hb.json")
     plan = FaultPlan([Fault(step=1, kind="preempt")])
-    res = _supervised(tmp_path, "live", plan, heartbeat=hb)
+    rec = Recorder(metrics_dir=str(tmp_path / "metrics"))
+    with using(rec):
+        res = _supervised(tmp_path, "live", plan, heartbeat=hb)
     assert os.path.exists(hb)
-    log = tmp_path / "live" / "incidents.jsonl"
-    assert log.exists()
-    import json
-    kinds = [json.loads(l)["kind"] for l in log.read_text().splitlines()]
+    assert not (tmp_path / "live" / "incidents.jsonl").exists()
+    kinds = [i["kind"] for i in res.incidents]
     assert "fault" in kinds and "restart" in kinds and "restore" in kinds
+    ev = (tmp_path / "metrics" / "events.jsonl").read_text().splitlines()
+    assert [json.loads(l)["kind"] for l in ev] == kinds
     assert res.watchdog["steps"] >= 6
